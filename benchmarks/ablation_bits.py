@@ -1,0 +1,75 @@
+"""Beyond-paper ablation (paper §6 future work, "Ultra-low Bit
+Verification"): at what weight precision does verification-accuracy
+degradation outweigh the bandwidth gain?
+
+Sweeps the verifier over {BF16, W8A8, W4A8}: measures logit fidelity and
+acceptance length L, models the Eq. 13 speedup with the corresponding
+weight-streaming bytes (2 / 1 / 0.5 B per param).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import QuantConfig, SpecConfig
+from repro.data import lm_batches
+from repro.quant import quantize_params
+
+from benchmarks.common import HBM_BW, LatencyModel, get_trained, run_engine, save_json
+
+
+def rows(quick: bool = False):
+    model, params, _ = get_trained("qwen3-sub")
+    cfg = model.cfg
+    scfg = SpecConfig(gamma=5, temperature=0.0)
+    lat = LatencyModel()
+
+    variants = [
+        ("bf16", params, 16),
+        ("w8a8", quantize_params(params, _calib(model, params), QuantConfig()), 8),
+        ("w4a8", quantize_params(params, _calib(model, params),
+                                 QuantConfig(w_bits=4)), 4),
+    ]
+    toks = jnp.asarray(next(lm_batches(4, 64, cfg.vocab_size, seed=3))["tokens"])
+    lf, _ = model.forward(params, toks)
+    p_ref = jax.nn.softmax(lf, -1)
+
+    out = []
+    for name, vp, bits in variants:
+        lq, _ = model.forward(vp, toks)
+        kl = float(jnp.mean(jnp.sum(
+            p_ref * (jnp.log(p_ref + 1e-9) - jax.nn.log_softmax(lq, -1)), -1)))
+        top1 = float(jnp.mean(
+            (jnp.argmax(lf, -1) == jnp.argmax(lq, -1)).astype(jnp.float32)))
+        r = run_engine(model, vp, mode="spec", scfg=scfg, task="gsm8k")
+        # Eq. 11/12 with bits-proportional weight streaming
+        n = lat.cfg.active_param_count()
+        t_w = n * bits / 8 / HBM_BW
+        out.append({
+            "verifier": name,
+            "kl_vs_bf16": round(kl, 6),
+            "top1_agreement": round(top1, 4),
+            "L": round(r["L"], 3),
+            "weight_stream_ms_7b": round(t_w * 1e3, 2),
+            "modeled_speedup": round(
+                lat.speedup(r["L"], 5, verifier_bits=bits), 3),
+        })
+    save_json("ablation_bits.json", out)
+    return out
+
+
+def _calib(model, params):
+    collect = {}
+    toks = jnp.asarray(next(lm_batches(4, 96, model.cfg.vocab_size, seed=1,
+                                       markov_alpha=0.97))["tokens"])
+    model.forward(params, toks, collect=collect)
+    return collect
+
+
+def main():
+    for r in rows():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

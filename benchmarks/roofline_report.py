@@ -1,0 +1,71 @@
+"""Roofline report (deliverable g): reads the dry-run JSONs and emits the
+per-(arch × shape × mesh) table plus the Eq. 11-12 verification-term
+comparison (BF16 vs W8A8 weight streaming) that is the paper's central
+quantitative claim."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.launch.roofline import HBM_BW
+
+from benchmarks.common import RESULTS_DIR, save_json
+
+
+def load_dryrun_rows():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "dryrun_*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        rows.extend(d.get("rows", []))
+    # dedupe (arch, shape, mesh, verifier) keeping the latest
+    seen = {}
+    for r in rows:
+        seen[(r["arch"], r["shape"], r["mesh"], r.get("verifier"))] = r
+    return list(seen.values())
+
+
+def eq11_12_table():
+    """Analytic verify memory term per arch: M·2B vs M·1B over HBM (Eq. 11-12)."""
+    out = []
+    for arch in ["quasar-paper-7b", "stablelm-12b", "codeqwen1.5-7b",
+                 "phi3.5-moe-42b-a6.6b", "moonshot-v1-16b-a3b"]:
+        cfg = get_config(arch)
+        n = cfg.active_param_count()
+        t16 = n * 2 / HBM_BW
+        t8 = n * 1 / HBM_BW
+        out.append({
+            "arch": arch, "active_params_B": round(n / 1e9, 2),
+            "t_verify_mem_bf16_ms": round(t16 * 1e3, 3),
+            "t_verify_mem_w8a8_ms": round(t8 * 1e3, 3),
+            "ratio": round(t16 / t8, 3),
+        })
+    return out
+
+
+def rows(quick: bool = False):
+    dr = load_dryrun_rows()
+    table = [{
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "dominant": r["dominant"],
+        "t_compute_s": r["t_compute_s"], "t_memory_s": r["t_memory_s"],
+        "t_collective_s": r["t_collective_s"],
+        "useful_flops_ratio": r["useful_flops_ratio"],
+        "temp_gb_per_dev": round(r["temp_bytes_per_dev"] / 1e9, 2),
+    } for r in dr]
+    out = {"roofline": table, "eq11_12": eq11_12_table()}
+    save_json("roofline_report.json", out)
+    return out
+
+
+def main():
+    out = rows()
+    print(f"{len(out['roofline'])} dry-run rows")
+    for r in out["eq11_12"]:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

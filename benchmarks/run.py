@@ -1,0 +1,112 @@
+"""Benchmark harness entry point — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV.  ``us_per_call`` is the measured
+CPU wall time of one speculative serve step for that configuration (μs);
+``derived`` is the table's headline metric (modeled TPU speedup, L, KL,
+...).  Full rows land in benchmarks/results/*.json.
+
+``python -m benchmarks.run [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _bench_step_us() -> float:
+    """One speculative serve step, CPU wall μs (jitted, post-warmup)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.config import SpecConfig
+    from repro.core.spec_engine import init_state, make_serve_step
+    from benchmarks.common import get_trained
+
+    model, params, qparams = get_trained("qwen3-sub")
+    scfg = SpecConfig(gamma=5, temperature=0.0)
+    step = jax.jit(make_serve_step(model, scfg))
+    state = init_state(model, 2, 256, jax.random.PRNGKey(0))
+    prompts = jnp.tile(jnp.arange(8, dtype=jnp.int32)[None], (2, 6))
+    P = prompts.shape[1]
+    state["tokens"] = state["tokens"].at[:, :P].set(prompts)
+    state["length"] = jnp.full((2,), P, jnp.int32)
+    state["cache"] = model.prefill(qparams, state["cache"], prompts[:, :-1])
+    state = step(qparams, state)              # warmup/compile
+    jax.block_until_ready(state["tokens"])
+    t0 = time.perf_counter()
+    n = 20
+    for _ in range(n):
+        state = step(qparams, state)
+    jax.block_until_ready(state["tokens"])
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweeps (CI-friendly)")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        ablation_bits,
+        table1_speedup,
+        table2_temperature,
+        table3_sensitivity,
+        table4_accuracy,
+        table5_pruning,
+        roofline_report,
+    )
+
+    step_us = _bench_step_us()
+    lines = []
+
+    t1 = table1_speedup.rows(quick=args.quick)
+    q = [r for r in t1 if r["method"] == "quasar" and r["T"] == 0.0]
+    n = [r for r in t1 if r["method"] == "ngram" and r["T"] == 0.0]
+    avg = lambda rs, k: sum(r[k] for r in rs) / max(len(rs), 1)
+    lines.append(("table1_quasar_T0", step_us,
+                  f"speedup={avg(q, 'modeled_speedup'):.2f}x;L={avg(q, 'L'):.2f}"))
+    lines.append(("table1_ngram_T0", step_us,
+                  f"speedup={avg(n, 'modeled_speedup'):.2f}x;L={avg(n, 'L'):.2f}"))
+
+    t2 = table2_temperature.rows(quick=args.quick)
+    qT = [r for r in t2 if r["method"] == "quasar"]
+    lines.append(("table2_temperature", step_us,
+                  f"quasar_L_T0={qT[0]['L']:.2f};L_T1={qT[-1]['L']:.2f}"))
+
+    t3 = table3_sensitivity.rows(quick=args.quick)
+    best = max((r for r in t3 if r["method"] == "quasar"),
+               key=lambda r: r["modeled_speedup"])
+    lines.append(("table3_sensitivity", step_us,
+                  f"best_gamma={best['gamma']};K={best['K']};speedup={best['modeled_speedup']:.2f}x"))
+
+    t4 = table4_accuracy.rows(quick=args.quick)
+    lines.append(("table4_accuracy", step_us,
+                  f"kl={t4[0]['kl_fp_to_w8a8']:.2e};top1={t4[0]['top1_agreement']:.3f}"))
+
+    t5 = table5_pruning.rows(quick=args.quick)
+    qs = [r for r in t5 if r["method"] == "quasar"][0]
+    p50 = [r for r in t5 if r["method"].startswith("pruned-5")]
+    lines.append(("table5_pruning", step_us,
+                  f"quasar={qs['modeled_speedup']:.2f}x;pruned50_L="
+                  f"{p50[0]['L'] if p50 else 'n/a'}"))
+
+    ab = ablation_bits.rows(quick=args.quick)
+    w4 = [r for r in ab if r["verifier"] == "w4a8"][0]
+    lines.append(("ablation_bits", step_us,
+                  f"w4a8_kl={w4['kl_vs_bf16']:.2e};L={w4['L']:.2f};"
+                  f"speedup={w4['modeled_speedup']:.2f}x"))
+
+    rr = roofline_report.rows(quick=args.quick)
+    lines.append(("roofline", step_us,
+                  f"dryrun_rows={len(rr['roofline'])};"
+                  f"eq12_ratio={rr['eq11_12'][0]['ratio']:.2f}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in lines:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Table 1 / Figure 2: end-to-end speedup + acceptance length across
+five tasks × two models × T ∈ {0, 1} for Vanilla / Ngram(BF16) / Quasar(W8A8).
+
+Measured: L, CPU tokens/s.  Modeled: Eq. 11-13 speedup at paper scale.
+"""
+from __future__ import annotations
+
+from repro.core.config import SpecConfig
+
+from benchmarks.common import (
+    TASKS, LatencyModel, get_trained, run_engine, save_json,
+)
+
+
+def rows(quick: bool = False):
+    lat = LatencyModel()
+    out = []
+    models = ["qwen3-sub"] if quick else ["qwen3-sub", "openpangu-sub"]
+    temps = [0.0] if quick else [0.0, 1.0]
+    tasks = TASKS[:2] if quick else TASKS
+    for mname in models:
+        model, params, qparams = get_trained(mname)
+        for T in temps:
+            scfg = SpecConfig(gamma=5, temperature=T)
+            for task in tasks:
+                van = run_engine(model, params, mode="vanilla", scfg=scfg, task=task)
+                ngr = run_engine(model, params, mode="spec", scfg=scfg, task=task)
+                qsr = run_engine(model, qparams, mode="spec", scfg=scfg, task=task)
+                for method, r, bits in (("vanilla", van, 16),
+                                        ("ngram", ngr, 16),
+                                        ("quasar", qsr, 8)):
+                    if method == "vanilla":
+                        speed = 1.0
+                    else:
+                        speed = lat.speedup(r["L"], scfg.gamma, verifier_bits=bits)
+                    out.append({
+                        "model": mname, "T": T, "task": task, "method": method,
+                        "L": round(r["L"], 3),
+                        "modeled_speedup": round(speed, 3),
+                        "cpu_tok_s": round(r["cpu_tok_s"], 1),
+                        "steps": r["steps"],
+                    })
+    save_json("table1_speedup.json", out)
+    return out
+
+
+def main():
+    for r in rows():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table 2: robustness across sampling temperatures T ∈ [0, 1].
+Ngram (BF16 verify) vs Quasar (W8A8 verify), averaged over tasks."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.config import SpecConfig
+
+from benchmarks.common import TASKS, LatencyModel, get_trained, run_engine, save_json
+
+TEMPS = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0]
+
+
+def rows(quick: bool = False):
+    lat = LatencyModel()
+    model, params, qparams = get_trained("qwen3-sub")
+    temps = [0.0, 1.0] if quick else TEMPS
+    tasks = TASKS[:2] if quick else TASKS[:3]
+    out = []
+    for T in temps:
+        scfg = SpecConfig(gamma=5, temperature=T)
+        for method, p, bits in (("ngram", params, 16), ("quasar", qparams, 8)):
+            Ls = [run_engine(model, p, mode="spec", scfg=scfg, task=t)["L"]
+                  for t in tasks]
+            L = float(np.mean(Ls))
+            out.append({
+                "T": T, "method": method, "L": round(L, 3),
+                "modeled_speedup": round(
+                    lat.speedup(L, scfg.gamma, verifier_bits=bits), 3),
+            })
+    save_json("table2_temperature.json", out)
+    return out
+
+
+def main():
+    for r in rows():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

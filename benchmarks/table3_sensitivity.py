@@ -1,0 +1,40 @@
+"""Paper Table 3: sensitivity to draft length γ and prompt-lookup range K
+on the code task (HumanEval preset), Ngram vs Quasar."""
+from __future__ import annotations
+
+from repro.core.config import SpecConfig
+
+from benchmarks.common import LatencyModel, get_trained, run_engine, save_json
+
+GAMMAS = [3, 5, 7, 9]
+K_RANGES = [(1, 3), (2, 4), (3, 5)]
+
+
+def rows(quick: bool = False):
+    lat = LatencyModel()
+    model, params, qparams = get_trained("qwen3-sub")
+    gammas = [3, 5] if quick else GAMMAS
+    kranges = K_RANGES[:1] if quick else K_RANGES
+    out = []
+    for (kmin, kmax) in kranges:
+        for g in gammas:
+            scfg = SpecConfig(gamma=g, k_min=kmin, k_max=kmax, temperature=0.0)
+            for method, p, bits in (("ngram", params, 16), ("quasar", qparams, 8)):
+                r = run_engine(model, p, mode="spec", scfg=scfg, task="humaneval")
+                out.append({
+                    "K": f"({kmin},{kmax})", "gamma": g, "method": method,
+                    "L": round(r["L"], 3),
+                    "modeled_speedup": round(
+                        lat.speedup(r["L"], g, verifier_bits=bits), 3),
+                })
+    save_json("table3_sensitivity.json", out)
+    return out
+
+
+def main():
+    for r in rows():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Inspect the enhanced-SmoothQuant calibration: how smoothing factors
+migrate quantization difficulty from activations to weights (paper Eq. 5),
+and what that buys in logit fidelity.
+
+Run:  PYTHONPATH=src python examples/quantize_and_inspect.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.config import QuantConfig
+from repro.data import lm_batches
+from repro.models import Model
+from repro.quant import quantize_params
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer
+
+
+def kl_and_top1(model, params, qparams, seed=2):
+    toks = jnp.asarray(next(lm_batches(4, 64, model.cfg.vocab_size, seed=seed))["tokens"])
+    lf, _ = model.forward(params, toks)
+    lq, _ = model.forward(qparams, toks)
+    p = jax.nn.softmax(lf, -1)
+    kl = float(jnp.mean(jnp.sum(p * (jnp.log(p + 1e-9) - jax.nn.log_softmax(lq, -1)), -1)))
+    t1 = float(jnp.mean((jnp.argmax(lf, -1) == jnp.argmax(lq, -1)).astype(jnp.float32)))
+    return kl, t1
+
+
+def main():
+    cfg = get_config("smollm-135m").reduced()
+    model = Model(cfg)
+    tr = Trainer(model, AdamWConfig(lr=1.5e-3, warmup_steps=10, total_steps=100))
+    params, opt = tr.init(jax.random.PRNGKey(0))
+    params, _, _ = tr.fit(params, opt, lm_batches(8, 96, cfg.vocab_size),
+                          steps=100, log_every=100, log_fn=None)
+
+    # calibrate
+    collect = {}
+    model.forward(params, jnp.asarray(
+        next(lm_batches(4, 96, cfg.vocab_size, seed=1))["tokens"]), collect=collect)
+    print(f"calibrated {len(collect)} apply-sites, e.g.:")
+    for path in list(collect)[:4]:
+        a = np.asarray(collect[path])
+        print(f"  {path:28s} act |max| range [{a.min():.3f}, {a.max():.3f}] "
+              f"(outlier ratio {a.max()/np.median(a):.1f}x)")
+
+    for alpha in (0.0, 0.5, 0.8):
+        q = quantize_params(params, collect, QuantConfig(alpha=alpha))
+        kl, t1 = kl_and_top1(model, params, q)
+        print(f"alpha={alpha:.1f}  KL={kl:.3e}  top-1 agreement={t1:.3f}")
+    q = quantize_params(params, None, QuantConfig())
+    kl, t1 = kl_and_top1(model, params, q)
+    print(f"no calib   KL={kl:.3e}  top-1 agreement={t1:.3f}")
+
+
+if __name__ == "__main__":
+    main()

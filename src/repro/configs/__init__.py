@@ -1,0 +1,32 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from __future__ import annotations
+
+from repro.core.config import ModelConfig
+
+from repro.configs.phi35_moe import CONFIG as phi35_moe
+from repro.configs.arctic import CONFIG as arctic
+from repro.configs.zamba2 import CONFIG as zamba2
+from repro.configs.llama32_vision import CONFIG as llama32_vision
+from repro.configs.stablelm import CONFIG as stablelm
+from repro.configs.smollm import CONFIG as smollm
+from repro.configs.moonshot import CONFIG as moonshot
+from repro.configs.mamba2 import CONFIG as mamba2
+from repro.configs.codeqwen import CONFIG as codeqwen
+from repro.configs.whisper import CONFIG as whisper
+from repro.configs.quasar_paper import CONFIG as quasar_paper
+
+REGISTRY: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        phi35_moe, arctic, zamba2, llama32_vision, stablelm,
+        smollm, moonshot, mamba2, codeqwen, whisper, quasar_paper,
+    ]
+}
+
+ASSIGNED = [c for c in REGISTRY.values() if c.name != "quasar-paper-7b"]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]

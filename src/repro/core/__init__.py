@@ -1,0 +1,10 @@
+"""The paper's primary contribution: quantized self-speculative decoding."""
+from repro.core.config import ModelConfig, QuantConfig, SpecConfig  # noqa: F401
+from repro.core.drafting import draft_tokens  # noqa: F401
+from repro.core.verification import verify, VerifyResult  # noqa: F401
+from repro.core.spec_engine import (  # noqa: F401
+    init_state,
+    make_pruned_step,
+    make_serve_step,
+    make_vanilla_step,
+)

@@ -1,0 +1,231 @@
+"""Configuration dataclasses for the Quasar reproduction framework.
+
+Everything the framework does is driven by three configs:
+
+* :class:`ModelConfig` — architecture definition (one per assigned arch).
+* :class:`QuantConfig` — W8A8 verification settings (the paper's technique).
+* :class:`SpecConfig`  — speculative-decoding settings (drafting + verify).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture definition.
+
+    A single config class covers all six assigned arch families
+    (dense / moe / ssm / hybrid / vlm / audio); the transformer stack
+    builder interprets the fields that apply to each family.
+    """
+
+    name: str
+    arch_type: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None      # default: d_model // num_heads
+
+    # --- MoE ----------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: Optional[int] = None      # per-expert ffn dim (default d_ff)
+    dense_residual: bool = False        # arctic: dense MLP residual branch
+    router_aux_coef: float = 0.01       # load-balance aux loss coefficient
+    # Expert capacity factor.  1.25 = production TPU semantics (token
+    # dropping possible under load, which makes outputs depend on what else
+    # is in the batch — standard).  Setting it to num_experts·k makes the
+    # dispatch dropless and exactly path-independent; reduced() smoke
+    # configs do that so cached-vs-full equivalence tests are exact.
+    moe_capacity_factor: float = 1.25
+
+    # --- SSM (Mamba2 / SSD) --------------------------------------------
+    ssm_state: int = 0                  # N: state dim per head
+    ssm_head_dim: int = 64              # P: channels per SSD head
+    ssm_expand: int = 2                 # d_inner = expand * d_model
+    ssm_chunk: int = 128                # SSD chunk length
+
+    # --- hybrid (zamba2-style) -----------------------------------------
+    attn_every: int = 0                 # insert a (shared) attn block every k layers
+    shared_attn: bool = False           # zamba2: attention block weights shared
+
+    # --- VLM (llama-3.2-vision-style) ------------------------------------
+    cross_attn_every: int = 0           # every k-th layer is a cross-attn layer
+    num_image_tokens: int = 0           # patch-embedding stub length
+
+    # --- audio enc-dec (whisper-style) -----------------------------------
+    encoder_layers: int = 0             # 0 => decoder-only
+    num_audio_frames: int = 0           # mel-frame embedding stub length
+
+    # --- attention / misc ------------------------------------------------
+    sliding_window: Optional[int] = None   # None => full causal attention
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    norm: str = "rmsnorm"               # rmsnorm | layernorm
+    act: str = "silu"                   # silu | gelu
+    glu: bool = True                    # gated FFN (silu(x W_g) * x W_u) W_d
+    attn_bias: bool = False             # bias on q/k/v projections (qwen-style)
+    ffn_bias: bool = False              # bias on FFN + attn-out (whisper-style)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: jnp.dtype = jnp.bfloat16
+    # "int8": KV cache stored int8 with per-(token, head) scales; scales are
+    # folded into attention scores/probs exactly (no dequant temps), halving
+    # decode-time cache streaming.  Beyond-paper extension (the paper's
+    # "ultra-low bit" future-work direction applied to the KV cache).
+    kv_cache_dtype: str = "bf16"
+    source: str = ""                    # citation for the config
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+        if self.num_experts and self.moe_d_ff is None:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    # ------------------------------------------------------------------
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-flops and Eq. 11)."""
+        D, F, V = self.d_model, self.d_ff, self.vocab_size
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        n_attn, n_cross, n_ssm, n_moe, n_dense_ffn = self._layer_census()
+        attn = D * self.q_dim + 2 * D * self.kv_dim + self.q_dim * D
+        per_ffn = (3 if self.glu else 2) * D * F
+        moe_ffn = 0
+        if self.is_moe:
+            e_ffn = (3 if self.glu else 2) * D * self.moe_d_ff
+            moe_ffn = self.num_experts * e_ffn + D * self.num_experts
+            if self.dense_residual:
+                moe_ffn += per_ffn
+        ssm = 0
+        if n_ssm:
+            di, N, H = self.d_inner, self.ssm_state, self.ssm_heads
+            ssm = D * (2 * di + 2 * N + H) + di * D + di  # in/out proj + conv-ish
+        per_layer = (
+            n_attn * (attn + (per_ffn if not self.is_moe else 0))
+            + n_cross * attn
+            + n_moe * moe_ffn
+            + n_ssm * ssm
+        )
+        enc = 0
+        if self.encoder_layers:
+            enc = self.encoder_layers * (attn + per_ffn)
+        return emb + per_layer + enc
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        if not self.is_moe:
+            return self.param_count()
+        full = self.param_count()
+        e_ffn = (3 if self.glu else 2) * self.d_model * self.moe_d_ff
+        _, _, _, n_moe, _ = self._layer_census()
+        inactive = n_moe * (self.num_experts - self.experts_per_token) * e_ffn
+        return full - inactive
+
+    def _layer_census(self) -> Tuple[int, int, int, int, int]:
+        """(n_self_attn, n_cross_attn, n_ssm, n_moe_ffn, n_dense_ffn) decoder layers."""
+        L = self.num_layers
+        if self.arch_type == "ssm":
+            return 0, 0, L, 0, 0
+        if self.arch_type == "hybrid":
+            n_attn = L // self.attn_every if self.attn_every else 0
+            return n_attn, 0, L, 0, 0
+        n_cross = L // self.cross_attn_every if self.cross_attn_every else 0
+        n_self = L - n_cross
+        if self.is_moe:
+            return n_self, n_cross, 0, L, 0
+        return n_self, n_cross, 0, 0, L
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant of the same family: ≤2 layers, d_model ≤ 512, ≤4 experts."""
+        heads = min(self.num_heads, 4)
+        kv = min(self.num_kv_heads, heads)
+        while kv and heads % kv:
+            kv -= 1
+        hd = 32
+        d = hd * max(heads, 4)
+        return dataclasses.replace(
+            self,
+            num_layers=2,
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=hd,
+            d_ff=4 * d if self.d_ff else 0,
+            moe_d_ff=2 * d if self.is_moe else None,
+            vocab_size=256,
+            num_experts=min(self.num_experts, 4) if self.is_moe else 0,
+            experts_per_token=min(self.experts_per_token, 2) if self.is_moe else 0,
+            moe_capacity_factor=float(min(self.num_experts, 4)) if self.is_moe else 1.25,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_chunk=8 if self.ssm_state else 128,
+            attn_every=2 if self.attn_every else 0,
+            cross_attn_every=2 if self.cross_attn_every else 0,
+            num_image_tokens=8 if self.num_image_tokens else 0,
+            encoder_layers=2 if self.encoder_layers else 0,
+            num_audio_frames=16 if self.num_audio_frames else 0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else None,
+            # f32 for smoke tests: with random-init weights the logit gaps are
+            # tiny, and bf16 fusion noise under jit can flip argmax — f32 keeps
+            # losslessness tests deterministic.
+            dtype=jnp.float32,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """W8A8 quantized-verification settings (paper §3.2-3.3)."""
+
+    enabled: bool = True
+    alpha: float = 0.5                  # SmoothQuant migration strength (Eq. 5)
+    w_bits: int = 8
+    a_bits: int = 8
+    per_channel_weights: bool = True    # per-out-channel Δw
+    per_token_activations: bool = True  # per-row dynamic Δx
+    quantize_embedding: bool = False    # embeddings/router stay BF16
+    calib_batches: int = 4
+    calib_seq_len: int = 128
+    use_pallas: bool = False            # route W8A8 matmul through the Pallas kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding settings (paper §3.1, §4.4)."""
+
+    gamma: int = 5                      # draft length γ
+    k_min: int = 1                      # prompt-lookup n-gram min
+    k_max: int = 4                      # prompt-lookup n-gram max (paper: ≤4)
+    temperature: float = 0.0
+    max_new_tokens: int = 64
+    verifier: str = "w8a8"              # w8a8 | bf16 | pruned
+    pruned_retention: float = 0.75      # for the Table-5 baseline

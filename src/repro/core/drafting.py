@@ -1,0 +1,75 @@
+"""Prompt-lookup (n-gram) self-speculative drafting — pure ``jax.lax``.
+
+The paper's drafting strategy (§4.1, baseline "Ngram"/PLD, Somasundaram et
+al. 2025): match the trailing k-gram of the generated context against the
+context itself and propose the γ tokens that followed the most recent
+match.  k is adjusted dynamically between ``k_min`` and ``k_max`` (paper:
+min 1, max 4): the longest k with a match wins.
+
+Vectorized over the batch; everything is fixed-shape so it jits and lowers
+for the production mesh.  When no k-gram matches, the drafted tokens repeat
+the last token — verification rejects bad drafts anyway (losslessness,
+Eq. 2-3), this only costs acceptance length, exactly as in the paper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _match_k(tokens: jax.Array, length: jax.Array, k: int):
+    """Most recent occurrence of the trailing k-gram.
+
+    tokens: (B, S) committed-token buffer; length: (B,) committed counts.
+    Returns (found (B,) bool, start (B,) int32 — index *after* the match).
+    """
+    B, S = tokens.shape
+    # trailing k-gram per row: tokens[l-k : l]
+    tail_idx = length[:, None] - k + jnp.arange(k)[None, :]          # (B, k)
+    tail = jnp.take_along_axis(tokens, jnp.maximum(tail_idx, 0), axis=1)
+
+    # windows[b, j, i] = tokens[b, j + i] for j in [0, S-k]
+    win = jnp.stack([tokens[:, i : S - k + 1 + i] for i in range(k)], axis=-1)
+    eq = jnp.all(win == tail[:, None, :], axis=-1)                   # (B, S-k+1)
+
+    j = jnp.arange(S - k + 1)[None, :]
+    # exclude the trailing gram itself and anything beyond the committed text
+    valid = eq & (j < length[:, None] - k) & (length[:, None] >= 2 * k)
+    found = jnp.any(valid, axis=1)
+    best = jnp.argmax(jnp.where(valid, j, -1), axis=1)               # most recent
+    return found, best + k
+
+
+def draft_tokens(
+    tokens: jax.Array,     # (B, S) committed token buffer
+    length: jax.Array,     # (B,) committed lengths
+    *,
+    gamma: int,
+    k_min: int = 1,
+    k_max: int = 4,
+) -> jax.Array:
+    """Propose γ draft tokens per row.  Returns (B, γ) int32."""
+    B, S = tokens.shape
+    start = jnp.zeros((B,), jnp.int32)
+    found_any = jnp.zeros((B,), bool)
+    # longest matching k wins: scan k from k_min upward, later (longer) k
+    # overwrite earlier ones where they match
+    for k in range(k_min, k_max + 1):
+        found, st = _match_k(tokens, length, k)
+        start = jnp.where(found, st.astype(jnp.int32), start)
+        found_any = found_any | found
+
+    idx = start[:, None] + jnp.arange(gamma)[None, :]                # (B, γ)
+    # clamp reads into the committed region; beyond-text positions fall back
+    # to repeating the most recent committed token
+    last = jnp.take_along_axis(tokens, jnp.maximum(length - 1, 0)[:, None], axis=1)
+    in_text = (idx < length[:, None]) & found_any[:, None]
+    drafts = jnp.take_along_axis(tokens, jnp.clip(idx, 0, S - 1), axis=1)
+    return jnp.where(in_text, drafts, last).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "k_min", "k_max"))
+def draft_tokens_jit(tokens, length, gamma: int, k_min: int = 1, k_max: int = 4):
+    return draft_tokens(tokens, length, gamma=gamma, k_min=k_min, k_max=k_max)

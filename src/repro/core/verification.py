@@ -1,0 +1,90 @@
+"""Lossless rejection-sampling verification (paper Eq. 2-3).
+
+The verifier's (dequantized, BF16) logits define the target distribution
+p(·).  The prompt-lookup drafter is deterministic, i.e. q(·) is a one-hot
+at the drafted token, so Eq. 2 reduces to
+
+    accept x̃_i  ⇔  r < p(x̃_i),     r ~ U[0,1]
+
+and the residual distribution (Eq. 3) is norm(max(0, p - onehot(x̃_i))) —
+p with the rejected token zeroed out.  At T=0 both reduce to exact-match
+against argmax p.  The committed output is therefore distributed exactly
+as standalone sampling from the verifier — quantization noise moves the
+*distribution* (Table 4 fidelity), never breaks the *guarantee*.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VerifyResult(NamedTuple):
+    n_accept: jax.Array      # (B,) int32 — accepted draft tokens ∈ [0, γ]
+    next_token: jax.Array    # (B,) int32 — corrective / bonus token
+    n_commit: jax.Array      # (B,) int32 — tokens committed = n_accept + 1
+
+
+def _probs(logits: jax.Array, temperature: float) -> jax.Array:
+    """(..., V) f32 target probabilities; T=0 → one-hot argmax."""
+    if temperature == 0.0:
+        return jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1], dtype=jnp.float32)
+    return jax.nn.softmax(logits.astype(jnp.float32) / temperature, axis=-1)
+
+
+def verify(
+    logits: jax.Array,       # (B, γ+1, V) — logits[i] is p(· | window[:i+1])
+    drafts: jax.Array,       # (B, γ) drafted tokens (window[1:])
+    temperature: float,
+    key: jax.Array,
+    draft_probs: jax.Array | None = None,   # (B, γ, V) for model-based drafters
+) -> VerifyResult:
+    """Vectorized prefix rejection sampling.
+
+    ``draft_probs=None`` means a deterministic drafter (one-hot q).  With a
+    stochastic drafter (the Table-5 pruned-model baseline), the full Eq. 2
+    ratio p/q and Eq. 3 residual are used.
+    """
+    B, g1, V = logits.shape
+    gamma = g1 - 1
+    p = _probs(logits, temperature)                                   # (B, γ+1, V)
+    k_acc, k_res, k_bonus = jax.random.split(key, 3)
+
+    p_draft = jnp.take_along_axis(p[:, :gamma], drafts[..., None], axis=-1)[..., 0]  # (B, γ)
+    if draft_probs is None:
+        ratio = p_draft                                               # q = 1 at draft
+    else:
+        q_draft = jnp.take_along_axis(draft_probs, drafts[..., None], axis=-1)[..., 0]
+        ratio = p_draft / jnp.maximum(q_draft, 1e-20)
+
+    r = jax.random.uniform(k_acc, (B, gamma))
+    accept = r < jnp.minimum(ratio, 1.0)                              # (B, γ)
+    # prefix acceptance: position i counts only if 0..i-1 all accepted
+    prefix_ok = jnp.cumprod(accept.astype(jnp.int32), axis=1)
+    n_accept = jnp.sum(prefix_ok, axis=1).astype(jnp.int32)           # (B,)
+
+    # distribution at the first rejected position (or bonus at γ)
+    p_at = jnp.take_along_axis(p, n_accept[:, None, None], axis=1)[:, 0]      # (B, V)
+    all_accepted = n_accept == gamma
+
+    if temperature == 0.0:
+        next_token = jnp.argmax(p_at, axis=-1).astype(jnp.int32)
+    else:
+        # residual norm(max(0, p - q)) at the rejected position
+        if draft_probs is None:
+            rej_tok = jnp.take_along_axis(
+                drafts, jnp.minimum(n_accept, gamma - 1)[:, None], axis=1)[:, 0]
+            q_at = jax.nn.one_hot(rej_tok, V, dtype=jnp.float32)
+        else:
+            q_at = jnp.take_along_axis(
+                draft_probs, jnp.minimum(n_accept, gamma - 1)[:, None, None], axis=1)[:, 0]
+        residual = jnp.maximum(p_at - q_at, 0.0)
+        # fall back to p when the residual is numerically empty
+        rsum = jnp.sum(residual, axis=-1, keepdims=True)
+        residual = jnp.where(rsum > 1e-9, residual / jnp.maximum(rsum, 1e-20), p_at)
+        corrective = jax.random.categorical(k_res, jnp.log(jnp.maximum(residual, 1e-30)))
+        bonus = jax.random.categorical(k_bonus, jnp.log(jnp.maximum(p_at, 1e-30)))
+        next_token = jnp.where(all_accepted, bonus, corrective).astype(jnp.int32)
+
+    return VerifyResult(n_accept=n_accept, next_token=next_token, n_commit=n_accept + 1)

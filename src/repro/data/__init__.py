@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    lm_batches,
+    synthetic_corpus,
+    task_prompts,
+)

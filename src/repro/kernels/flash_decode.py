@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: flash attention for the speculative *verify/decode*
+step — a short query window (T = 1…γ+1) attending a long contiguous KV
+cache with online softmax over cache blocks.
+
+This is the attention hot-spot of Quasar's verification pass at long
+context (EXPERIMENTS §Roofline: decode_32k memory term is cache-read
+dominated).  Design:
+
+* grid = (B, Hkv, S/block_s); the S dimension is innermost/"arbitrary" so
+  the (m, l, acc) running-softmax state lives in VMEM scratch across cache
+  blocks and the output is written exactly once;
+* all G = Hq/Hkv grouped query heads of one kv head are processed together
+  (rows = G·T ≤ a few dozen — one VREG tile);
+* causality against the cache: slot index == absolute position
+  (contiguous cache layout), masked against the per-(row, t) query
+  positions streamed in as an int32 block.
+
+The pure-jnp oracle is the ``attend`` direct path in models/attention.py;
+tests sweep shapes and assert allclose in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MASK_VAL = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, qpos_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, ns: int, block_s: int, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASK_VAL)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (GT, dh)
+    k = k_ref[0, 0].astype(jnp.float32)           # (bs, dh)
+    v = v_ref[0, 0].astype(jnp.float32)           # (bs, dh)
+    qpos = qpos_ref[0]                            # (GT, 1) int32
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (GT, bs)
+    kpos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = kpos <= qpos                          # slot==position causality
+    s = jnp.where(valid, s, MASK_VAL)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_prev * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(s_idx == ns - 1)
+    def _epilogue():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(
+    q: jax.Array,        # (B, T, Hq, dh) query window
+    k: jax.Array,        # (B, S, Hkv, dh) contiguous KV cache
+    v: jax.Array,        # (B, S, Hkv, dh)
+    qpos: jax.Array,     # (B, T) int32 absolute query positions
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, T, Hq, dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    GT = G * T
+    scale = dh ** -0.5
+
+    bs = min(block_s, S)
+    Sp = (-S) % bs + S
+    if Sp != S:  # pad slots sit at positions >= S and are masked by qpos
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    ns = Sp // bs
+
+    # (B, Hkv, GT, dh): group the G query heads of each kv head
+    qg = q.reshape(B, T, Hkv, G, dh).transpose(0, 2, 3, 1, 4).reshape(B, Hkv, GT, dh)
+    kk = k.transpose(0, 2, 1, 3)                  # (B, Hkv, Sp, dh)
+    vv = v.transpose(0, 2, 1, 3)
+    # per-row query positions, broadcast over G
+    qp = jnp.repeat(qpos[:, None, :], G, axis=1).reshape(B, GT, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, ns=ns, block_s=bs, scale=scale),
+        grid=(B, Hkv, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, GT, dh), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dh), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs, dh), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, GT, 1), lambda b, h, s: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, GT, dh), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, GT, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((GT, 1), jnp.float32),
+            pltpu.VMEM((GT, 1), jnp.float32),
+            pltpu.VMEM((GT, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qg, kk, vv, qp)
+
+    # (B, Hkv, GT, dh) → (B, T, Hq, dh)
+    return out.reshape(B, Hkv, G, T, dh).transpose(0, 3, 1, 2, 4).reshape(B, T, Hq, dh)

@@ -1,0 +1,55 @@
+"""Public jit'd wrappers around the Pallas kernels, with an XLA fallback.
+
+Dispatch policy:
+  * on TPU backends the Pallas kernels run compiled;
+  * on CPU (this container) the default is the XLA path, which is
+    numerically identical (same int8 quantize semantics, exact int32 GEMM via
+    ``dot_general(..., preferred_element_type=int32)``) and keeps the weight
+    operand int8 in the HLO — so ``cost_analysis()`` sees the halved weight
+    bytes exactly as the TPU kernel would;
+  * ``REPRO_USE_PALLAS=1`` (or ``set_use_pallas(True)``) forces the Pallas
+    kernels in ``interpret=True`` mode for validation.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.smooth_quant import smooth_quant
+
+_FORCE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+def set_use_pallas(flag: bool) -> None:
+    global _FORCE_PALLAS
+    _FORCE_PALLAS = flag
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def w8a8_matmul(
+    x: jax.Array,         # (..., K) activations (bf16/f32)
+    w_int8: jax.Array,    # (K, N) int8
+    w_scale: jax.Array,   # (N,) f32
+    smooth: jax.Array,    # (K,) f32
+) -> jax.Array:
+    """Quantized-verification linear (paper §3.3): smooth→quant→int8 GEMM→dequant."""
+    batch_shape = x.shape[:-1]
+    K = x.shape[-1]
+    N = w_int8.shape[1]
+    x2 = x.reshape(-1, K)
+    if _on_tpu():
+        xq, dx = smooth_quant(x2, smooth)
+        y = int8_matmul(xq, w_int8, dx, w_scale, out_dtype=x.dtype)
+    elif _FORCE_PALLAS:
+        xq, dx = smooth_quant(x2, smooth, interpret=True)
+        y = int8_matmul(xq, w_int8, dx, w_scale, out_dtype=x.dtype, interpret=True)
+    else:
+        y = ref.w8a8_matmul_ref(x2, w_int8, w_scale, smooth, out_dtype=x.dtype)
+    return y.reshape(*batch_shape, N)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the numerical semantics; the Pallas kernels (and the XLA
+"simulated" fast path used on CPU) must match them bit-for-bit where
+possible (integer GEMM is exact; only the final bf16 cast rounds).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+EPS = 1e-8
+
+
+def quantize_symmetric(x: jax.Array, axis: int) -> tuple[jax.Array, jax.Array]:
+    """Symmetric uniform quantization Q(x, Δ) (paper Eq. 6-7).
+
+    Returns (int8 values, per-slice scale Δ) where Δ is reduced over ``axis``
+    (kept as a squeezed array over the remaining dims).
+    """
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=axis)
+    scale = jnp.maximum(amax, EPS) / INT8_MAX
+    q = jnp.clip(jnp.round(x32 / jnp.expand_dims(scale, axis)), -INT8_MAX, INT8_MAX)
+    return q.astype(jnp.int8), scale
+
+
+def smooth_quant_ref(x: jax.Array, smooth: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused online smoothing + per-token dynamic quantization (paper Eq. 9).
+
+    x: (M, K) activations, smooth: (K,) per-channel factors s.
+    Returns (x̂ int8 (M, K), Δx f32 (M,)).
+    """
+    xs = x.astype(jnp.float32) * smooth.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xs), axis=-1)
+    dx = jnp.maximum(amax, EPS) / INT8_MAX
+    q = jnp.clip(jnp.round(xs / dx[:, None]), -INT8_MAX, INT8_MAX)
+    return q.astype(jnp.int8), dx
+
+
+def int8_matmul_ref(
+    x_int8: jax.Array,    # (M, K) int8
+    w_int8: jax.Array,    # (K, N) int8
+    dx: jax.Array,        # (M,) f32 per-token scale
+    dw: jax.Array,        # (N,) f32 per-channel scale
+    out_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """INT8 GEMM with INT32 accumulation + fused dequant epilogue (Eq. 8/10)."""
+    acc = jax.lax.dot_general(
+        x_int8, w_int8,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    y = acc.astype(jnp.float32) * dx[:, None] * dw[None, :]
+    return y.astype(out_dtype)
+
+
+def w8a8_matmul_ref(
+    x: jax.Array,         # (..., K) bf16/f32 activations
+    w_int8: jax.Array,    # (K, N) int8 smoothed+quantized weights
+    w_scale: jax.Array,   # (N,) f32 Δw
+    smooth: jax.Array,    # (K,) f32 s
+    out_dtype=None,
+) -> jax.Array:
+    """Full W8A8 verification linear: smooth+quantize x, int8 GEMM, dequant."""
+    out_dtype = out_dtype or x.dtype
+    batch_shape = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    xq, dx = smooth_quant_ref(x2, smooth)
+    y = int8_matmul_ref(xq, w_int8, dx, w_scale, out_dtype)
+    return y.reshape(*batch_shape, w_int8.shape[1])

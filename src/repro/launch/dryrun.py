@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS",
+                     "--xla_backend_optimization_level=0")
+)
+# ^ MUST run before any jax import: jax locks the device count on first init.
+#   The 512 placeholder host devices exist ONLY in this process; smoke tests
+#   and benchmarks see the single real CPU device.
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape) combination
+for the production mesh and report roofline terms.
+
+For each combination this lowers the *real* step function the framework
+serves/trains with (scan layout — one HLO block per layer kind):
+
+  train_4k     → ``train_step``   (CE + AdamW, remat, FSDP+TP sharding)
+  prefill_32k  → ``prefill_step`` (prompt → KV/SSM cache, verifier params)
+  decode_32k   → ``serve_step``   (one full speculative iteration: n-gram
+  long_500k      draft + γ+1-token quantized verification + commit)
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-12b --shape decode_32k
+  python -m repro.launch.dryrun --all [--multi-pod] [--verifier w8a8|bf16]
+  python -m repro.launch.dryrun --all --both-meshes --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, get_config
+from repro.core.config import QuantConfig, SpecConfig
+from repro.core.spec_engine import make_serve_step
+from repro.launch import shapes as shp
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze, model_flops_decode, model_flops_train
+from repro.launch.sharding import (
+    batch_shardings,
+    param_shardings,
+    replicated,
+    state_shardings,
+)
+from repro.models import Model
+from repro.quant import quantize_params
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.trainer import make_train_step
+
+
+def build_params(model, verifier: str, scan: bool):
+    """Abstract (ShapeDtypeStruct) params — no allocation."""
+    def make():
+        p = model.init_params(jax.random.PRNGKey(0))
+        if verifier == "w8a8":
+            p = quantize_params(p, None, QuantConfig())
+        elif verifier == "w4a8":
+            p = quantize_params(p, None, QuantConfig(w_bits=4))
+        return model.to_scan(p) if scan else p
+    return jax.eval_shape(make)
+
+
+def _build(cfg, model, kind, shape_name, mesh, verifier, scfg, scan: bool):
+    """(jitted fn, args, model_flops) for one combo in one layout."""
+    gamma = scfg.gamma
+    if kind == "train":
+        params = build_params(model, "bf16", scan)      # training is BF16
+        opt = jax.eval_shape(adamw_init, params)
+        batch = shp.train_specs(cfg, shape_name)
+        psh = param_shardings(params, mesh, fsdp=("data",))
+        osh = param_shardings(opt, mesh, fsdp=("data",))
+        bsh = batch_shardings(batch, mesh)
+        step = make_train_step(cfg, AdamWConfig(), remat=True, scan=scan)
+        fn = jax.jit(step, in_shardings=(psh, osh, bsh),
+                     out_shardings=(psh, osh, None))
+        args = (params, opt, batch)
+        tokens = batch["tokens"].shape[0] * batch["tokens"].shape[1]
+        mflops = model_flops_train(cfg, tokens)
+    elif kind == "prefill":
+        params = build_params(model, verifier, scan)
+        spec = shp.prefill_specs(cfg, shape_name, model, scan=scan)
+        psh = param_shardings(params, mesh)
+        csh = state_shardings({"cache": spec["cache"]}, mesh)["cache"]
+        tsh = batch_shardings({"t": spec["tokens"]}, mesh)["t"]
+        in_sh = [psh, csh, tsh]
+        args = [params, spec["cache"], spec["tokens"]]
+        if "aux_embeds" in spec:
+            in_sh.append(batch_shardings({"a": spec["aux_embeds"]}, mesh)["a"])
+            args.append(spec["aux_embeds"])
+
+            def step(p, c, t, a):
+                return model.prefill(p, c, t, aux_embeds=a)
+        else:
+            def step(p, c, t):
+                return model.prefill(p, c, t)
+        fn = jax.jit(step, in_shardings=tuple(in_sh), out_shardings=csh)
+        args = tuple(args)
+        tokens = spec["tokens"].shape[0] * spec["tokens"].shape[1]
+        mflops = 2.0 * cfg.active_param_count() * tokens  # 2·N·D (forward)
+    else:  # decode
+        params = build_params(model, verifier, scan)
+        state = shp.serve_state_specs(cfg, shape_name, model, scfg, scan=scan)
+        psh = param_shardings(params, mesh)
+        ssh = state_shardings(state, mesh)
+        step = make_serve_step(model, scfg)
+        fn = jax.jit(step, in_shardings=(psh, ssh), out_shardings=ssh)
+        args = (params, state)
+        tokens = state["tokens"].shape[0] * (gamma + 1)
+        mflops = model_flops_decode(cfg, tokens)
+    return fn, args, mflops
+
+
+def lower_combo(arch: str, shape_name: str, mesh, verifier: str = "w8a8",
+                gamma: int = 5, skip_loop_costs: bool = False,
+                moe_mode: str = "gspmd", kv_cache: str = "bf16"):
+    import dataclasses as _dc
+    import math as _math
+
+    from jax.sharding import PartitionSpec as P
+    from repro.models import scan as scan_mod
+    from repro.models.scan import scan_pattern
+
+    # constrain scan-carry activations: batch on the data axes (replicated
+    # when not divisible, e.g. long_500k B=1)
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    B0 = shp.SHAPES[shape_name]["global_batch"]
+    dp_ok = dp if B0 % _math.prod(mesh.shape[a] for a in dp) == 0 else None
+    scan_mod.set_activation_spec(P(dp_ok, None, None))
+
+    # expert-parallel dispatch buffer: E on "model" (falls back to replicated
+    # inside apply_moe when E is indivisible — GSPMD handles either way)
+    from repro.models import moe as moe_mod
+    moe_mod.set_dispatch_spec(P("model", None, None))
+    if moe_mode == "shardmap":
+        moe_mod.set_shard_map(mesh, dp_ok or (), fsdp=True)
+    else:
+        moe_mod.set_shard_map(None, (), False)
+
+    cfg = shp.shape_cfg(get_config(arch), shape_name)
+    if kv_cache != "bf16":
+        cfg = _dc.replace(cfg, kv_cache_dtype=kv_cache)
+    model = Model(cfg)
+    kind = shp.SHAPES[shape_name]["kind"]
+    chips = mesh.devices.size
+    scfg = SpecConfig(gamma=gamma, temperature=0.0)
+    _, n_groups, _ = scan_pattern(cfg)
+
+    # 1) scan layout (production executable): compile gate + memory +
+    #    per-device HLO for collective parsing
+    fn, args, mflops = _build(cfg, model, kind, shape_name, mesh, verifier,
+                              scfg, scan=True)
+    t0 = time.time()
+    lowered_scan = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered_scan.compile()
+    t_compile = time.time() - t0
+
+    # 2) loop layout (unrolled): global FLOPs/bytes that count every layer
+    lowered_loop = None
+    if not skip_loop_costs:
+        fn_l, args_l, _ = _build(cfg, model, kind, shape_name, mesh, verifier,
+                                 scfg, scan=False)
+        lowered_loop = fn_l.lower(*args_l)
+
+    mem = compiled.memory_analysis()
+    rf = analyze(lowered_loop, compiled, chips, n_groups, mflops)
+    row = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": chips,
+        "verifier": verifier if kind != "train" else "bf16",
+        "kind": kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "arg_bytes_per_dev": int(mem.argument_size_in_bytes),
+        "temp_bytes_per_dev": int(mem.temp_size_in_bytes),
+        "out_bytes_per_dev": int(mem.output_size_in_bytes),
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in rf.row().items()},
+        "coll_breakdown_gb": {k: round(v / 1e9, 3)
+                              for k, v in rf.coll_breakdown.items()},
+    }
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(shp.SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--verifier", default="w8a8",
+                    choices=["w8a8", "w4a8", "bf16"])
+    ap.add_argument("--gamma", type=int, default=5)
+    ap.add_argument("--moe", default="gspmd", choices=["gspmd", "shardmap"])
+    ap.add_argument("--kv-cache", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = [c.name for c in ASSIGNED] if (args.all or not args.arch) else [args.arch]
+    shapes = list(shp.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(), make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    rows, failures = [], []
+    for mesh in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                tag = f"{arch} × {shape_name} × {'x'.join(map(str, mesh.devices.shape))}"
+                try:
+                    with mesh:
+                        row = lower_combo(arch, shape_name, mesh,
+                                          args.verifier, args.gamma,
+                                          moe_mode=args.moe,
+                                          kv_cache=args.kv_cache)
+                    row["moe_mode"] = args.moe
+                    row["kv_cache"] = args.kv_cache
+                    rows.append(row)
+                    print(f"[ok] {tag}: dominant={row['dominant']} "
+                          f"t_mem={row['t_memory_s']:.3e}s "
+                          f"t_comp={row['t_compute_s']:.3e}s "
+                          f"t_coll={row['t_collective_s']:.3e}s "
+                          f"compile={row['compile_s']}s", flush=True)
+                except Exception as e:
+                    failures.append({"combo": tag, "error": f"{type(e).__name__}: {e}"})
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+                    traceback.print_exc()
+
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows, "failures": failures}, f, indent=1)
+        print(f"wrote {len(rows)} rows ({len(failures)} failures) -> {args.out}")
+    print(f"\n{len(rows)} ok / {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,178 @@
+"""Roofline-term derivation from the dry-run artifacts.
+
+    compute term    = HLO_FLOPs   / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips × HBM_bw)
+    collective term = coll_bytes  / (chips × link_bw)
+
+Sources — the dry-run produces two artifacts per combination:
+
+* **loop-layout ``jax.jit(...).lower()``** (unrolled layers, no compile):
+  ``lowered.cost_analysis()`` on the unpartitioned module gives *global*
+  FLOPs / bytes that include every layer (XLA's HloCostAnalysis counts
+  while-loop bodies once, so scanned-layer modules undercount by ~L —
+  measured and avoided here).  Bytes are pre-fusion and therefore an
+  overcount of true HBM traffic; they are consistent across configs, which
+  is what the relative hillclimb comparisons need.  Divided by chip count.
+
+* **scan-layout ``.compile()``** (the production executable): proves the
+  mesh/sharding lowers, provides ``memory_analysis()`` (per-device bytes)
+  and the per-device HLO text for collective parsing.  Collectives inside
+  while-loop *body* computations are multiplied by the layer-scan trip
+  count; payload = result-shape bytes × ring factor (all-reduce 2×,
+  others 1×).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 (394 TOP/s int8) per chip,
+819 GB/s HBM, ~50 GB/s per ICI link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)[.\d]*\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*)?\{\s*$")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    comps: Dict[str, list] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        m = _COMP_START_RE.match(line.strip()) if line and not line.startswith(" ") else None
+        if m:
+            current = m.group(2)
+            comps[current] = []
+        elif current is not None:
+            if line.strip() == "}":
+                current = None
+            else:
+                comps[current].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def collective_bytes(hlo_text: str, loop_trips: int = 1) -> Dict[str, float]:
+    """Per-op-kind payload bytes (per-device program).  Collectives inside
+    while-body computations count ``loop_trips`` times."""
+    bodies = set(_BODY_RE.findall(hlo_text))
+    comps = _split_computations(hlo_text)
+    out: Dict[str, float] = {k: 0.0 for k in _COLL_FACTOR}
+    for name, text in comps.items():
+        mult = loop_trips if name in bodies else 1
+        for m in _COLL_RE.finditer(text):
+            shapes, op = m.group(1), m.group(2)
+            out[op] += _shape_bytes(shapes) * _COLL_FACTOR[op] * mult
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # global HLO flops (loop-layout lowering)
+    bytes_accessed: float        # global HLO bytes (loop-layout lowering)
+    coll_bytes: float            # per-chip collective payload bytes
+    coll_breakdown: Dict[str, float]
+    chips: int
+    model_flops: float = 0.0     # analytic global 6·N·D (or 2·N·D decode)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """model_flops / HLO_flops — catches remat / masked-attention /
+        dispatch / drafting waste."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "hlo_gflops": self.flops / 1e9,
+            "hlo_gbytes": self.bytes_accessed / 1e9,
+            "coll_gbytes_per_chip": self.coll_bytes / 1e9,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def analyze(lowered_loop, compiled_scan, chips: int, loop_trips: int,
+            model_flops: float = 0.0) -> Roofline:
+    ca = lowered_loop.cost_analysis() if lowered_loop is not None else {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled_scan.as_text()
+    except Exception:
+        hlo = ""
+    breakdown = collective_bytes(hlo, loop_trips)
+    return Roofline(
+        flops=flops,
+        bytes_accessed=byts,
+        coll_bytes=sum(breakdown.values()),
+        coll_breakdown=breakdown,
+        chips=chips,
+        model_flops=model_flops,
+    )
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def model_flops_decode(cfg, tokens: int) -> float:
+    return 2.0 * cfg.active_param_count() * tokens

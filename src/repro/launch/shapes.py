@@ -1,0 +1,91 @@
+"""The four assigned input shapes and per-(arch × shape) input specs.
+
+Decode shapes lower ``serve_step`` — one speculative iteration (γ+1-token
+verify window) against a KV cache of ``seq_len`` — per the assignment.
+``long_500k`` switches full-attention archs to the sliding-window variant
+(window 4096), which is a first-class config flag; SSM archs need nothing.
+
+Everything here returns ``jax.ShapeDtypeStruct`` stand-ins — no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, SpecConfig
+
+LONG_WINDOW = 4096
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def shape_cfg(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """Arch config adapted to the input shape (sliding window for 500k)."""
+    if shape_name == "long_500k" and cfg.arch_type != "ssm" and cfg.num_heads:
+        if cfg.sliding_window is None or cfg.sliding_window > LONG_WINDOW:
+            return dataclasses.replace(cfg, sliding_window=LONG_WINDOW)
+    return cfg
+
+
+def _aux_spec(cfg: ModelConfig, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+    """Modality-frontend stubs: precomputed patch/frame embeddings."""
+    n = cfg.num_image_tokens or cfg.num_audio_frames
+    if not n:
+        return None
+    return jax.ShapeDtypeStruct((batch, n, cfg.d_model), cfg.dtype)
+
+
+def train_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    s = SHAPES[shape_name]
+    B, T = s["global_batch"], s["seq_len"]
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, T), jnp.int32),
+    }
+    aux = _aux_spec(cfg, B)
+    if aux is not None:
+        batch["aux_embeds"] = aux
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape_name: str, model, scan: bool = True) -> dict:
+    s = SHAPES[shape_name]
+    B, T = s["global_batch"], s["seq_len"]
+    cache = jax.eval_shape(lambda: model.init_cache(B, T + 256, scan=scan))
+    out = {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+    }
+    aux = _aux_spec(cfg, B)
+    if aux is not None:
+        out["aux_embeds"] = aux
+    return out
+
+
+def serve_state_specs(cfg: ModelConfig, shape_name: str, model, scfg: SpecConfig,
+                      scan: bool = True) -> dict:
+    """Engine state for one speculative serve step at this decode shape."""
+    s = SHAPES[shape_name]
+    B, S = s["global_batch"], s["seq_len"]
+    buf = S + scfg.gamma + 130  # committed context + speculative slack
+    state = jax.eval_shape(
+        lambda: {
+            "tokens": jnp.zeros((B, buf), jnp.int32),
+            "length": jnp.zeros((B,), jnp.int32),
+            "cache": model.init_cache(B, buf, scan=scan),
+            "key": jax.random.PRNGKey(0),
+            "stats": {
+                "commits": jnp.zeros((B,), jnp.int32),
+                "steps": jnp.zeros((), jnp.int32),
+            },
+        }
+    )
+    return state

@@ -1,0 +1,190 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every rule checks that the tensor dim divides the mesh-axis product before
+sharding it; otherwise the dim is replicated.  This transparently handles
+the awkward assigned shapes (smollm's 9 heads, whisper's 51865 vocab,
+mamba2's 50280 vocab) without per-arch special cases.
+
+Param layout conventions (see models/*):
+  column-parallel (out-dim on "model"):  attn q/k/v, ffn up/gate, ssm in_proj
+  row-parallel    (in-dim on "model"):   attn o, ffn down, ssm out_proj
+  expert-parallel ("model" on E):        moe up/gate/down  (E, din, dout)
+  vocab-parallel  ("model" on V):        embed, lm_head out-dim
+  FSDP (optional, train):                remaining large dim over data axes
+
+W8A8 tensors shard exactly like their BF16 counterparts: ``w_int8`` follows
+``w``; ``w_scale`` follows the weight's out dim; ``smooth`` is replicated.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _fit(mesh: Mesh, dim: int, axes):
+    """Return ``axes`` if dim divides their product, else None (replicate)."""
+    if axes is None:
+        return None
+    sz = _axsize(mesh, axes)
+    return axes if (sz > 1 and dim % sz == 0) else None
+
+
+def _col(mesh, shape, fsdp):
+    """(din, dout) column-parallel: out on model, din on fsdp."""
+    return P(_fit(mesh, shape[0], fsdp), _fit(mesh, shape[1], "model"))
+
+
+def _row(mesh, shape, fsdp):
+    """(din, dout) row-parallel: din on model, out on fsdp."""
+    return P(_fit(mesh, shape[0], "model"), _fit(mesh, shape[1], fsdp))
+
+
+def _expert(mesh, shape, fsdp):
+    """(E, din, dout): experts on model, din on fsdp."""
+    e = _fit(mesh, shape[0], "model")
+    if e is None:  # few experts: fall back to tensor-parallel inside experts
+        return P(None, None, _fit(mesh, shape[2], "model"))
+    return P(e, _fit(mesh, shape[1], fsdp), None)
+
+
+# path fragments → rule; order matters (first match wins)
+_COLUMN = ("/q/", "/k/", "/v/", "gate/", "up/", "in_proj", "router")
+_ROW = ("/o/", "down/", "out_proj")
+
+
+def _param_spec(path: str, shape, mesh: Mesh, fsdp) -> P:
+    nd = len(shape)
+    path = path + "/"
+    if "scan/" in path and nd >= 1:
+        # stacked layer-group leaf: leading L dim replicated, inner rule applies
+        inner = _param_spec(path.replace("scan/", "layers/"), shape[1:], mesh, fsdp)
+        return P(None, *inner)
+    if nd == 0:
+        return P()
+    if nd == 1:
+        # bias/scale vectors: shard only column-parallel outputs
+        if any(t in path for t in _COLUMN) and ("/b/" in path or "w_scale" in path):
+            return P(_fit(mesh, shape[0], "model"))
+        return P()
+    if "embed" in path:
+        v = _fit(mesh, shape[0], "model")
+        return P(v, _fit(mesh, shape[1], fsdp if v else "model"))
+    if "lm_head" in path:
+        return _col(mesh, shape, fsdp)
+    if nd == 3 and ("moe" in path or shape[0] <= 256 and ("up/" in path or "gate/" in path or "down/" in path)):
+        if "w_scale" in path:  # (E, dout)
+            return P(_fit(mesh, shape[0], "model"), None)
+        return _expert(mesh, shape, fsdp)
+    if nd == 2 and "w_scale" in path:
+        return P(_fit(mesh, shape[0], "model"), None)
+    if "conv_w" in path:
+        return P(None, _fit(mesh, shape[1], "model"))
+    if any(t in path for t in _ROW):
+        return _row(mesh, shape, fsdp)
+    if any(t in path for t in _COLUMN):
+        return _col(mesh, shape, fsdp)
+    return P()
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = []
+    for kp, leaf in flat:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        paths.append(("/".join(parts), leaf))
+    return paths, treedef
+
+
+def param_shardings(params, mesh: Mesh, fsdp: Optional[tuple] = None):
+    """Pytree of NamedSharding matching ``params`` (arrays or structs)."""
+    flat, treedef = _tree_paths(params)
+    specs = [
+        NamedSharding(mesh, _param_spec(path, np.shape(leaf), mesh, fsdp))
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Activation / engine-state shardings
+# ---------------------------------------------------------------------------
+
+def _state_spec(path: str, shape, mesh: Mesh, dp) -> P:
+    nd = len(shape)
+    import re as _re
+    stacked = "scan/" in path or (
+        "shared/" in path and not _re.search(r"shared/\d+/", path + "/")
+    )
+    if stacked and nd >= 1:
+        # stacked per-layer cache: leading L dim replicated
+        inner = _state_spec(
+            path.replace("scan/", "st/").replace("shared/", "st/"),
+            shape[1:], mesh, dp,
+        )
+        return P(None, *inner)
+    b = _fit(mesh, shape[0], dp) if nd >= 1 else None
+    if nd == 0:
+        return P()
+    if "states_all" in path:                  # (B, T, H, P, N)
+        return P(b, None, _fit(mesh, shape[2], "model"), None, None)
+    if "state" in path and nd == 4:           # SSD state (B, H, P, N)
+        return P(b, _fit(mesh, shape[1], "model"), None, None)
+    if "conv" in path and nd == 3:            # (B, K-1, convdim)
+        return P(b, None, _fit(mesh, shape[2], "model"))
+    if nd == 4:                               # KV cache (B, S, Hkv, dh)
+        h = _fit(mesh, shape[2], "model")
+        d = None if h else _fit(mesh, shape[3], "model")
+        return P(b, None, h, d)
+    if nd == 3:                               # embeddings (B, S, D)
+        return P(b, None, _fit(mesh, shape[2], "model"))
+    if nd == 2:                               # tokens/kpos (B, S)
+        return P(b, None)
+    if nd == 1 and shape[0] > 2:              # length/commits (B,)
+        return P(b)
+    return P()
+
+
+def state_shardings(state, mesh: Mesh):
+    """Shardings for the serve-engine state pytree (tokens/length/cache/…)."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    flat, treedef = _tree_paths(state)
+    specs = [
+        NamedSharding(mesh, _state_spec(path, np.shape(leaf), mesh, dp))
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    """{"tokens": (B,T), "labels": (B,T) [, "aux_embeds": (B,S,D)]}"""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    flat, treedef = _tree_paths(batch)
+    specs = []
+    for path, leaf in flat:
+        shape = np.shape(leaf)
+        b = _fit(mesh, shape[0], dp)
+        specs.append(NamedSharding(mesh, P(b, *([None] * (len(shape) - 1)))))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,284 @@
+"""GQA self-attention and cross-attention with KV caches.
+
+Supports the four execution modes the framework needs:
+
+* **train / full forward** — no cache, causal (optionally sliding-window)
+  mask, memory-efficient chunked online-softmax path for long sequences;
+* **prefill** — same math, but K/V (+ absolute positions) are scattered
+  into the cache buffers;
+* **decode / verify** — a T-token window (T = 1 or γ+1) is written into the
+  cache at per-row offsets and queries attend over the whole buffer with a
+  position mask (so speculative rollback is free: uncommitted slots carry
+  future positions and are masked until rewritten);
+* **cross-attention** — K/V come from encoder / image embeddings (cached at
+  prefill), no causal mask, no RoPE.
+
+Cache layouts (per layer):
+  contiguous: ``{"k","v": (B, S_max, Hkv, dh)}`` — slot index == absolute
+  position.
+  ring (sliding window): same buffers of size ``window + PAD`` plus a
+  ``"kpos": (B, R)`` int32 buffer holding each slot's absolute position
+  (init ``-2^30`` = invalid).  PAD > γ_max guarantees a speculative window
+  never evicts keys that could still be needed after a partial rollback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope
+from repro.models.linear import apply_linear, init_linear
+from repro.quant.smoothquant import record_act_stats
+
+RING_PAD = 128          # > γ_max; also keeps buffer sizes 128-aligned
+NEG_POS = -(2 ** 30)    # "invalid slot" position marker
+MASK_VAL = -1e30
+CHUNK_THRESHOLD = 4096  # use the online-softmax path beyond this many keys
+KV_CHUNK = 1024
+
+
+def init_attention(key, cfg, cross: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    D = cfg.d_model
+    b = cfg.attn_bias or cfg.ffn_bias
+    return {
+        "q": init_linear(kq, D, cfg.q_dim, b, cfg.dtype),
+        "k": init_linear(kk, D, cfg.kv_dim, b, cfg.dtype),
+        "v": init_linear(kv, D, cfg.kv_dim, b, cfg.dtype),
+        "o": init_linear(ko, cfg.q_dim, D, cfg.ffn_bias, cfg.dtype),
+    }
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, window=None) -> dict:
+    int8 = getattr(cfg, "kv_cache_dtype", "bf16") == "int8"
+    dt = jnp.int8 if int8 else cfg.dtype
+    S = min(window + RING_PAD, max_len + RING_PAD) if window is not None else max_len
+    cache = {
+        "k": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), dt),
+    }
+    if int8:
+        # per-(token, head) symmetric scales, folded into scores/probs
+        cache["k_scale"] = jnp.zeros((batch, S, cfg.num_kv_heads), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, S, cfg.num_kv_heads), jnp.float32)
+    if window is not None:
+        cache["kpos"] = jnp.full((batch, S), NEG_POS, jnp.int32)
+    return cache
+
+
+def _lin(p, x, collect, path):
+    if collect is not None:
+        record_act_stats(collect, path, x)
+    return apply_linear(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Core attend: q (B,T,Hq,dh) over k/v (B,S,Hkv,dh) with position mask
+# ---------------------------------------------------------------------------
+
+def _mask(qpos, kpos, window, causal):
+    # qpos (B,T) ; kpos (B,S) or (S,) -> (B,1,1,T,S) bool
+    if kpos.ndim == 1:
+        kpos = kpos[None, :]
+    d = qpos[:, :, None] - kpos[:, None, :]
+    if causal:
+        valid = d >= 0
+        if window is not None:
+            valid &= d < window
+    else:
+        valid = kpos[:, None, :] >= 0  # cross-attn: all real slots valid
+        valid = jnp.broadcast_to(valid, (qpos.shape[0], qpos.shape[1], kpos.shape[-1]))
+    return valid[:, None, None, :, :]
+
+
+def _attend_direct(q, k, v, valid, k_scale=None, v_scale=None):
+    B, T, Hq, dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, T, Hkv, G, dh)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg.astype(jnp.float32), k.astype(jnp.float32))
+    if k_scale is not None:  # int8 KV: per-(token, head) scale folded into scores
+        s = s * jnp.moveaxis(k_scale, 1, 2)[:, :, None, None, :]
+    s = s * (dh ** -0.5)
+    s = jnp.where(valid, s, MASK_VAL)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:  # fold value scale into the probabilities
+        p = p * jnp.moveaxis(v_scale, 1, 2)[:, :, None, None, :]
+    o = jnp.einsum("bkgts,bskh->btkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, T, Hq, dh).astype(q.dtype)
+
+
+def _attend_chunked(q, k, v, valid, k_scale=None, v_scale=None):
+    """Online-softmax (flash-style) over KV chunks via lax.scan.
+
+    Keeps peak live memory at O(B·H·T·C) per step instead of O(B·H·T·S);
+    this is the XLA-level flash attention used for 4k-500k sequences (a
+    Pallas flash kernel is a hillclimb candidate, see EXPERIMENTS §Perf).
+    """
+    B, T, Hq, dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    C = KV_CHUNK
+    nc = S // C
+    assert S % C == 0, (S, C)
+    qg = q.reshape(B, T, Hkv, G, dh).astype(jnp.float32)
+    scale = dh ** -0.5
+
+    kc = jnp.moveaxis(k.reshape(B, nc, C, Hkv, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, C, Hkv, dh), 1, 0)
+    validc = jnp.moveaxis(valid.reshape(B, 1, 1, T, nc, C), 4, 0)
+    ksc = (jnp.moveaxis(k_scale.reshape(B, nc, C, Hkv), 1, 0)
+           if k_scale is not None else jnp.zeros((nc, 0)))
+    vsc = (jnp.moveaxis(v_scale.reshape(B, nc, C, Hkv), 1, 0)
+           if v_scale is not None else jnp.zeros((nc, 0)))
+
+    def step(carry, inp):
+        m, l, acc = carry
+        k_i, v_i, valid_i, ks_i, vs_i = inp
+        s = jnp.einsum("btkgh,bskh->bkgts", qg, k_i.astype(jnp.float32)) * scale
+        if k_scale is not None:
+            s = s * jnp.moveaxis(ks_i, 1, 2)[:, :, None, None, :]
+        s = jnp.where(valid_i.reshape(B, 1, 1, T, C), s, MASK_VAL)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(valid_i.reshape(B, 1, 1, T, C), p, 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        if v_scale is not None:
+            p = p * jnp.moveaxis(vs_i, 1, 2)[:, :, None, None, :]
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgts,bskh->bkgth", p, v_i.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, T), MASK_VAL, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, T), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, T, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, validc, ksc, vsc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = jnp.moveaxis(o, 3, 1).reshape(B, T, Hq, dh)
+    return o.astype(q.dtype)
+
+
+def attend(q, k, v, qpos, kpos, *, window=None, causal=True,
+           k_scale=None, v_scale=None):
+    valid = _mask(qpos, kpos, window, causal)
+    S = k.shape[1]
+    if S > CHUNK_THRESHOLD and S % KV_CHUNK == 0:
+        return _attend_chunked(q, k, v, valid, k_scale, v_scale)
+    return _attend_direct(q, k, v, valid, k_scale, v_scale)
+
+
+# ---------------------------------------------------------------------------
+# Cache write
+# ---------------------------------------------------------------------------
+
+def _quant_kv(x):
+    """(B, T, H, dh) → (int8 values, (B, T, H) f32 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def write_cache(cache: dict, k, v, qpos, window=None) -> dict:
+    """Scatter T new K/V rows into the cache at per-row absolute positions."""
+    B, T = qpos.shape
+    bidx = jnp.arange(B)[:, None]
+    int8 = cache["k"].dtype == jnp.int8
+    if int8:
+        k, ks = _quant_kv(k)
+        v, vs = _quant_kv(v)
+    if "kpos" in cache:  # ring buffer
+        R = cache["k"].shape[1]
+        if T >= R:  # long prefill wraps the ring: only the last R rows survive
+            k, v, qpos = k[:, -R:], v[:, -R:], qpos[:, -R:]
+            if int8:
+                ks, vs = ks[:, -R:], vs[:, -R:]
+        slots = qpos % R
+    else:
+        slots = qpos
+    new = {
+        "k": cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype)),
+        "v": cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype)),
+    }
+    if int8:
+        new["k_scale"] = cache["k_scale"].at[bidx, slots].set(ks)
+        new["v_scale"] = cache["v_scale"].at[bidx, slots].set(vs)
+    if "kpos" in cache:
+        new["kpos"] = cache["kpos"].at[bidx, slots].set(qpos)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Public layer apply
+# ---------------------------------------------------------------------------
+
+def self_attention(
+    p: dict,
+    cfg,
+    x,                    # (B, T, D)
+    qpos,                 # (B, T) absolute positions
+    *,
+    cache: dict | None = None,
+    read_cache: bool = True,
+    window: int | None = None,
+    causal: bool = True,
+    collect=None,
+    path: str = "",
+):
+    """Returns (out (B,T,D), updated cache or None).
+
+    ``read_cache=False`` (prefill): K/V are still written into the cache,
+    but attention runs over the chunk's own keys — equivalent when the
+    cache is empty, and it avoids scatter-ordering hazards when a long
+    prompt wraps a ring buffer multiple times.
+    """
+    B, T, _ = x.shape
+    q = _lin(p["q"], x, collect, f"{path}/q").reshape(B, T, cfg.num_heads, cfg.head_dim)
+    k = _lin(p["k"], x, collect, f"{path}/k").reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    v = _lin(p["v"], x, collect, f"{path}/v").reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.use_rope:
+        q = apply_rope(q, qpos, cfg.rope_theta)
+        k = apply_rope(k, qpos, cfg.rope_theta)
+
+    if cache is not None:
+        cache = write_cache(cache, k, v, qpos, window)
+    if cache is not None and read_cache:
+        keys, values = cache["k"], cache["v"]
+        kpos = cache.get("kpos", jnp.arange(keys.shape[1], dtype=jnp.int32))
+        o = attend(q, keys, values, qpos, kpos, window=window, causal=causal,
+                   k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"))
+    else:
+        o = attend(q, k, v, qpos, qpos, window=window, causal=causal)
+
+    out = _lin(p["o"], o.reshape(B, T, cfg.q_dim), collect, f"{path}/o")
+    return out, cache
+
+
+def cross_attention(
+    p: dict,
+    cfg,
+    x,                    # (B, T, D)
+    *,
+    kv_embeds=None,       # (B, Sa, D) encoder / image embeddings (prefill)
+    cache: dict | None = None,   # {"ck","cv": (B, Sa, Hkv, dh)} if precomputed
+    collect=None,
+    path: str = "",
+):
+    """Cross-attention over modality embeddings.  Returns (out, cache)."""
+    B, T, _ = x.shape
+    q = _lin(p["q"], x, collect, f"{path}/q").reshape(B, T, cfg.num_heads, cfg.head_dim)
+    if cache is not None and "ck" in cache and kv_embeds is None:
+        k, v = cache["ck"], cache["cv"]
+    else:
+        Sa = kv_embeds.shape[1]
+        k = _lin(p["k"], kv_embeds, collect, f"{path}/k").reshape(B, Sa, cfg.num_kv_heads, cfg.head_dim)
+        v = _lin(p["v"], kv_embeds, collect, f"{path}/v").reshape(B, Sa, cfg.num_kv_heads, cfg.head_dim)
+        if cache is not None:
+            cache = {"ck": k, "cv": v}
+    qpos = jnp.zeros((B, T), jnp.int32)
+    kpos = jnp.zeros((k.shape[1],), jnp.int32)
+    o = attend(q, k, v, qpos, kpos, causal=False)
+    out = _lin(p["o"], o.reshape(B, T, cfg.q_dim), collect, f"{path}/o")
+    return out, cache

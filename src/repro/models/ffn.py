@@ -1,0 +1,36 @@
+"""Dense feed-forward network (gated or plain)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation
+from repro.models.linear import apply_linear, init_linear
+from repro.quant.smoothquant import record_act_stats
+
+
+def init_ffn(key, cfg, d_ff=None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    p = {
+        "up": init_linear(ku, cfg.d_model, d_ff, cfg.ffn_bias, cfg.dtype),
+        "down": init_linear(kd, d_ff, cfg.d_model, cfg.ffn_bias, cfg.dtype),
+    }
+    if cfg.glu:
+        p["gate"] = init_linear(kg, cfg.d_model, d_ff, cfg.ffn_bias, cfg.dtype)
+    return p
+
+
+def _lin(p, x, collect, path):
+    if collect is not None:
+        record_act_stats(collect, path, x)
+    return apply_linear(p, x)
+
+
+def apply_ffn(p: dict, cfg, x, collect=None, path: str = "") -> jax.Array:
+    up = _lin(p["up"], x, collect, f"{path}/up")
+    if "gate" in p:
+        h = activation(cfg, _lin(p["gate"], x, collect, f"{path}/gate")) * up
+    else:
+        h = activation(cfg, up)
+    return _lin(p["down"], h, collect, f"{path}/down")

@@ -1,0 +1,46 @@
+"""DenseGeneral linear layer with BF16 and W8A8 (quantized-verification) paths.
+
+Params are plain dicts (pytrees).  A linear is either:
+
+* BF16:  ``{"w": (din, dout) bf16 [, "b": (dout,)]}``
+* W8A8:  ``{"w_int8": (din, dout) int8, "w_scale": (dout,) f32,
+            "smooth": (din,) f32 [, "b": (dout,)]}``
+
+The W8A8 layout is what ``repro.quant.apply.quantize_params`` produces
+offline (paper §3.3 "Offline Weight Preparation"): weights are smoothed by
+``diag(s)^-1`` and symmetric-quantized per output channel.  At run time the
+activations are smoothed and dynamically quantized per token (Eq. 9), the
+GEMM runs in int8 and the result is dequantized by ``Δw·Δx`` (Eq. 10).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.kernels import ops as kops
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False, dtype=jnp.bfloat16) -> dict:
+    p = {"w": dense_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def is_quantized(p: dict) -> bool:
+    return "w_int8" in p or "w_int4" in p
+
+
+def apply_linear(p: dict, x: jax.Array) -> jax.Array:
+    """x: (..., d_in) -> (..., d_out). Dispatches on the param layout."""
+    if "w_int4" in p:
+        from repro.quant.int4 import w4a8_matmul
+        y = w4a8_matmul(x, p["w_int4"], p["w_scale"], p["smooth"])
+    elif "w_int8" in p:
+        y = kops.w8a8_matmul(x, p["w_int8"], p["w_scale"], p["smooth"])
+    else:
+        y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y

@@ -1,0 +1,102 @@
+"""Model facade: the public API the engine / trainer / launcher use.
+
+Two parameter layouts are supported and auto-detected by the ``"scan"``
+key in the param/cache pytree:
+
+* **canonical** (per-layer lists) — init, checkpointing, SmoothQuant
+  calibration, quantization, smoke tests, benchmarks;
+* **scan** (stacked layer groups, ``models/scan.py``) — production
+  lowering: one HLO copy per block kind, used by the multi-pod dry-run and
+  the launch drivers.  Convert with ``Model.to_scan(params)``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import scan as S
+from repro.models import transformer
+
+
+class Model:
+    """Thin functional facade over the transformer stack for one ModelConfig."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -- params ----------------------------------------------------------
+    def init_params(self, key) -> dict:
+        return transformer.init_params(key, self.cfg)
+
+    def to_scan(self, params_or_cache: dict) -> dict:
+        if "layers" in params_or_cache:
+            return S.stack_params(params_or_cache, self.cfg)
+        return S.stack_cache(params_or_cache, self.cfg)
+
+    def init_cache(self, batch: int, max_len: int,
+                   num_layers: Optional[int] = None, scan: bool = False) -> dict:
+        cache = transformer.init_cache(self.cfg, batch, max_len, num_layers)
+        return S.stack_cache(cache, self.cfg) if scan else cache
+
+    def _fwd(self, params, *args, **kw):
+        if "scan" in params:
+            kw.pop("collect", None)
+            kw.pop("num_layers", None)
+            return S.forward(params, self.cfg, *args, **kw)
+        return transformer.forward(params, self.cfg, *args, **kw)
+
+    # -- full forward (train / calibration / fidelity eval) ---------------
+    def forward(self, params, tokens, *, aux_embeds=None, collect=None,
+                num_layers=None, remat=False):
+        B = tokens.shape[0]
+        start = jnp.zeros((B,), jnp.int32)
+        kw = dict(aux_embeds=aux_embeds)
+        if "scan" in params:
+            kw["remat"] = remat
+        else:
+            kw.update(collect=collect, num_layers=num_layers)
+        logits, _, aux = self._fwd(params, tokens, start, **kw)
+        return logits, aux
+
+    # -- serving ----------------------------------------------------------
+    def prefill(self, params, cache, tokens, *, aux_embeds=None, num_layers=None):
+        """Process the prompt *except its last token* into the cache.
+
+        The last prompt token becomes the first token of the first verify
+        window.  Returns the updated cache.
+        """
+        B = tokens.shape[0]
+        start = jnp.zeros((B,), jnp.int32)
+        kw = dict(cache=cache, read_cache=False, aux_embeds=aux_embeds,
+                  need_logits=False)
+        if "scan" not in params:
+            kw["num_layers"] = num_layers
+        _, cache, _ = self._fwd(params, tokens, start, **kw)
+        return cache
+
+    def verify_step(self, params, cache, window_tokens, start, num_layers=None):
+        """Forward a speculative window (B, T=γ+1) at per-row ``start``.
+
+        Returns (logits, candidate cache); resolve with ``commit`` once
+        acceptance lengths are known.
+        """
+        kw = dict(cache=cache, collect_states=True)
+        if "scan" not in params:
+            kw["num_layers"] = num_layers
+        logits, cache, _ = self._fwd(params, window_tokens, start, **kw)
+        return logits, cache
+
+    def decode_step(self, params, cache, token, start, num_layers=None):
+        """Vanilla single-token decode: (B,1) → (logits (B,1,V), cache)."""
+        kw = dict(cache=cache)
+        if "scan" not in params:
+            kw["num_layers"] = num_layers
+        logits, cache, _ = self._fwd(params, token, start, **kw)
+        return logits, cache
+
+    def commit(self, cache, n_last, num_layers=None):
+        if "scan" in cache:
+            return S.commit_cache(self.cfg, cache, n_last)
+        return transformer.commit_cache(self.cfg, cache, n_last, num_layers)

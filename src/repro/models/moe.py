@@ -1,0 +1,271 @@
+"""Mixture-of-Experts FFN with TPU-native capacity-based dispatch.
+
+Top-k routing, capacity-factor dispatch via scatter/gather (the einsum/
+all-to-all pattern GSPMD shards expert-parallel over the ``model`` mesh
+axis), load-balance auxiliary loss, and an optional dense residual branch
+(arctic-480b).  The router always stays BF16/f32 (see quant/apply.py);
+expert weights are quantizable as batched ``(E, din, dout)`` tensors with
+per-expert per-channel scales.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation
+from repro.models.ffn import init_ffn, apply_ffn
+from repro.models.linear import dense_init
+from repro.quant.smoothquant import record_act_stats
+
+# Sharding hint for the dispatch buffer (E, C, D): installed by the launch
+# layer (expert-parallel "model" on E); None on single-device runs.
+_DISPATCH_SPEC = None
+
+
+def set_dispatch_spec(spec) -> None:
+    global _DISPATCH_SPEC
+    _DISPATCH_SPEC = spec
+
+
+def _constrain(xe):
+    if _DISPATCH_SPEC is not None:
+        return jax.lax.with_sharding_constraint(xe, _DISPATCH_SPEC)
+    return xe
+
+
+# shard_map expert-parallel mode (§Perf iteration: "moe-shardmap").  When
+# the launch layer installs (mesh, dp_axes, fsdp) here, apply_moe routes
+# through an explicit per-data-shard dispatch:
+#   * routing/capacity are computed locally per data shard (tokens never
+#     cross the data axis for dispatch — experts are replicated over data
+#     up to FSDP storage, which is un-gathered with one tiled all-gather);
+#   * each model shard serves only its E/model_size experts and the
+#     partial combine is a single psum over "model" — the same collective
+#     a dense row-parallel FFN needs.
+# GSPMD's auto-partitioned dispatch instead all-reduces the full f32
+# (E_loc, C, D) buffer over the data axis (measured: the dominant term).
+_SHARD_MAP = None  # (mesh, dp_axes: tuple, fsdp: bool)
+
+
+def set_shard_map(mesh, dp_axes, fsdp: bool) -> None:
+    global _SHARD_MAP
+    _SHARD_MAP = (mesh, tuple(dp_axes), fsdp) if mesh is not None else None
+
+
+def init_moe(key, cfg) -> dict:
+    kr, kg, ku, kd, kres = jax.random.split(key, 5)
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    p = {
+        "router": {"w": dense_init(kr, (D, E), jnp.float32)},
+        "up": {"w": dense_init(ku, (E, D, F), cfg.dtype)},
+        "down": {"w": dense_init(kd, (E, F, D), cfg.dtype)},
+    }
+    if cfg.glu:
+        p["gate"] = {"w": dense_init(kg, (E, D, F), cfg.dtype)}
+    if cfg.dense_residual:
+        p["dense"] = init_ffn(kres, cfg, cfg.d_ff)
+    return p
+
+
+def _expert_linear(p: dict, x: jax.Array, collect=None, path: str = "") -> jax.Array:
+    """Batched expert GEMM: x (E, C, din) → (E, C, dout). BF16 or W8A8."""
+    if collect is not None:
+        record_act_stats(collect, path, x.reshape(-1, x.shape[-1]))
+    if "w_int8" in p:
+        xs = x.astype(jnp.float32) * p["smooth"]
+        dx = jnp.maximum(jnp.max(jnp.abs(xs), axis=-1), 1e-8) / 127.0
+        xq = jnp.clip(jnp.round(xs / dx[..., None]), -127, 127).astype(jnp.int8)
+        acc = jax.lax.dot_general(
+            xq, p["w_int8"],
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        )
+        y = acc.astype(jnp.float32) * dx[..., None] * p["w_scale"][:, None, :]
+        return y.astype(x.dtype)
+    return jnp.einsum("ecd,edf->ecf", x, p["w"].astype(x.dtype))
+
+
+def capacity(n_tokens: int, num_experts: int, k: int, factor: float) -> int:
+    return max(1, min(n_tokens * k,
+                      math.ceil(n_tokens * k * factor / num_experts)))
+
+
+def _rank_positions(ids: jax.Array, n_bins: int) -> jax.Array:
+    """Position of each element within its bin (sort-based, O(n log n)).
+    ``ids`` may contain the sentinel value ``n_bins`` for masked slots."""
+    nK = ids.shape[0]
+    order = jnp.argsort(ids, stable=True)
+    counts = jnp.zeros((n_bins + 1,), jnp.int32).at[ids].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    pos_sorted = jnp.arange(nK, dtype=jnp.int32) - starts[ids[order]]
+    return jnp.zeros((nK,), jnp.int32).at[order].set(pos_sorted)
+
+
+def _apply_moe_shard_map(p: dict, cfg, x):
+    """Explicit expert-parallel MoE (see _SHARD_MAP note above)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh, dp, fsdp = _SHARD_MAP
+    B, T, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    msize = mesh.shape["model"]
+    dpsize = math.prod(mesh.shape[a] for a in dp) if dp else 1
+    if E % msize or (dp and B % dpsize):
+        return None  # fall back to the GSPMD path
+    E_loc = E // msize
+    dp_ok = dp if (dp and B % dpsize == 0) else None
+
+    p_moe = {k: v for k, v in p.items() if k != "dense"}
+
+    def leaf_spec(path_keys, leaf):
+        path = "/".join(str(getattr(k, "key", k)) for k in path_keys)
+        if "router" in path:
+            return P(*([None] * leaf.ndim))
+        if "w_scale" in path:
+            return P("model", *([None] * (leaf.ndim - 1)))
+        if "smooth" in path or leaf.ndim <= 1:
+            return P(*([None] * leaf.ndim))
+        # expert tensors (E, din, dout): E on model, din FSDP over the data
+        # axis (dp[-1]; multi-pod keeps "pod" for pure DP, matching the
+        # fsdp=("data",) rule in launch/sharding.py)
+        shard1 = dp[-1] if (fsdp and dp and leaf.shape[1] % mesh.shape[dp[-1]] == 0) else None
+        return P("model", shard1, None)
+
+    pspecs = jax.tree_util.tree_map_with_path(leaf_spec, p_moe)
+    gathered = jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: leaf_spec(kp, leaf) != P("model", None, None)
+        and leaf.ndim == 3, p_moe)
+
+    def body(pp, xl):
+        Bl, T_, _ = xl.shape
+        n = Bl * T_
+        xf = xl.reshape(n, D)
+        logits = xf.astype(jnp.float32) @ pp["router"]["w"]
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, eidx = jax.lax.top_k(probs, K)
+        gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+        e0 = jax.lax.axis_index("model").astype(jnp.int32) * E_loc
+        C = capacity(n, E, K, cfg.moe_capacity_factor)
+        e_flat = eidx.reshape(-1)
+        local = (e_flat >= e0) & (e_flat < e0 + E_loc)
+        ids = jnp.where(local, e_flat - e0, E_loc)
+        pos = _rank_positions(ids, E_loc)
+        keep = local & (pos < C)
+        slot_ids = jnp.where(keep, ids * C + pos, E_loc * C)
+        token_idx = jnp.arange(n * K, dtype=jnp.int32) // K
+        slot_tok = jnp.full((E_loc * C,), n, jnp.int32).at[slot_ids].set(
+            token_idx, mode="drop")
+        x_pad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], axis=0)
+        xe = x_pad[slot_tok].reshape(E_loc, C, D)
+
+        def weights(name):
+            q = dict(pp[name])
+            wk = "w_int8" if "w_int8" in q else "w"
+            if gathered[name][wk] and dp:
+                q[wk] = jax.lax.all_gather(q[wk], dp[-1], axis=1, tiled=True)
+            return q
+
+        up = _expert_linear(weights("up"), xe)
+        if "gate" in pp:
+            h = activation(cfg, _expert_linear(weights("gate"), xe)) * up
+        else:
+            h = activation(cfg, up)
+        ye = _expert_linear(weights("down"), h)                   # (E_loc, C, D)
+
+        ye_pad = jnp.concatenate(
+            [ye.reshape(E_loc * C, D), jnp.zeros((1, D), ye.dtype)], axis=0)
+        y_slots = ye_pad[jnp.minimum(slot_ids, E_loc * C)].reshape(n, K, D)
+        w_gate = (gates * keep.reshape(n, K)).astype(y_slots.dtype)
+        y = jnp.sum(y_slots * w_gate[..., None], axis=1)
+        y = jax.lax.psum(y, "model")                              # combine
+
+        f = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+        Pm = jnp.mean(probs, axis=0)
+        aux = E * jnp.sum(f * Pm) * cfg.router_aux_coef
+        if dp:
+            aux = jax.lax.pmean(aux, dp)
+        return y.reshape(Bl, T_, D).astype(xl.dtype), aux
+
+    y, aux = shard_map(
+        body, mesh=mesh,
+        in_specs=(pspecs, P(dp_ok, None, None)),
+        out_specs=(P(dp_ok, None, None), P()),
+        check_rep=False,
+    )(p_moe, x)
+
+    if "dense" in p:
+        y = y + apply_ffn(p["dense"], cfg, x)
+    return y, aux
+
+
+def apply_moe(p: dict, cfg, x, collect=None, path: str = ""):
+    """x: (B, T, D) → (y (B,T,D), aux_loss scalar)."""
+    if _SHARD_MAP is not None and collect is None:
+        out = _apply_moe_shard_map(p, cfg, x)
+        if out is not None:
+            return out
+    B, T, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    n = B * T
+    xf = x.reshape(n, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)  # (n, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, K)                                     # (n, K)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert queue — sort-based
+    # ranking, O(nK log nK).  (The naive one-hot/cumsum ranking is O(nK·E)
+    # with an (nK, E) cumsum intermediate; on moonshot train_4k it accounted
+    # for >10× the model FLOPs — see EXPERIMENTS.md §Perf iteration 1.)
+    e_flat = eidx.reshape(-1)                                                 # (nK,)
+    order = jnp.argsort(e_flat, stable=True)
+    counts = jnp.zeros((E,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    pos_sorted = jnp.arange(n * K, dtype=jnp.int32) - starts[e_flat[order]]
+    pos = jnp.zeros((n * K,), jnp.int32).at[order].set(pos_sorted)
+    pos = pos.reshape(n, K)
+    C = capacity(n, E, K, cfg.moe_capacity_factor)
+    keep = pos < C
+
+    # dispatch: gather-based.  Scatter only a tiny int32 slot→token map
+    # (the (E·C, D) scatter-ADD of activations forced an all-reduce of the
+    # full f32 dispatch buffer across the data axis — §Perf iteration 2);
+    # the activations themselves move through a gather, which GSPMD lowers
+    # to all-to-all-style traffic proportional to the tokens actually sent.
+    keep_flat = keep.reshape(-1)
+    p_flat = jnp.where(keep_flat, pos.reshape(-1), C - 1)
+    slot_ids = jnp.where(keep_flat, e_flat * C + p_flat, E * C)       # OOB = drop
+    token_idx = (jnp.arange(n * K, dtype=jnp.int32) // K)
+    slot_tok = jnp.full((E * C,), n, jnp.int32).at[slot_ids].set(
+        token_idx, mode="drop")                                       # (E·C,)
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], axis=0)
+    xe = _constrain(x_pad[slot_tok].reshape(E, C, D))
+
+    # expert FFN
+    up = _expert_linear(p["up"], xe, collect, f"{path}/up")
+    if "gate" in p:
+        h = activation(cfg, _expert_linear(p["gate"], xe, collect, f"{path}/gate")) * up
+    else:
+        h = activation(cfg, up)
+    ye = _expert_linear(p["down"], h, collect, f"{path}/down")                # (E, C, D)
+
+    # combine: gather each (token, slot) result, weight by gate
+    y_slots = ye[e_flat, p_flat].reshape(n, K, D)
+    y = jnp.sum(y_slots * (gates * keep).astype(y_slots.dtype)[..., None], axis=1)
+    y = y.reshape(B, T, D)
+
+    if "dense" in p:  # arctic-style dense residual branch
+        y = y + apply_ffn(p["dense"], cfg, x, collect, f"{path}/dense")
+
+    # load-balance aux loss (Switch-style): E * Σ_e f_e · P_e
+    f = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    P = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * P) * cfg.router_aux_coef
+    return y, aux

@@ -1,0 +1,226 @@
+"""Scanned-layer execution (MaxText-style) — same math as the python-loop
+stack in ``transformer.py`` but with ``jax.lax.scan`` over layer groups, so
+the HLO contains ONE copy of each distinct block kind.  This is what makes
+the 80-combination production dry-run compile in seconds instead of
+minutes, and is the layout a real deployment would use.
+
+Layer stacks are grouped by their repeating *pattern*:
+
+  dense/moe/ssm/audio : pattern [kind],            n = L
+  vlm (llama-3.2)     : pattern [dense×4, cross],  n = L/5
+  hybrid (zamba2)     : pattern [ssm×6] + shared,  n = L/6
+
+``stack_params`` converts the canonical per-layer list layout (used by
+init / checkpoint / calibration / quantization) into stacked pytrees with
+a leading group dim; caches are stacked the same way.  Quantize first,
+then stack — per-layer smoothing vectors stay exact.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_norm
+from repro.models.linear import apply_linear
+from repro.models.ssm import commit_ssm_cache
+from repro.models import transformer as T
+from repro.quant.smoothquant import record_act_stats
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding hint: XLA's sharding propagation into while-loop
+# bodies can drop the batch sharding of the layer-carry (measured: the
+# 4k-train body all-gathered the FULL global batch per layer).  The launch
+# layer installs a PartitionSpec here; the scan body re-constrains its
+# carry every iteration.
+# ---------------------------------------------------------------------------
+
+_ACT_SPEC = None
+
+
+def set_activation_spec(spec) -> None:
+    """spec: jax.sharding.PartitionSpec for (B, T, D) activations, or None."""
+    global _ACT_SPEC
+    _ACT_SPEC = spec
+
+
+def _constrain(x):
+    if _ACT_SPEC is not None:
+        return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+    return x
+
+
+def scan_pattern(cfg) -> Tuple[List[str], int, bool]:
+    """(pattern kinds, n_groups, has_shared_block)."""
+    kinds = T.layer_kinds(cfg)
+    L = cfg.num_layers
+    if cfg.arch_type == "hybrid" and cfg.attn_every:
+        p = cfg.attn_every
+        assert L % p == 0, (L, p)
+        return kinds[:p], L // p, True
+    if cfg.arch_type == "vlm" and cfg.cross_attn_every:
+        p = cfg.cross_attn_every
+        assert L % p == 0, (L, p)
+        return kinds[:p], L // p, False
+    return [kinds[0]], L, False
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stack_params(params: dict, cfg) -> dict:
+    """Canonical (per-layer list) → scan layout."""
+    pattern, n, _ = scan_pattern(cfg)
+    P = len(pattern)
+    out = {k: v for k, v in params.items() if k != "layers"}
+    out["scan"] = [
+        _stack([params["layers"][g * P + j] for g in range(n)]) for j in range(P)
+    ]
+    return out
+
+
+def stack_cache(cache: dict, cfg) -> dict:
+    pattern, n, shared = scan_pattern(cfg)
+    P = len(pattern)
+    out = {k: v for k, v in cache.items() if k not in ("layers", "shared")}
+    out["scan"] = [
+        _stack([cache["layers"][g * P + j] for g in range(n)]) for j in range(P)
+    ]
+    if shared and "shared" in cache:
+        out["shared"] = _stack(cache["shared"])
+    return out
+
+
+def unstack_cache(cache: dict, cfg) -> dict:
+    """Scan layout → canonical list layout (tests / debugging)."""
+    pattern, n, shared = scan_pattern(cfg)
+    P = len(pattern)
+    layers: list = [None] * (n * P)
+    for j, grp in enumerate(cache["scan"]):
+        for g in range(n):
+            layers[g * P + j] = jax.tree.map(lambda x: x[g], grp)
+    out = {"layers": layers}
+    if shared and "shared" in cache:
+        sh = cache["shared"]
+        n_apps = jax.tree.leaves(sh)[0].shape[0]
+        out["shared"] = [jax.tree.map(lambda x: x[a], sh) for a in range(n_apps)]
+    return out
+
+
+def forward(
+    params: dict,
+    cfg,
+    tokens: jax.Array,
+    start: jax.Array,
+    *,
+    cache: Optional[dict] = None,
+    read_cache: bool = True,
+    collect_states: bool = False,
+    aux_embeds: Optional[jax.Array] = None,
+    remat: bool = False,
+    need_logits: bool = True,
+):
+    """Scanned twin of ``transformer.forward`` (no calibration collector —
+    calibrate in the canonical layout).  Returns (logits, new_cache, aux)."""
+    B, T_ = tokens.shape
+    qpos = start[:, None] + jnp.arange(T_, dtype=jnp.int32)[None, :]
+    pattern, n, shared = scan_pattern(cfg)
+
+    x = params["embed"]["w"][tokens].astype(cfg.dtype)
+
+    enc_out = None
+    if cfg.encoder_layers and aux_embeds is not None:
+        enc_out = _encode_scan(params["encoder"], cfg, aux_embeds)
+    elif aux_embeds is not None:
+        enc_out = aux_embeds.astype(cfg.dtype)
+
+    sp = params.get("shared_attn")
+
+    def body(carry, xs):
+        x, aux = carry
+        x = _constrain(x)
+        blocks, caches = xs["blocks"], xs["caches"]
+        new_caches = []
+        for j, kind in enumerate(pattern):
+            x, lc, a = T._apply_block(
+                kind, blocks[j], cfg, x, qpos, caches[j],
+                read_cache=read_cache, collect_states=collect_states,
+                enc_out=enc_out,
+            )
+            aux = aux + a
+            new_caches.append(lc)
+        scache = None
+        if shared:
+            x, scache, _ = T._apply_shared(sp, cfg, x, qpos, xs.get("shared"),
+                                           read_cache=read_cache)
+        ys = {"caches": new_caches}
+        if shared:
+            ys["shared"] = scache
+        return (x, aux), ys
+
+    if cache is None:
+        def body_nc(carry, blocks):
+            carry, _ = body(carry, {"blocks": blocks,
+                                    "caches": [None] * len(pattern)})
+            return carry, None
+
+        if remat:
+            body_nc = jax.checkpoint(body_nc)
+        (x, aux_total), _ = jax.lax.scan(body_nc, (x, jnp.zeros((), jnp.float32)),
+                                         params["scan"])
+        new_cache = None
+    else:
+        if remat:
+            body = jax.checkpoint(body)
+        xs = {"blocks": params["scan"], "caches": cache["scan"]}
+        if shared:
+            xs["shared"] = cache["shared"]
+        (x, aux_total), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+        new_cache = {"scan": ys["caches"]}
+        if shared:
+            new_cache["shared"] = ys["shared"]
+
+    logits = None
+    if need_logits:
+        x = apply_norm(cfg, params["final_norm"], x)
+        if cfg.tie_embeddings:
+            logits = x.astype(jnp.float32) @ params["embed"]["w"].astype(jnp.float32).T
+        else:
+            logits = apply_linear(params["lm_head"], x).astype(jnp.float32)
+    return logits, new_cache, aux_total
+
+
+def _encode_scan(enc: dict, cfg, embeds: jax.Array) -> jax.Array:
+    B, S, _ = embeds.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    x = embeds.astype(cfg.dtype)
+    stacked = _stack(enc["layers"])
+
+    def body(x, blk):
+        from repro.models.attention import self_attention
+        from repro.models.ffn import apply_ffn
+        h, _ = self_attention(blk["attn"], cfg,
+                              apply_norm(cfg, blk["attn_norm"], x), pos, causal=False)
+        x = x + h
+        x = x + apply_ffn(blk["ffn"], cfg, apply_norm(cfg, blk["ffn_norm"], x))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, stacked)
+    return apply_norm(cfg, enc["norm"], x)
+
+
+def commit_cache(cfg, cache: dict, n_last: jax.Array) -> dict:
+    pattern, n, shared = scan_pattern(cfg)
+    groups = []
+    for j, kind in enumerate(pattern):
+        grp = cache["scan"][j]
+        if kind == "ssm" and grp is not None and "states_all" in grp:
+            grp = jax.vmap(commit_ssm_cache, in_axes=(0, None))(grp, n_last)
+        groups.append(grp)
+    out = {"scan": groups}
+    if shared and "shared" in cache:
+        out["shared"] = cache["shared"]
+    return out

@@ -1,0 +1,218 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Three execution paths share one parameterization:
+
+* **chunked** (train / prefill): the SSD algorithm — quadratic
+  attention-like intra-chunk term + an inter-chunk recurrence carried by
+  ``lax.scan`` over chunk states.  O(T·Q) work, TPU-friendly (the intra
+  term is an MXU matmul per chunk).
+* **sequential** (decode / verify): step recurrence
+  ``h_t = a_t·h_{t-1} + dt_t·(B_t ⊗ x_t)``; optionally collects the state
+  after *every* step so speculative decoding can roll back to the last
+  accepted token (cache commit is a gather — no recompute).
+* cache: ``{"state": (B,H,P,N) f32, "conv": (B, K-1, di+2N)}`` — the SSD
+  state plus the depthwise-conv tail window.
+
+The in/out projections are quantizable linears (Quasar applies to them);
+the recurrent state itself stays f32 — quantizing the recurrence would
+compound error across thousands of steps (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rms_norm
+from repro.models.linear import apply_linear, init_linear
+from repro.quant.smoothquant import record_act_stats
+
+D_CONV = 4  # depthwise conv width
+
+
+def init_ssm(key, cfg) -> dict:
+    ki, ko, kc, ka, kd = jax.random.split(key, 5)
+    D, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    d_in_proj = 2 * di + 2 * N + H
+    conv_dim = di + 2 * N
+    return {
+        "in_proj": init_linear(ki, D, d_in_proj, False, cfg.dtype),
+        "out_proj": init_linear(ko, di, D, False, cfg.dtype),
+        "conv_w": (jax.random.normal(kc, (D_CONV, conv_dim), jnp.float32) * 0.2).astype(cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),  # softplus^-1
+        "norm": {"scale": jnp.ones((di,), jnp.float32)},
+    }
+
+
+def init_ssm_cache(cfg, batch: int) -> dict:
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, D_CONV - 1, di + 2 * N), cfg.dtype),
+    }
+
+
+def _lin(p, x, collect, path):
+    if collect is not None:
+        record_act_stats(collect, path, x)
+    return apply_linear(p, x)
+
+
+def _preprocess(p, cfg, u, conv_state, collect, path):
+    """Shared projections: returns (z, x, Bm, Cm, dt, xBC_pad)."""
+    B, T, _ = u.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = _lin(p["in_proj"], u, collect, f"{path}/in_proj")
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * N]
+    dt_raw = zxbcdt[..., 2 * di + 2 * N :].astype(jnp.float32)            # (B,T,H)
+
+    # causal depthwise conv of width 4 over time (with cached tail)
+    if conv_state is None:
+        conv_state = jnp.zeros((B, D_CONV - 1, di + 2 * N), xBC.dtype)
+    xBC_pad = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)  # (B, T+3, C)
+    w = p["conv_w"].astype(jnp.float32)
+    conv = sum(
+        xBC_pad[:, i : i + T].astype(jnp.float32) * w[i] for i in range(D_CONV)
+    )
+    xBC_c = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32)).astype(u.dtype)
+
+    x = xBC_c[..., :di].reshape(B, T, H, P)
+    Bm = xBC_c[..., di : di + N].astype(jnp.float32)                      # (B,T,N)
+    Cm = xBC_c[..., di + N :].astype(jnp.float32)                         # (B,T,N)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])                           # (B,T,H)
+    return z, x, Bm, Cm, dt, xBC_pad
+
+
+def _ssd_sequential(x, Bm, Cm, dt, A, h0, collect_states: bool):
+    """Step recurrence. x (B,T,H,P) f32; returns (y, h_T or states_all)."""
+    a = jnp.exp(dt * (-A))                                                # (B,T,H)
+
+    def step(h, inp):
+        x_t, B_t, C_t, dt_t, a_t = inp
+        h = a_t[..., None, None] * h + (dt_t[..., None] * x_t)[..., None] * B_t[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, (y, h if collect_states else 0.0)
+
+    xs = (
+        jnp.moveaxis(x, 1, 0), jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0),
+        jnp.moveaxis(dt, 1, 0), jnp.moveaxis(a, 1, 0),
+    )
+    hT, (ys, hs) = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                                            # (B,T,H,P)
+    states = jnp.moveaxis(hs, 0, 1) if collect_states else hT
+    return y, states
+
+
+def _ssd_chunked(x, Bm, Cm, dt, A, h0, chunk: int):
+    """SSD chunked algorithm. All f32. Returns (y (B,T,H,P), h_T)."""
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    Tp = -(-T // Q) * Q
+    if Tp != T:  # pad: dt=0 ⇒ a=1, x=0 ⇒ state untouched
+        pad = Tp - T
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = Tp // Q
+    xc = x.reshape(B, nc, Q, H, P)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+    dtc = dt.reshape(B, nc, Q, H)
+    alog = dtc * (-A)                                                     # (B,nc,Q,H)
+    cs = jnp.cumsum(alog, axis=2)                                         # ℓ_t (inclusive)
+
+    # intra-chunk (quadratic, attention-like)
+    decay = cs[:, :, :, None, :] - cs[:, :, None, :, :]                   # ℓ_t - ℓ_s (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    att = jnp.where(tri[None, None, :, :, None], jnp.exp(decay), 0.0)
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)                            # (B,nc,t,s)
+    w = att * cb[..., None] * dtc[:, :, None, :, :]                       # (B,nc,t,s,H)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", w, xc)
+
+    # chunk states
+    last = cs[:, :, -1:, :]                                               # ℓ_Q
+    sdecay = jnp.exp(last - cs)                                           # (B,nc,Q,H)
+    S = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", sdecay * dtc, xc, Bc)        # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    a_chunk = jnp.exp(last[:, :, 0, :])                                   # (B,nc,H)
+
+    def step(h, inp):
+        S_c, a_c = inp
+        h_out = h                                                         # state before this chunk
+        h = a_c[..., None, None] * h + S_c
+        return h, h_out
+
+    hT, h_before = jax.lax.scan(
+        step, h0, (jnp.moveaxis(S, 1, 0), jnp.moveaxis(a_chunk, 1, 0))
+    )
+    h_before = jnp.moveaxis(h_before, 0, 1)                               # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp", jnp.exp(cs), Cc, h_before)
+
+    y = (y_intra + y_inter).reshape(B, Tp, H, P)[:, :T]
+    return y, hT
+
+
+def apply_ssm(
+    p: dict,
+    cfg,
+    u,                        # (B, T, D)
+    *,
+    cache: dict | None = None,
+    collect_states: bool = False,
+    collect=None,
+    path: str = "",
+):
+    """Returns (out (B,T,D), cache').
+
+    With ``collect_states=True`` (speculative verify) the returned cache is
+    a *candidate*: ``{"states_all": (B,T,H,P,N), "xbc_pad": (B,T+3,·)}`` to
+    be resolved by :func:`commit_ssm_cache`.
+    """
+    B, T, D = u.shape
+    di = cfg.d_inner
+    conv_state = cache["conv"] if cache is not None else None
+    h0 = cache["state"] if cache is not None else jnp.zeros(
+        (B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+    )
+    z, x, Bm, Cm, dt, xBC_pad = _preprocess(p, cfg, u, conv_state, collect, path)
+    A = jnp.exp(p["A_log"])                                               # (H,) > 0
+    xf = x.astype(jnp.float32)
+
+    if T <= 16:
+        y, states = _ssd_sequential(xf, Bm, Cm, dt, A, h0, collect_states)
+    else:
+        y, states = _ssd_chunked(xf, Bm, Cm, dt, A, h0, cfg.ssm_chunk)
+        if collect_states:
+            raise ValueError("collect_states requires the sequential path (T<=16)")
+
+    y = y + p["D_skip"][None, None, :, None] * xf                         # skip connection
+    y = y.reshape(B, T, di)
+    y = rms_norm(y.astype(u.dtype), p["norm"]["scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = _lin(p["out_proj"], y, collect, f"{path}/out_proj")
+
+    new_cache = None
+    if cache is not None:
+        if collect_states:
+            new_cache = {"states_all": states, "xbc_pad": xBC_pad}
+        else:
+            new_cache = {"state": states, "conv": xBC_pad[:, -(D_CONV - 1):]}
+    return out, new_cache
+
+
+def commit_ssm_cache(cand: dict, n_last: jax.Array) -> dict:
+    """Resolve a verify candidate: keep the state after window token
+    ``n_last`` (per row) and the conv tail ending at that token."""
+    B = n_last.shape[0]
+    bidx = jnp.arange(B)
+    state = cand["states_all"][bidx, n_last]                              # (B,H,P,N)
+    # conv tail = raw xBC inputs for tokens n-2..n  (pad offset: token t ↔ slot t+3)
+    idx = n_last[:, None] + 1 + jnp.arange(D_CONV - 1)[None, :]           # (B,3)
+    conv = jnp.take_along_axis(cand["xbc_pad"], idx[:, :, None], axis=1)
+    return {"state": state, "conv": conv}

@@ -1,0 +1,362 @@
+"""Composable decoder stack covering all six assigned arch families.
+
+Layer kinds are derived from the :class:`ModelConfig`:
+
+* ``dense``  — self-attn + FFN                     (stablelm, smollm, codeqwen)
+* ``moe``    — self-attn + MoE FFN (+ dense residual)  (phi3.5, arctic, moonshot)
+* ``ssm``    — Mamba2/SSD block                    (mamba2; zamba2 backbone)
+* ``cross``  — cross-attn + FFN every k-th layer   (llama-3.2-vision)
+* ``audio``  — self-attn + cross-attn + FFN        (whisper decoder)
+
+zamba2 (hybrid) additionally applies a *shared* attention block (single
+param set) after every ``attn_every``-th SSM layer, each application with
+its own KV cache slot.  whisper gets a bidirectional encoder stack whose
+output feeds the decoder cross-attention.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    cross_attention,
+    init_attention,
+    init_attn_cache,
+    self_attention,
+)
+from repro.models.common import apply_norm, embed_init, init_norm
+from repro.models.ffn import apply_ffn, init_ffn
+from repro.models.linear import apply_linear, init_linear
+from repro.models.moe import apply_moe, init_moe
+from repro.models.ssm import apply_ssm, commit_ssm_cache, init_ssm, init_ssm_cache
+from repro.quant.smoothquant import record_act_stats
+
+
+# ---------------------------------------------------------------------------
+# Layer census
+# ---------------------------------------------------------------------------
+
+def layer_kinds(cfg) -> List[str]:
+    kinds = []
+    for i in range(cfg.num_layers):
+        if cfg.arch_type in ("ssm", "hybrid"):
+            kinds.append("ssm")
+        elif cfg.arch_type == "audio":
+            kinds.append("audio")
+        elif cfg.cross_attn_every and (i + 1) % cfg.cross_attn_every == 0:
+            kinds.append("cross")
+        elif cfg.is_moe:
+            kinds.append("moe")
+        else:
+            kinds.append("dense")
+    return kinds
+
+
+def shared_attn_positions(cfg) -> List[int]:
+    if cfg.arch_type != "hybrid" or not cfg.attn_every:
+        return []
+    return [i for i in range(cfg.num_layers) if (i + 1) % cfg.attn_every == 0]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {"norm": init_norm(cfg, cfg.d_model), "ssm": init_ssm(ks[0], cfg)}
+    if kind == "cross":
+        return {
+            "attn_norm": init_norm(cfg, cfg.d_model),
+            "cross": init_attention(ks[0], cfg, cross=True),
+            "gate_attn": jnp.zeros((), jnp.float32),  # llama-3.2 tanh gate
+            "ffn_norm": init_norm(cfg, cfg.d_model),
+            "ffn": init_ffn(ks[1], cfg),
+            "gate_ffn": jnp.zeros((), jnp.float32),
+        }
+    if kind == "audio":
+        return {
+            "attn_norm": init_norm(cfg, cfg.d_model),
+            "attn": init_attention(ks[0], cfg),
+            "cross_norm": init_norm(cfg, cfg.d_model),
+            "cross": init_attention(ks[1], cfg, cross=True),
+            "ffn_norm": init_norm(cfg, cfg.d_model),
+            "ffn": init_ffn(ks[2], cfg),
+        }
+    block = {
+        "attn_norm": init_norm(cfg, cfg.d_model),
+        "attn": init_attention(ks[0], cfg),
+        "ffn_norm": init_norm(cfg, cfg.d_model),
+    }
+    if kind == "moe":
+        block["moe"] = init_moe(ks[1], cfg)
+    else:
+        block["ffn"] = init_ffn(ks[1], cfg)
+    return block
+
+
+def init_params(key, cfg) -> dict:
+    kinds = layer_kinds(cfg)
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    params = {
+        "embed": {"w": embed_init(keys[-1], (cfg.vocab_size, cfg.d_model), cfg.dtype)},
+        "layers": [_init_block(keys[i], cfg, kinds[i]) for i in range(cfg.num_layers)],
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(keys[-2], cfg.d_model, cfg.vocab_size, False, cfg.dtype)
+    if shared_attn_positions(cfg):
+        params["shared_attn"] = _init_block(keys[-3], cfg, "dense")
+    if cfg.encoder_layers:
+        ek = jax.random.split(keys[-4], cfg.encoder_layers + 1)
+        params["encoder"] = {
+            "layers": [_init_block(ek[i], cfg, "dense") for i in range(cfg.encoder_layers)],
+            "norm": init_norm(cfg, cfg.d_model),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, num_layers: Optional[int] = None) -> dict:
+    """Allocate the serving cache pytree.  ``max_len`` is rounded up so the
+    chunked-attention path (multiples of 1024) always applies to big buffers."""
+    max_len = -(-max_len // 1024) * 1024 if max_len > 4096 else -(-max_len // 128) * 128
+    kinds = layer_kinds(cfg)[: num_layers or cfg.num_layers]
+    w = cfg.sliding_window
+    layers = []
+    for kind in kinds:
+        if kind == "ssm":
+            layers.append(init_ssm_cache(cfg, batch))
+        elif kind == "cross":
+            layers.append({
+                "ck": jnp.zeros((batch, cfg.num_image_tokens, cfg.num_kv_heads, cfg.head_dim), cfg.dtype),
+                "cv": jnp.zeros((batch, cfg.num_image_tokens, cfg.num_kv_heads, cfg.head_dim), cfg.dtype),
+            })
+        elif kind == "audio":
+            layers.append({
+                "self": init_attn_cache(cfg, batch, max_len, w),
+                "ck": jnp.zeros((batch, cfg.num_audio_frames, cfg.num_kv_heads, cfg.head_dim), cfg.dtype),
+                "cv": jnp.zeros((batch, cfg.num_audio_frames, cfg.num_kv_heads, cfg.head_dim), cfg.dtype),
+            })
+        else:
+            layers.append(init_attn_cache(cfg, batch, max_len, w))
+    cache = {"layers": layers}
+    shared = shared_attn_positions(cfg)
+    if shared and (num_layers is None or any(i < num_layers for i in shared)):
+        cache["shared"] = [
+            init_attn_cache(cfg, batch, max_len, w) for i in shared
+            if num_layers is None or i < num_layers
+        ]
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _maybe(c, key, default=None):
+    return c[key] if (c is not None and key in c) else default
+
+
+def _apply_block(
+    kind: str,
+    blk: dict,
+    cfg,
+    x,
+    qpos,
+    lcache,
+    *,
+    read_cache: bool = True,
+    collect_states: bool = False,
+    enc_out=None,
+    collect=None,
+    path: str = "",
+):
+    """One decoder block of any kind.  Returns (x, new_cache, aux)."""
+    w = cfg.sliding_window
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h, lcache = apply_ssm(
+            blk["ssm"], cfg, apply_norm(cfg, blk["norm"], x),
+            cache=lcache, collect_states=collect_states,
+            collect=collect, path=f"{path}/ssm",
+        )
+        x = x + h
+    elif kind == "cross":
+        h, lcache = cross_attention(
+            blk["cross"], cfg, apply_norm(cfg, blk["attn_norm"], x),
+            kv_embeds=enc_out, cache=lcache, collect=collect, path=f"{path}/cross",
+        )
+        x = x + jnp.tanh(blk["gate_attn"]).astype(x.dtype) * h
+        h = apply_ffn(blk["ffn"], cfg, apply_norm(cfg, blk["ffn_norm"], x),
+                      collect, f"{path}/ffn")
+        x = x + jnp.tanh(blk["gate_ffn"]).astype(x.dtype) * h
+    elif kind == "audio":
+        sc = _maybe(lcache, "self")
+        h, sc = self_attention(
+            blk["attn"], cfg, apply_norm(cfg, blk["attn_norm"], x), qpos,
+            cache=sc, read_cache=read_cache, window=w,
+            collect=collect, path=f"{path}/attn",
+        )
+        x = x + h
+        ccache = {"ck": lcache["ck"], "cv": lcache["cv"]} if lcache is not None else None
+        h, ccache = cross_attention(
+            blk["cross"], cfg, apply_norm(cfg, blk["cross_norm"], x),
+            kv_embeds=enc_out, cache=ccache, collect=collect, path=f"{path}/cross",
+        )
+        x = x + h
+        x = x + apply_ffn(blk["ffn"], cfg, apply_norm(cfg, blk["ffn_norm"], x),
+                          collect, f"{path}/ffn")
+        if lcache is not None:
+            lcache = {"self": sc, **(ccache or {})}
+    else:  # dense | moe (self-attn + FFN/MoE)
+        h, lcache = self_attention(
+            blk["attn"], cfg, apply_norm(cfg, blk["attn_norm"], x), qpos,
+            cache=lcache, read_cache=read_cache, window=w,
+            collect=collect, path=f"{path}/attn",
+        )
+        x = x + h
+        xn = apply_norm(cfg, blk["ffn_norm"], x)
+        if kind == "moe":
+            h, aux = apply_moe(blk["moe"], cfg, xn, collect, f"{path}/moe")
+        else:
+            h = apply_ffn(blk["ffn"], cfg, xn, collect, f"{path}/ffn")
+        x = x + h
+    return x, lcache, aux
+
+
+def _apply_shared(sp: dict, cfg, x, qpos, scache, *, read_cache=True,
+                  collect=None, path: str = ""):
+    """zamba2 shared attention+FFN block (single param set, per-app cache)."""
+    h, scache = self_attention(
+        sp["attn"], cfg, apply_norm(cfg, sp["attn_norm"], x), qpos,
+        cache=scache, read_cache=read_cache, window=cfg.sliding_window,
+        collect=collect, path=f"{path}/attn",
+    )
+    x = x + h
+    x = x + apply_ffn(sp["ffn"], cfg, apply_norm(cfg, sp["ffn_norm"], x),
+                      collect, f"{path}/ffn")
+    return x, scache, jnp.zeros((), jnp.float32)
+
+
+def forward(
+    params: dict,
+    cfg,
+    tokens: jax.Array,                 # (B, T) int32
+    start: jax.Array,                  # (B,) absolute position of tokens[:, 0]
+    *,
+    cache: Optional[dict] = None,
+    read_cache: bool = True,
+    collect_states: bool = False,      # speculative verify (SSM rollback states)
+    aux_embeds: Optional[jax.Array] = None,  # (B, Sa, D) image/audio embeddings
+    collect=None,                      # SmoothQuant calibration collector
+    num_layers: Optional[int] = None,  # structural-pruning baseline (Table 5)
+    need_logits: bool = True,          # prefill skips the LM head entirely
+    path: str = "",
+):
+    """Returns (logits (B,T,V) or None, new_cache, aux_loss)."""
+    B, T = tokens.shape
+    qpos = start[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    kinds = layer_kinds(cfg)
+    n_layers = num_layers or cfg.num_layers
+    w = cfg.sliding_window
+
+    x = params["embed"]["w"][tokens].astype(cfg.dtype)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    # encoder (whisper): run once at prefill to produce cross-attn source
+    enc_out = None
+    if cfg.encoder_layers and aux_embeds is not None:
+        enc_out = _encode(params["encoder"], cfg, aux_embeds, collect, f"{path}encoder")
+    elif aux_embeds is not None:
+        enc_out = aux_embeds.astype(cfg.dtype)
+
+    new_layers = []
+    shared_pos = shared_attn_positions(cfg)
+    shared_caches = list(_maybe(cache, "shared", []) or [])
+    new_shared = []
+    shared_i = 0
+
+    for i in range(n_layers):
+        lcache = cache["layers"][i] if cache is not None else None
+        x, lcache, aux = _apply_block(
+            kinds[i], params["layers"][i], cfg, x, qpos, lcache,
+            read_cache=read_cache, collect_states=collect_states,
+            enc_out=enc_out, collect=collect, path=f"{path}layers/{i}",
+        )
+        aux_total = aux_total + aux
+        new_layers.append(lcache)
+
+        # zamba2: shared attention block application
+        if i in shared_pos:
+            sp = params["shared_attn"]
+            scache = shared_caches[shared_i] if cache is not None and shared_caches else None
+            x, scache, _ = _apply_shared(
+                sp, cfg, x, qpos, scache,
+                read_cache=read_cache, collect=collect, path=f"{path}shared_attn",
+            )
+            new_shared.append(scache)
+            shared_i += 1
+
+    logits = None
+    if need_logits:
+        x = apply_norm(cfg, params["final_norm"], x)
+        if cfg.tie_embeddings:
+            logits = x.astype(jnp.float32) @ params["embed"]["w"].astype(jnp.float32).T
+        else:
+            if collect is not None:
+                record_act_stats(collect, f"{path}lm_head", x)
+            logits = apply_linear(params["lm_head"], x).astype(jnp.float32)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"layers": new_layers}
+        if "shared" in cache:
+            new_cache["shared"] = new_shared
+    return logits, new_cache, aux_total
+
+
+def _encode(enc: dict, cfg, embeds: jax.Array, collect, path: str) -> jax.Array:
+    """Bidirectional encoder (whisper): full attention, no cache."""
+    B, S, _ = embeds.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    x = embeds.astype(cfg.dtype)
+    for i, blk in enumerate(enc["layers"]):
+        h, _ = self_attention(
+            blk["attn"], cfg, apply_norm(cfg, blk["attn_norm"], x), pos,
+            causal=False, collect=collect, path=f"{path}/layers/{i}/attn",
+        )
+        x = x + h
+        x = x + apply_ffn(blk["ffn"], cfg, apply_norm(cfg, blk["ffn_norm"], x),
+                          collect, f"{path}/layers/{i}/ffn")
+    return apply_norm(cfg, enc["norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Speculative cache commit
+# ---------------------------------------------------------------------------
+
+def commit_cache(cfg, cache: dict, n_last: jax.Array, num_layers: Optional[int] = None) -> dict:
+    """Resolve verify-candidate caches after acceptance.
+
+    ``n_last`` (B,) = index (within the verify window) of the last committed
+    token.  Attention caches need no work (slot positions + masking handle
+    rollback); SSM candidates are gathered to the accepted state.
+    """
+    kinds = layer_kinds(cfg)[: num_layers or cfg.num_layers]
+    layers = []
+    for kind, lcache in zip(kinds, cache["layers"]):
+        if kind == "ssm" and lcache is not None and "states_all" in lcache:
+            layers.append(commit_ssm_cache(lcache, n_last))
+        else:
+            layers.append(lcache)
+    out = {"layers": layers}
+    if "shared" in cache:
+        out["shared"] = cache["shared"]
+    return out

@@ -1,0 +1,3 @@
+from repro.quant.int8 import quantize_linear, quantize_batched  # noqa: F401
+from repro.quant.smoothquant import calibrate, smoothing_factors  # noqa: F401
+from repro.quant.apply import quantize_params  # noqa: F401

@@ -1,0 +1,57 @@
+"""Offline weight preparation (paper §3.3): walk the BF16 param pytree and
+replace every quantizable linear with its smoothed W8A8 layout."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core.config import QuantConfig
+from repro.quant.int8 import quantize_batched, quantize_linear
+from repro.quant.smoothquant import smoothing_factors
+
+# Param-tree path fragments that must stay BF16: tiny and/or precision
+# critical.  The router is the MoE dispatch decision (top-k flips are far
+# more damaging than GEMM noise); norms/conv are not GEMMs.
+_EXCLUDE = ("router", "embed", "norm", "conv", "A_log", "D_skip", "dt_bias")
+
+
+def _excluded(path: str, qcfg: QuantConfig) -> bool:
+    if qcfg.quantize_embedding and "embed" in path:
+        return False
+    return any(tag in path for tag in _EXCLUDE)
+
+
+def quantize_params(
+    params,
+    act_stats: Optional[Dict[str, jnp.ndarray]] = None,
+    qcfg: QuantConfig = QuantConfig(),
+):
+    """Return a new param pytree with W8A8 linears.
+
+    ``act_stats`` maps apply-site paths (as recorded during calibration) to
+    per-input-channel activation maxima; linears without stats fall back to
+    s = 1 (weight-only smoothing).
+    """
+    act_stats = act_stats or {}
+
+    def walk(node, path: str):
+        if isinstance(node, dict):
+            if "w" in node and not isinstance(node["w"], dict):
+                w = node["w"]
+                if w.ndim >= 2 and not _excluded(path, qcfg):
+                    s = smoothing_factors(w, act_stats.get(path), qcfg.alpha)
+                    if w.ndim == 3:
+                        return quantize_batched(node, s)
+                    if qcfg.w_bits == 4 and w.shape[0] % 2 == 0:
+                        from repro.quant.int4 import quantize_linear_w4
+                        return quantize_linear_w4(node, s)
+                    return quantize_linear(node, s)
+                return node
+            return {k: walk(v, f"{path}/{k}" if path else k) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            out = [walk(v, f"{path}/{i}") for i, v in enumerate(node)]
+            return type(node)(out) if isinstance(node, tuple) else out
+        return node
+
+    return walk(params, "")

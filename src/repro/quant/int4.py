@@ -1,0 +1,81 @@
+"""W4A8: 4-bit weight quantization for the verifier (paper §6 future work —
+"Ultra-low Bit Verification").
+
+Weights are symmetric-quantized to [-7, 7] per output channel and PACKED
+two nibbles per int8 byte along the input dim, so the stored (and
+HBM-streamed) weight bytes are 0.25× BF16 / 0.5× W8A8.  Activations stay
+INT8 (the W8A8 smooth+quant path); the GEMM unpacks nibbles on the fly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import EPS
+
+INT4_MAX = 7.0
+
+
+def quantize_symmetric_int4(x: jax.Array, axis: int):
+    """Returns (q int8 in [-7,7], scale) — unpacked representation."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=axis)
+    scale = jnp.maximum(amax, EPS) / INT4_MAX
+    q = jnp.clip(jnp.round(x32 / jnp.expand_dims(scale, axis)), -INT4_MAX, INT4_MAX)
+    return q.astype(jnp.int8), scale
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """(din, dout) int8 in [-7,7] → (din/2, dout) packed (low | high<<4)."""
+    din = q.shape[0]
+    assert din % 2 == 0, din
+    lo = q[0::2].astype(jnp.uint8) & 0xF
+    hi = (q[1::2].astype(jnp.uint8) & 0xF) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of pack_int4: (din/2, dout) → (din, dout) int8 in [-7,7].
+
+    Sign extension via arithmetic shifts: (x << 4) >> 4 on int8.
+    """
+    p = packed.astype(jnp.int8)
+    lo = jnp.left_shift(p, 4)
+    lo = jnp.right_shift(lo, 4)                     # arithmetic shift: sign-extends
+    hi = jnp.right_shift(p, 4)
+    din2, dout = packed.shape
+    out = jnp.stack([lo, hi], axis=1).reshape(din2 * 2, dout)
+    return out
+
+
+def quantize_linear_w4(p: dict, smooth: jax.Array) -> dict:
+    """BF16 linear → W4A8 layout {"w_int4", "w_scale", "smooth" [, "b"]}."""
+    w = p["w"].astype(jnp.float32) / smooth[:, None]
+    q, scale = quantize_symmetric_int4(w, axis=0)
+    out = {
+        "w_int4": pack_int4(q),
+        "w_scale": scale,
+        "smooth": smooth.astype(jnp.float32),
+    }
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+def w4a8_matmul(x: jax.Array, w_int4: jax.Array, w_scale: jax.Array,
+                smooth: jax.Array) -> jax.Array:
+    """(…, K) × packed (K/2, N) → (…, N); INT8 activations, unpacked-int4
+    weights, int32 accumulation, fused dequant (mirrors w8a8_matmul)."""
+    from repro.kernels.ref import smooth_quant_ref
+
+    batch_shape = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    xq, dx = smooth_quant_ref(x2, smooth)
+    w = unpack_int4(w_int4)                         # int8 in [-7, 7]
+    acc = jax.lax.dot_general(
+        xq, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    y = acc.astype(jnp.float32) * dx[:, None] * w_scale[None, :]
+    return y.astype(x.dtype).reshape(*batch_shape, w.shape[1])

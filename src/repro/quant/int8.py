@@ -1,0 +1,36 @@
+"""Symmetric INT8 weight quantization (paper Eq. 6) for linear param dicts."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ref import quantize_symmetric
+
+
+def quantize_linear(p: dict, smooth: jnp.ndarray) -> dict:
+    """Quantize a 2D linear param dict ``{"w": (din, dout) [, "b"]}``.
+
+    Applies the offline smoothing ``W·diag(s)^-1`` first (paper §3.3), then
+    symmetric per-output-channel quantization.  Returns the W8A8 layout
+    consumed by :func:`repro.models.linear.apply_linear`.
+    """
+    w = p["w"].astype(jnp.float32) / smooth[:, None]
+    w_int8, w_scale = quantize_symmetric(w, axis=0)   # per-out-channel Δw (dout,)
+    q = {"w_int8": w_int8, "w_scale": w_scale, "smooth": smooth.astype(jnp.float32)}
+    if "b" in p:
+        q["b"] = p["b"]
+    return q
+
+
+def quantize_batched(p: dict, smooth: jnp.ndarray) -> dict:
+    """Quantize batched expert weights ``{"w": (E, din, dout)}``.
+
+    Per-expert per-output-channel scales ``(E, dout)``; the smoothing vector
+    ``s (din,)`` is shared across experts (calibration statistics are
+    collected on the pre-dispatch activations).
+    """
+    w = p["w"].astype(jnp.float32) / smooth[None, :, None]
+    w_int8, w_scale = quantize_symmetric(w, axis=1)   # (E, dout)
+    q = {"w_int8": w_int8, "w_scale": w_scale, "smooth": smooth.astype(jnp.float32)}
+    if "b" in p:
+        q["b"] = p["b"]
+    return q

@@ -1,0 +1,58 @@
+"""Enhanced-SmoothQuant ("m2") offline calibration (paper §3.2).
+
+Calibration runs the BF16 model eagerly over a few batches with a mutable
+``collect`` dict threaded through the forward pass; every linear apply-site
+records the per-input-channel absolute max of its activations under its
+param-tree path.  :func:`smoothing_factors` then computes
+
+    s_j = max|X_j|^alpha / max|W_j|^(1-alpha)        (Eq. 5)
+
+per input channel j, balancing quantization difficulty between activations
+and weights.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable
+
+import jax.numpy as jnp
+
+EPS = 1e-5
+
+
+def record_act_stats(collect: Dict[str, jnp.ndarray], path: str, x: jnp.ndarray) -> None:
+    """Apply-site hook: fold |x| channel maxima into the collector."""
+    a = jnp.max(jnp.abs(x.astype(jnp.float32)).reshape(-1, x.shape[-1]), axis=0)
+    prev = collect.get(path)
+    collect[path] = a if prev is None else jnp.maximum(prev, a)
+
+
+def calibrate(forward_fn: Callable, batches: Iterable) -> Dict[str, jnp.ndarray]:
+    """Run ``forward_fn(batch, collect)`` eagerly over calibration batches."""
+    collect: Dict[str, jnp.ndarray] = {}
+    for batch in batches:
+        forward_fn(batch, collect)
+    return collect
+
+
+def smoothing_factors(
+    w: jnp.ndarray,            # (din, dout) or (E, din, dout)
+    act_amax: jnp.ndarray | None,  # (din,) from calibration, or None
+    alpha: float = 0.5,
+) -> jnp.ndarray:
+    """Per-input-channel smoothing vector s (Eq. 5).
+
+    The "m2" enhancement: clamp the factors into [1/8, 8] so that channels
+    with degenerate statistics (never activated during calibration, or
+    all-zero weight columns) cannot blow up either operand's range, and
+    fall back to s = 1 when no activation statistics exist.
+    """
+    din = w.shape[-2]
+    if act_amax is None:
+        return jnp.ones((din,), jnp.float32)
+    w32 = jnp.abs(w.astype(jnp.float32))
+    w_amax = jnp.max(w32.reshape(-1, din, w.shape[-1]), axis=(0, 2))  # max|W_j| over out (+experts)
+    s = jnp.power(jnp.maximum(act_amax, EPS), alpha) / jnp.power(
+        jnp.maximum(w_amax, EPS), 1.0 - alpha
+    )
+    s = jnp.clip(s, 0.125, 8.0)
+    return s.astype(jnp.float32)

@@ -1,0 +1,114 @@
+"""Batched speculative serving engine.
+
+Wraps the jitted step functions from ``repro.core.spec_engine`` with
+prompt prefill, the generation loop, and acceptance/throughput statistics.
+The engine is verifier-agnostic: pass BF16 params (Ngram baseline), W8A8
+quantized params (Quasar), or choose the vanilla / pruned-drafter modes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import SpecConfig
+from repro.core.spec_engine import (
+    init_state,
+    make_pruned_step,
+    make_serve_step,
+    make_vanilla_step,
+)
+
+
+@dataclass
+class GenResult:
+    tokens: jnp.ndarray          # (B, S_buf) full buffers
+    lengths: jnp.ndarray         # (B,)
+    mean_accept_len: float       # L — committed tokens per verify step
+    steps: int                   # verify steps taken
+    wall_s: float
+    new_tokens: int
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.new_tokens / max(self.wall_s, 1e-9)
+
+
+class SpecEngine:
+    """mode ∈ {"spec", "vanilla", "pruned"}."""
+
+    def __init__(self, model, scfg: SpecConfig = SpecConfig(), mode: str = "spec"):
+        self.model = model
+        self.scfg = scfg
+        self.mode = mode
+        if mode == "spec":
+            step = make_serve_step(model, scfg)
+        elif mode == "vanilla":
+            step = make_vanilla_step(model, scfg.temperature)
+        elif mode == "pruned":
+            step = make_pruned_step(model, scfg, scfg.pruned_retention)
+        else:
+            raise ValueError(mode)
+        self._step = jax.jit(step)
+
+    # ------------------------------------------------------------------
+    def generate(
+        self,
+        params,
+        prompts: jnp.ndarray,          # (B, P) int32
+        max_new_tokens: Optional[int] = None,
+        *,
+        aux_embeds=None,
+        key=None,
+        draft_params=None,             # pruned mode: params used for drafting
+    ) -> GenResult:
+        max_new = max_new_tokens or self.scfg.max_new_tokens
+        B, P = prompts.shape
+        buf = P + max_new + self.scfg.gamma + 2
+        key = key if key is not None else jax.random.PRNGKey(0)
+
+        state = init_state(self.model, B, buf, key)
+        state["tokens"] = state["tokens"].at[:, :P].set(prompts)
+        state["length"] = jnp.full((B,), P, jnp.int32)
+        # cache covers committed tokens *except the last* (which becomes the
+        # first token of the first verify window) — hence prompts[:, :-1]
+        assert P >= 2, "prompts must have ≥ 2 tokens"
+        state["cache"] = self.model.prefill(
+            params, state["cache"], prompts[:, :-1], aux_embeds=aux_embeds
+        )
+        if self.mode == "pruned":
+            n_keep = max(1, int(round(self.model.cfg.num_layers * self.scfg.pruned_retention)))
+            pcache = self.model.init_cache(B, buf, num_layers=n_keep)
+            state["pruned_cache"] = self.model.prefill(
+                draft_params if draft_params is not None else params,
+                pcache, prompts[:, :-1], aux_embeds=aux_embeds, num_layers=n_keep,
+            )
+
+        target = P + max_new
+        t0 = time.perf_counter()
+        steps = 0
+        while True:
+            state = self._step(params, state)
+            steps += 1
+            if int(jnp.min(state["length"])) >= target:
+                break
+            if steps > max_new * 2 + 8:   # safety: ≥1 token/step guaranteed
+                break
+        jax.block_until_ready(state["tokens"])
+        wall = time.perf_counter() - t0
+
+        commits = state["stats"]["commits"]
+        n_steps = int(state["stats"]["steps"])
+        L = float(jnp.mean(commits / jnp.maximum(n_steps, 1)))
+        new_tokens = int(jnp.sum(jnp.minimum(state["length"], target) - P))
+        return GenResult(
+            tokens=state["tokens"],
+            lengths=state["length"],
+            mean_accept_len=L,
+            steps=n_steps,
+            wall_s=wall,
+            new_tokens=new_tokens,
+        )

@@ -1,0 +1,14 @@
+"""Sampling utilities shared by the engine and the verifier."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(key, logits: jax.Array, temperature: float) -> jax.Array:
+    """(..., V) logits → token ids.  T=0 ⇒ greedy."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature
+    ).astype(jnp.int32)

@@ -1,0 +1,2 @@
+from repro.train.optimizer import adamw_init, adamw_update, cosine_lr  # noqa: F401
+from repro.train.trainer import Trainer, make_train_step  # noqa: F401

@@ -1,0 +1,68 @@
+"""Checkpointing: param/optimizer pytrees ↔ a single ``.npz`` file.
+
+Pickle-free: the pytree is flattened with string key-paths; structure is
+rebuilt from the paths on restore (lists/dicts only — which is all the
+framework uses for params and optimizer state).
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            assert "\x1f" not in str(k)
+            out.update(_flatten(v, f"{prefix}{k}\x1f"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}\x1f"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("\x1f")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return jnp.asarray(node)
+        if node and all(re.fullmatch(r"#\d+", k) for k in node):
+            return [fix(node[f"#{i}"]) for i in range(len(node))]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+def save_checkpoint(path: str, tree) -> None:
+    flat = _flatten(jax.device_get(tree))
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # atomic write: tmp + rename
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    os.close(fd)
+    try:
+        np.savez(tmp, **flat)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    finally:
+        for t in (tmp, tmp + ".npz"):
+            if os.path.exists(t):
+                os.remove(t)
+
+
+def load_checkpoint(path: str):
+    with np.load(path) as data:
+        return _unflatten({k: data[k] for k in data.files})

@@ -1,0 +1,90 @@
+"""Training loop: CE loss (+ MoE load-balance aux), AdamW, remat policy."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import scan as scan_mod
+from repro.models import transformer
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def loss_fn(params, cfg, tokens, labels, aux_embeds=None, remat_scan=False):
+    """Next-token CE over valid labels (label = -1 masks).
+
+    Routes to the scanned stack when params are in scan layout (the remat
+    policy then lives on the scan body instead of the whole loss).
+    """
+    B = tokens.shape[0]
+    start = jnp.zeros((B,), jnp.int32)
+    if "scan" in params:
+        logits, _, aux = scan_mod.forward(
+            params, cfg, tokens, start, aux_embeds=aux_embeds, remat=remat_scan
+        )
+    else:
+        logits, _, aux = transformer.forward(
+            params, cfg, tokens, start, aux_embeds=aux_embeds
+        )
+    V = logits.shape[-1]
+    valid = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    ce = jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+    return ce + aux, (ce, aux)
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, remat: bool = True, scan: bool = False):
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt, metrics)``.
+
+    ``remat=True`` enables activation recomputation — per scan-body for the
+    scan layout, whole-loss ``jax.checkpoint`` for the canonical layout.
+    """
+    if scan:
+        lfn = functools.partial(loss_fn, remat_scan=remat)
+    elif remat:
+        lfn = jax.checkpoint(loss_fn, static_argnums=(1,))
+    else:
+        lfn = loss_fn
+
+    def train_step(params, opt_state, batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(lfn, has_aux=True)(
+            params, cfg, batch["tokens"], batch["labels"], batch.get("aux_embeds")
+        )
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, "ce": ce, "aux": aux, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    def __init__(self, model, opt_cfg: AdamWConfig = AdamWConfig(), remat: bool = False):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self._step = jax.jit(make_train_step(model.cfg, opt_cfg, remat))
+
+    def init(self, key):
+        params = self.model.init_params(key)
+        return params, adamw_init(params)
+
+    def fit(self, params, opt_state, data_iter, steps: int, log_every: int = 10,
+            log_fn=print):
+        history = []
+        t0 = time.perf_counter()
+        for i in range(steps):
+            batch = next(data_iter)
+            params, opt_state, m = self._step(params, opt_state, batch)
+            if (i + 1) % log_every == 0 or i == 0:
+                m = {k: float(v) for k, v in m.items()}
+                m["step"] = i + 1
+                m["wall_s"] = time.perf_counter() - t0
+                history.append(m)
+                if log_fn:
+                    log_fn(f"step {i+1:5d}  loss {m['loss']:.4f}  ce {m['ce']:.4f} "
+                           f"lr {m['lr']:.2e}  gnorm {m['grad_norm']:.2f}")
+        return params, opt_state, history

@@ -1,0 +1,66 @@
+"""Prompt-lookup drafter properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.drafting import draft_tokens
+
+
+def _np_reference(tokens, length, gamma, k_min, k_max):
+    """Straightforward numpy PLD: longest k wins, most recent match."""
+    out = []
+    for b in range(tokens.shape[0]):
+        row, l = tokens[b], int(length[b])
+        best = None
+        for k in range(k_min, k_max + 1):
+            if l < 2 * k:
+                continue
+            tail = row[l - k : l].tolist()
+            for j in range(l - k - 1, -1, -1):  # most recent first
+                if row[j : j + k].tolist() == tail:
+                    best = j + k
+                    break
+        if best is None:
+            out.append([row[l - 1]] * gamma)
+        else:
+            d = []
+            for i in range(gamma):
+                idx = best + i
+                d.append(row[idx] if idx < l else row[l - 1])
+            out.append(d)
+    return np.array(out, np.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    vocab=st.integers(2, 8),
+    length=st.integers(8, 40),
+    gamma=st.integers(1, 6),
+)
+def test_draft_matches_numpy_reference(seed, vocab, length, gamma):
+    rng = np.random.default_rng(seed)
+    S = 48
+    toks = rng.integers(0, vocab, (2, S)).astype(np.int32)
+    lens = np.array([length, max(2, length - 3)], np.int32)
+    got = draft_tokens(jnp.array(toks), jnp.array(lens), gamma=gamma,
+                       k_min=1, k_max=4)
+    want = _np_reference(toks, lens, gamma, 1, 4)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_perfect_repetition_drafts_continuation():
+    pat = np.array([5, 9, 2, 7], np.int32)
+    row = np.tile(pat, 8)
+    toks = jnp.array(row[None, :])
+    lens = jnp.array([row.size], jnp.int32)
+    drafts = draft_tokens(toks, lens, gamma=4, k_min=1, k_max=4)
+    # the continuation of the repeating pattern
+    np.testing.assert_array_equal(np.asarray(drafts)[0], pat)
+
+
+def test_no_match_falls_back_to_last_token():
+    toks = jnp.array(np.arange(32, dtype=np.int32)[None, :])  # all distinct
+    lens = jnp.array([32], jnp.int32)
+    drafts = draft_tokens(toks, lens, gamma=3, k_min=1, k_max=4)
+    np.testing.assert_array_equal(np.asarray(drafts)[0], [31, 31, 31])

@@ -1,0 +1,141 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracle,
+swept over shapes and dtypes with hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.smooth_quant import smooth_quant
+from repro.kernels import ops as kops
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 300),
+    n=st.integers(1, 90),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_int8_matmul_matches_ref(m, k, n, seed):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k0, (m, k))
+    w = _rand(k1, (k, n))
+    s = jnp.abs(_rand(k2, (k,))) + 0.3
+    w_int8, w_scale = ref.quantize_symmetric(w / s[:, None], axis=0)
+    xq, dx = ref.smooth_quant_ref(x, s)
+    y_ref = ref.int8_matmul_ref(xq, w_int8, dx, w_scale, jnp.float32)
+    y_pal = int8_matmul(xq, w_int8, dx, w_scale, out_dtype=jnp.float32,
+                        block_m=32, block_n=32, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 260),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_smooth_quant_matches_ref(m, k, seed):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(k0, (m, k), scale=3.0)
+    s = jnp.abs(_rand(k1, (k,))) + 0.2
+    q_pal, dx_pal = smooth_quant(x, s, block_m=16, interpret=True)
+    q_ref, dx_ref = ref.smooth_quant_ref(x, s)
+    assert bool(jnp.all(q_pal == q_ref))
+    np.testing.assert_allclose(np.asarray(dx_pal), np.asarray(dx_ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mkn", [(128, 512, 128), (37, 130, 65), (1, 64, 256)])
+def test_w8a8_pipeline_dtypes(dtype, mkn):
+    m, k, n = mkn
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = _rand(k0, (m, k), dtype)
+    w = _rand(k1, (k, n))
+    s = jnp.abs(_rand(k2, (k,))) + 0.5
+    w_int8, w_scale = ref.quantize_symmetric(w / s[:, None], axis=0)
+    xq, dx = smooth_quant(x, s, interpret=True)
+    y = int8_matmul(xq, w_int8, dx, w_scale, out_dtype=dtype, interpret=True)
+    y_ref = ref.w8a8_matmul_ref(x, w_int8, w_scale, s, out_dtype=dtype)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_w8a8_quantization_error_small():
+    """The W8A8 GEMM must approximate the true matmul well (paper §3.2)."""
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = _rand(k0, (64, 512))
+    w = _rand(k1, (512, 256))
+    s = jnp.ones((512,))
+    w_int8, w_scale = ref.quantize_symmetric(w, axis=0)
+    y = ref.w8a8_matmul_ref(x, w_int8, w_scale, s, out_dtype=jnp.float32)
+    y_true = x @ w
+    rel = float(jnp.linalg.norm(y - y_true) / jnp.linalg.norm(y_true))
+    assert rel < 0.05, rel
+
+
+def test_ops_dispatch_batched_shapes():
+    """Public wrapper handles leading batch dims."""
+    k0, k1 = jax.random.split(jax.random.PRNGKey(1))
+    x = _rand(k0, (2, 3, 5, 96))
+    w = _rand(k1, (96, 64))
+    s = jnp.ones((96,))
+    w_int8, w_scale = ref.quantize_symmetric(w, axis=0)
+    y = kops.w8a8_matmul(x, w_int8, w_scale, s)
+    assert y.shape == (2, 3, 5, 64)
+    y2 = ref.w8a8_matmul_ref(x.reshape(-1, 96), w_int8, w_scale, s, jnp.float32)
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, 64), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 120),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_int4_matmul_matches_unpacked(m, k, n, seed):
+    from repro.kernels.int4_matmul import int4_matmul
+    from repro.quant.int4 import pack_int4, quantize_symmetric_int4
+
+    k = k * 2  # even K for packing
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(k0, (m, k))
+    w = _rand(k1, (k, n))
+    q, dw = quantize_symmetric_int4(w, axis=0)
+    xq, dx = ref.smooth_quant_ref(x, jnp.ones((k,)))
+    y = int4_matmul(xq, pack_int4(q), dx, dw, out_dtype=jnp.float32,
+                    block_m=16, block_n=32, block_k=64, interpret=True)
+    acc = jax.lax.dot_general(xq, q, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    y_ref = acc.astype(jnp.float32) * dx[:, None] * dw[None, :]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_path_forced(monkeypatch):
+    """REPRO_USE_PALLAS routes the public op through interpret-mode Pallas."""
+    kops.set_use_pallas(True)
+    try:
+        k0, k1 = jax.random.split(jax.random.PRNGKey(2))
+        x = _rand(k0, (17, 48))
+        w = _rand(k1, (48, 32))
+        s = jnp.ones((48,))
+        w_int8, w_scale = ref.quantize_symmetric(w, axis=0)
+        y = kops.w8a8_matmul(x, w_int8, w_scale, s)
+        y_ref = ref.w8a8_matmul_ref(x, w_int8, w_scale, s, jnp.float32)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-5)
+    finally:
+        kops.set_use_pallas(False)

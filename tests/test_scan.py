@@ -1,0 +1,89 @@
+"""Scan (stacked layer groups) vs canonical loop layout equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.models.scan import scan_pattern, stack_cache, unstack_cache
+
+FAMS = ["smollm-135m", "phi3.5-moe-42b-a6.6b", "mamba2-370m", "zamba2-2.7b",
+        "llama-3.2-vision-90b", "whisper-small"]
+
+
+def _aux(cfg, B):
+    n = cfg.num_image_tokens or cfg.num_audio_frames
+    if not n:
+        return None
+    return jax.random.normal(jax.random.PRNGKey(9), (B, n, cfg.d_model), cfg.dtype)
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_scan_equals_loop(arch):
+    cfg = get_config(arch).reduced()
+    m = Model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    sparams = m.to_scan(params)
+    B, T = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size)
+    aux = _aux(cfg, B)
+
+    l1, _ = m.forward(params, toks, aux_embeds=aux)
+    l2, _ = m.forward(sparams, toks, aux_embeds=aux)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=2e-4, atol=2e-4)
+
+    # cached verify path
+    cache = m.init_cache(B, 64)
+    scache = m.init_cache(B, 64, scan=True)
+    cache = m.prefill(params, cache, toks[:, :5], aux_embeds=aux)
+    scache = m.prefill(sparams, scache, toks[:, :5], aux_embeds=aux)
+    start = jnp.full((B,), 5, jnp.int32)
+    lv1, cand1 = m.verify_step(params, cache, toks[:, 5:8], start)
+    lv2, cand2 = m.verify_step(sparams, scache, toks[:, 5:8], start)
+    np.testing.assert_allclose(np.asarray(lv1), np.asarray(lv2), rtol=2e-4, atol=2e-4)
+
+    # commit keeps layouts equivalent
+    n_last = jnp.array([0, 2], jnp.int32)
+    c1 = m.commit(cand1, n_last)
+    c2 = m.commit(cand2, n_last)
+    c2u = unstack_cache(c2, cfg)
+    for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c2u)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=2e-4, atol=2e-4)
+
+
+def test_scan_pattern_shapes():
+    assert scan_pattern(get_config("smollm-135m")) == (["dense"], 30, False)
+    assert scan_pattern(get_config("mamba2-370m")) == (["ssm"], 48, False)
+    p, n, sh = scan_pattern(get_config("zamba2-2.7b"))
+    assert p == ["ssm"] * 6 and n == 9 and sh
+    p, n, sh = scan_pattern(get_config("llama-3.2-vision-90b"))
+    assert p == ["dense"] * 4 + ["cross"] and n == 20 and not sh
+    assert scan_pattern(get_config("whisper-small")) == (["audio"], 12, False)
+    assert scan_pattern(get_config("arctic-480b")) == (["moe"], 35, False)
+
+
+def test_stack_unstack_roundtrip():
+    cfg = get_config("zamba2-2.7b").reduced()
+    m = Model(cfg)
+    cache = m.init_cache(2, 32)
+    rt = unstack_cache(stack_cache(cache, cfg), cfg)
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(rt)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scan_train_step_runs():
+    from repro.train.optimizer import AdamWConfig, adamw_init
+    from repro.train.trainer import make_train_step
+
+    cfg = get_config("smollm-135m").reduced()
+    m = Model(cfg)
+    params = m.to_scan(m.init_params(jax.random.PRNGKey(0)))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(), remat=True, scan=True))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    p2, o2, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))

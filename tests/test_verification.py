@@ -1,0 +1,106 @@
+"""Rejection-sampling verification: correctness + the lossless guarantee."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.verification import verify
+
+
+def test_greedy_prefix_acceptance():
+    """T=0: accept exactly the longest prefix of drafts matching argmax."""
+    V = 11
+    logits = jnp.full((1, 4, V), -10.0)
+    # target argmaxes: 3, 7, 2 (then bonus position predicts 5)
+    for i, t in enumerate([3, 7, 2, 5]):
+        logits = logits.at[0, i, t].set(10.0)
+    drafts = jnp.array([[3, 7, 9]])      # third draft wrong
+    res = verify(logits, drafts, 0.0, jax.random.PRNGKey(0))
+    assert int(res.n_accept[0]) == 2
+    assert int(res.next_token[0]) == 2   # corrective = argmax at rejected pos
+    assert int(res.n_commit[0]) == 3
+
+    drafts_ok = jnp.array([[3, 7, 2]])
+    res2 = verify(logits, drafts_ok, 0.0, jax.random.PRNGKey(0))
+    assert int(res2.n_accept[0]) == 3
+    assert int(res2.next_token[0]) == 5  # bonus from position γ
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_greedy_never_commits_nonargmax(seed):
+    key = jax.random.PRNGKey(seed)
+    k0, k1, k2 = jax.random.split(key, 3)
+    B, g, V = 4, 5, 23
+    logits = jax.random.normal(k0, (B, g + 1, V))
+    drafts = jax.random.randint(k1, (B, g), 0, V)
+    res = verify(logits, drafts, 0.0, k2)
+    am = np.asarray(jnp.argmax(logits, -1))
+    n = np.asarray(res.n_accept)
+    d = np.asarray(drafts)
+    for b in range(B):
+        for i in range(n[b]):
+            assert d[b, i] == am[b, i]          # accepted ⇒ argmax
+        assert np.asarray(res.next_token)[b] == am[b, n[b]]
+
+
+def test_stochastic_output_distribution_matches_target():
+    """Monte-Carlo check of losslessness (Eq. 2-3): the first committed
+    token's distribution equals the verifier's p, for a one-hot drafter."""
+    V, N, T = 5, 40000, 1.0
+    logits = jnp.log(jnp.array([[0.45, 0.25, 0.15, 0.10, 0.05]]))
+    logits = jnp.repeat(logits[None], 1, 0)          # (1,1,V) -> window γ=0+1?
+    # build a γ=1 window: position 0 verifies draft, position 1 is bonus
+    logits2 = jnp.concatenate([logits, logits], axis=1)  # (1, 2, V)
+    drafts = jnp.array([[2]])                        # drafter always proposes 2
+
+    counts = np.zeros(V)
+    keys = jax.random.split(jax.random.PRNGKey(0), N)
+
+    @jax.jit
+    def one(key):
+        res = verify(logits2, drafts, T, key)
+        # first committed token: draft if accepted else corrective
+        return jnp.where(res.n_accept[0] >= 1, drafts[0, 0], res.next_token[0])
+
+    toks = np.asarray(jax.vmap(one)(keys))
+    for t in toks:
+        counts[t] += 1
+    emp = counts / N
+    target = np.asarray(jax.nn.softmax(logits2[0, 0] / T))
+    np.testing.assert_allclose(emp, target, atol=0.012)
+
+
+def test_stochastic_with_draft_probs_lossless():
+    """Same Monte-Carlo, stochastic drafter q ≠ one-hot (pruned baseline)."""
+    V, N, T = 4, 40000, 1.0
+    p_logits = jnp.log(jnp.array([[[0.5, 0.2, 0.2, 0.1],
+                                   [0.25, 0.25, 0.25, 0.25]]]))  # (1,2,V)
+    q = jnp.array([[[0.1, 0.6, 0.2, 0.1]]])                      # (1,1,V)
+
+    keys = jax.random.split(jax.random.PRNGKey(1), N)
+
+    @jax.jit
+    def one(key):
+        kd, kv = jax.random.split(key)
+        d = jax.random.categorical(kd, jnp.log(q[0, 0]))[None, None]
+        res = verify(p_logits, d, T, kv, draft_probs=q)
+        return jnp.where(res.n_accept[0] >= 1, d[0, 0], res.next_token[0])
+
+    toks = np.asarray(jax.vmap(one)(keys))
+    counts = np.bincount(toks, minlength=V) / N
+    target = np.asarray(jax.nn.softmax(p_logits[0, 0] / T))
+    np.testing.assert_allclose(counts, target, atol=0.012)
+
+
+def test_acceptance_improves_with_alignment():
+    """Drafts aligned with p get longer acceptance than random drafts."""
+    B, g, V = 64, 5, 50
+    key = jax.random.PRNGKey(3)
+    k0, k1, k2 = jax.random.split(key, 3)
+    logits = jax.random.normal(k0, (B, g + 1, V)) * 3.0
+    aligned = jnp.argmax(logits[:, :g], -1)
+    random_d = jax.random.randint(k1, (B, g), 0, V)
+    r_al = verify(logits, aligned, 1.0, k2)
+    r_rn = verify(logits, random_d, 1.0, k2)
+    assert float(jnp.mean(r_al.n_accept)) > float(jnp.mean(r_rn.n_accept)) + 1.0
