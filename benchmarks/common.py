@@ -144,11 +144,22 @@ class LatencyModel:
 # Engine-run helper: measured L + CPU wall
 # ---------------------------------------------------------------------------
 
-def run_engine(model, params, *, mode, scfg, task="gsm8k", batch=2,
-               prompt_len=48, new_tokens=24, seed=0, draft_params=None):
+def run_engine(model, params, *, mode=None, drafter=None, verifier=None,
+               scfg, task="gsm8k", batch=2, prompt_len=48, new_tokens=24,
+               seed=0, draft_params=None):
+    """Measure one engine config.  ``drafter``/``verifier`` name registry
+    plugins (``repro.core.protocols``); ``mode`` is the deprecated alias
+    ("spec"|"vanilla"|"pruned") used by the seed-era tables.  Benchmarks
+    pass pre-prepared params, so the default verifier is passthrough BF16
+    — name ``verifier="w8a8"`` to let the engine quantize internally."""
     prompts = jnp.asarray(
         task_prompts(task, batch, prompt_len, model.cfg.vocab_size, seed=seed))
-    eng = SpecEngine(model, scfg, mode=mode)
+    if mode is not None:
+        eng = SpecEngine(model, scfg, mode=mode,
+                         drafter=drafter, verifier=verifier)
+    else:
+        eng = SpecEngine(model, scfg, drafter=drafter or scfg.drafter,
+                         verifier=verifier or "bf16")
     # warm-up for compile, then measure
     r = eng.generate(params, prompts, new_tokens, key=jax.random.PRNGKey(seed),
                      draft_params=draft_params)

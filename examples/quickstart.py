@@ -41,10 +41,14 @@ def main():
           "weights now int8 + per-channel scales")
 
     print("\n== 3. serve with quantized verification ==")
+    # drafter/verifier are registry plugins; the "vanilla" drafter (γ=0)
+    # is the autoregressive baseline through the same unified decode step
     prompts = jnp.asarray(task_prompts("gsm8k", 2, 48, cfg.vocab_size))
     scfg = SpecConfig(gamma=5, temperature=0.0)
-    quasar = SpecEngine(model, scfg, mode="spec").generate(qparams, prompts, 32)
-    vanilla = SpecEngine(model, scfg, mode="vanilla").generate(qparams, prompts, 32)
+    quasar = SpecEngine(model, scfg, drafter="ngram",
+                        verifier="bf16").generate(qparams, prompts, 32)
+    vanilla = SpecEngine(model, scfg, drafter="vanilla",
+                         verifier="bf16").generate(qparams, prompts, 32)
 
     P = prompts.shape[1]
     lossless = bool(jnp.all(quasar.tokens[:, :P + 32] == vanilla.tokens[:, :P + 32]))

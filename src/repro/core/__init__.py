@@ -2,8 +2,26 @@
 from repro.core.config import ModelConfig, QuantConfig, SpecConfig  # noqa: F401
 from repro.core.drafting import draft_tokens  # noqa: F401
 from repro.core.verification import verify, VerifyResult  # noqa: F401
+from repro.core.protocols import (  # noqa: F401
+    DraftProposal,
+    Drafter,
+    Verifier,
+    available_drafters,
+    available_verifiers,
+    get_drafter,
+    get_verifier,
+    register_drafter,
+    register_verifier,
+)
+from repro.core.drafters import (  # noqa: F401
+    NgramDrafter,
+    PrunedDrafter,
+    VanillaDrafter,
+)
+from repro.core.verifiers import BF16Verifier, W4A8Verifier, W8A8Verifier  # noqa: F401
 from repro.core.spec_engine import (  # noqa: F401
     init_state,
+    make_decode_step,
     make_pruned_step,
     make_serve_step,
     make_vanilla_step,

@@ -220,12 +220,20 @@ class QuantConfig:
 
 @dataclasses.dataclass(frozen=True)
 class SpecConfig:
-    """Speculative-decoding settings (paper §3.1, §4.4)."""
+    """Speculative-decoding settings (paper §3.1, §4.4).
+
+    ``drafter`` / ``verifier`` name entries in the plugin registries
+    (``repro.core.protocols``); the engine resolves them with
+    ``get_drafter`` / ``get_verifier``.  ``verifier="w8a8"`` alone drives
+    quantized verification — ``W8A8Verifier.prepare`` quantizes the params
+    inside the engine, no manual ``quantize_params`` at call sites.
+    """
 
     gamma: int = 5                      # draft length γ
     k_min: int = 1                      # prompt-lookup n-gram min
     k_max: int = 4                      # prompt-lookup n-gram max (paper: ≤4)
     temperature: float = 0.0
     max_new_tokens: int = 64
-    verifier: str = "w8a8"              # w8a8 | bf16 | pruned
+    drafter: str = "ngram"              # registered: ngram | vanilla | pruned
+    verifier: str = "w8a8"              # registered: w8a8 | w4a8 | bf16
     pruned_retention: float = 0.75      # for the Table-5 baseline

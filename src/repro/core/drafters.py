@@ -1,0 +1,123 @@
+"""Registered :class:`~repro.core.protocols.Drafter` implementations.
+
+* ``ngram``   — prompt-lookup (PLD) self-drafting, the paper's strategy.
+* ``vanilla`` — degenerate gamma=0 drafter: the unified decode step reduces
+  to the autoregressive baseline (one token per forward).
+* ``pruned``  — Table-5 baseline: the first ``retention * L`` layers of the
+  target model draft gamma tokens autoregressively (stochastic q at T>0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import SpecConfig
+from repro.core.drafting import draft_tokens
+from repro.core.protocols import DraftProposal, Drafter, register_drafter
+
+
+@register_drafter("ngram")
+class NgramDrafter(Drafter):
+    """Prompt-lookup drafting (paper §4.1): match the trailing k-gram of
+    the committed text against itself, propose the gamma tokens that
+    followed the most recent match.  Deterministic (``probs=None``),
+    stateless, and cache-free — drafting cost is a token-buffer scan."""
+
+    def __init__(self, gamma: int = 5, k_min: int = 1, k_max: int = 4):
+        self.gamma = gamma
+        self.k_min = k_min
+        self.k_max = k_max
+
+    @classmethod
+    def from_config(cls, scfg: SpecConfig) -> "NgramDrafter":
+        return cls(gamma=scfg.gamma, k_min=scfg.k_min, k_max=scfg.k_max)
+
+    def propose(self, model, params, tokens, length, dstate, key):
+        drafts = draft_tokens(tokens, length, gamma=self.gamma,
+                              k_min=self.k_min, k_max=self.k_max)
+        return DraftProposal(tokens=drafts, probs=None), dstate, key
+
+
+@register_drafter("vanilla")
+class VanillaDrafter(Drafter):
+    """gamma=0: propose nothing.  The verify window degenerates to the last
+    committed token, so each decode step commits exactly one token — the
+    autoregressive baseline expressed through the same unified step."""
+
+    gamma = 0
+
+    def propose(self, model, params, tokens, length, dstate, key):
+        B = tokens.shape[0]
+        empty = jnp.zeros((B, 0), jnp.int32)
+        return DraftProposal(tokens=empty, probs=None), dstate, key
+
+
+@register_drafter("pruned")
+class PrunedDrafter(Drafter):
+    """Structurally pruned self-drafting (paper Table 5): the first
+    ``retention * L`` layers draft gamma tokens autoregressively against
+    their own KV cache (the ``drafter_state``); the full model verifies.
+
+    Stochastic at T>0, so ``probs`` carries the per-step draft
+    distribution q for the full Eq. 2 ratio.  Attention-family archs only
+    (SSM drafter rollback would need per-step states inside a scan; the
+    paper's Table 5 uses a dense model).
+    """
+
+    def __init__(self, gamma: int = 5, retention: float = 0.75,
+                 temperature: float = 0.0):
+        self.gamma = gamma
+        self.retention = retention
+        self.temperature = temperature
+
+    @classmethod
+    def from_config(cls, scfg: SpecConfig) -> "PrunedDrafter":
+        return cls(gamma=scfg.gamma, retention=scfg.pruned_retention,
+                   temperature=scfg.temperature)
+
+    def with_temperature(self, temperature: float) -> "PrunedDrafter":
+        return PrunedDrafter(gamma=self.gamma, retention=self.retention,
+                             temperature=temperature)
+
+    def n_keep(self, model) -> int:
+        return max(1, int(round(model.cfg.num_layers * self.retention)))
+
+    def init_state(self, model, params, prompts, buf_len: int, *,
+                   aux_embeds=None, draft_params=None):
+        n_keep = self.n_keep(model)
+        B = prompts.shape[0]
+        pcache = model.init_cache(B, buf_len, num_layers=n_keep)
+        return model.prefill(
+            draft_params if draft_params is not None else params,
+            pcache, prompts[:, :-1], aux_embeds=aux_embeds,
+            num_layers=n_keep,
+        )
+
+    def propose(self, model, params, tokens, length, dstate, key):
+        n_keep = self.n_keep(model)
+        pcache = dstate
+        tok = jnp.take_along_axis(
+            tokens, jnp.maximum(length - 1, 0)[:, None], axis=1)
+        pos = jnp.maximum(length - 1, 0)
+        drafts, qprobs = [], []
+        for i in range(self.gamma):  # unrolled: gamma is small and static
+            logits, pcache = model.decode_step(params, pcache, tok, pos + i,
+                                               num_layers=n_keep)
+            lf = logits[:, -1].astype(jnp.float32)
+            if self.temperature == 0.0:
+                nxt = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+                qprobs.append(jax.nn.one_hot(nxt, lf.shape[-1],
+                                             dtype=jnp.float32))
+            else:
+                key, sub = jax.random.split(key)
+                q = jax.nn.softmax(lf / self.temperature, axis=-1)
+                nxt = jax.random.categorical(
+                    sub, jnp.log(jnp.maximum(q, 1e-30))).astype(jnp.int32)
+                qprobs.append(q)
+            drafts.append(nxt)
+            tok = nxt[:, None]
+        proposal = DraftProposal(
+            tokens=jnp.stack(drafts, axis=1),                 # (B, gamma)
+            probs=jnp.stack(qprobs, axis=1),                  # (B, gamma, V)
+        )
+        return proposal, pcache, key

@@ -1,0 +1,173 @@
+"""Pluggable decoding protocols: ``Drafter`` and ``Verifier``.
+
+Quasar treats drafting and verification as orthogonal, composable legs of
+speculative execution (paper §3.1): *any* drafting strategy from the SD
+taxonomy (prompt-lookup, pruned self-draft, model-based, tree, …) can feed
+*any* verifier (BF16, W8A8, …) because the contract between them is just a
+fixed-shape token window plus optional draft probabilities.  This module
+is that contract.
+
+Protocol contracts
+------------------
+``Drafter`` — three methods, all shape-static so the decode step jits:
+
+* ``init_state(model, params, prompts, buf_len, ...)`` → drafter-state
+  pytree (runs **outside** jit, once per generation; may prefill a draft
+  cache).  Return ``{}`` for stateless drafters.
+* ``propose(model, params, tokens, length, dstate, key)`` →
+  ``(DraftProposal, dstate, key)`` (traced **inside** jit every step).
+  ``DraftProposal.tokens`` must be ``(B, gamma)`` int32; ``probs`` is
+  ``None`` for deterministic drafters (one-hot q) or ``(B, gamma, V)``
+  f32 for stochastic ones so the verifier can apply the full Eq. 2 ratio.
+  The PRNG key is threaded through so stochastic drafters stay
+  reproducible; deterministic drafters return it unchanged.
+* ``advance(model, dstate, proposal, n_accept)`` → drafter-state (traced,
+  after verification; reconcile draft-side caches with the accepted
+  prefix).  Default: identity.
+
+``Verifier`` — two methods:
+
+* ``prepare(model, params, act_stats=None)`` → params (runs outside jit,
+  once per weight set): offline weight preparation.  ``W8A8Verifier``
+  applies SmoothQuant + INT8 here so ``SpecConfig.verifier="w8a8"`` alone
+  produces quantized verification — no manual ``quantize_params`` at call
+  sites.  Must be idempotent.
+* ``verify(logits, proposal, temperature, key)`` → ``VerifyResult``
+  (traced): the lossless accept/reject rule (Eq. 2-3).
+
+Registries
+----------
+Implementations self-register by name via ``@register_drafter("name")`` /
+``@register_verifier("name")`` and are instantiated from a ``SpecConfig``
+with ``get_drafter(name, scfg)`` / ``get_verifier(name, scfg)``.  Passing
+an already-constructed instance through the getters is a no-op, so custom
+(unregistered) components plug in the same way.  See
+``docs/decoding_api.md`` for a worked custom-drafter example.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Type
+
+import jax
+
+from repro.core.config import SpecConfig
+from repro.core.verification import VerifyResult, verify
+
+
+class DraftProposal(NamedTuple):
+    """Fixed-shape drafting output: the drafter→verifier contract."""
+
+    tokens: jax.Array                  # (B, gamma) int32 drafted tokens
+    probs: Optional[jax.Array] = None  # (B, gamma, V) f32 draft dist q, or
+    #                                    None for deterministic drafters
+
+
+class Drafter:
+    """Base drafting strategy.  Subclass + register; see module docstring."""
+
+    name: str = "base"
+    gamma: int = 0
+
+    @classmethod
+    def from_config(cls, scfg: SpecConfig) -> "Drafter":
+        """Build from a SpecConfig — override when fields differ."""
+        return cls()
+
+    def with_temperature(self, temperature: float) -> "Drafter":
+        """Return a drafter suited to a different sampling temperature.
+        Most drafters are temperature-independent (default: self);
+        stochastic drafters that sample during proposal override this so
+        per-request temperature overrides keep their instance config."""
+        return self
+
+    # -- lifecycle ------------------------------------------------------
+    def init_state(self, model, params, prompts, buf_len: int, *,
+                   aux_embeds=None, draft_params=None) -> Any:
+        """Per-generation drafter state pytree (outside jit)."""
+        return {}
+
+    def propose(self, model, params, tokens, length, dstate, key):
+        """(B,S) buffer + (B,) lengths → (DraftProposal, dstate, key)."""
+        raise NotImplementedError
+
+    def advance(self, model, dstate, proposal: DraftProposal, n_accept):
+        """Reconcile drafter state with the accepted prefix (inside jit)."""
+        return dstate
+
+
+class Verifier:
+    """Base verification strategy: lossless rejection sampling over the
+    target model's logits, plus offline weight preparation."""
+
+    name: str = "base"
+
+    @classmethod
+    def from_config(cls, scfg: SpecConfig) -> "Verifier":
+        return cls()
+
+    def prepare(self, model, params, act_stats=None):
+        """Offline weight preparation (identity for BF16).  Idempotent."""
+        return params
+
+    def verify(self, logits, proposal: DraftProposal, temperature: float,
+               key) -> VerifyResult:
+        return verify(logits, proposal.tokens, temperature, key,
+                      draft_probs=proposal.probs)
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+
+_DRAFTERS: Dict[str, Type[Drafter]] = {}
+_VERIFIERS: Dict[str, Type[Verifier]] = {}
+
+
+def register_drafter(name: str):
+    def deco(cls: Type[Drafter]):
+        cls.name = name
+        _DRAFTERS[name] = cls
+        return cls
+    return deco
+
+
+def register_verifier(name: str):
+    def deco(cls: Type[Verifier]):
+        cls.name = name
+        _VERIFIERS[name] = cls
+        return cls
+    return deco
+
+
+def available_drafters() -> tuple:
+    return tuple(sorted(_DRAFTERS))
+
+
+def available_verifiers() -> tuple:
+    return tuple(sorted(_VERIFIERS))
+
+
+def get_drafter(spec, scfg: Optional[SpecConfig] = None) -> Drafter:
+    """Resolve a drafter: instance passthrough, or registry name lookup."""
+    if isinstance(spec, Drafter):
+        return spec
+    try:
+        cls = _DRAFTERS[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown drafter {spec!r}; registered: {available_drafters()}"
+        ) from None
+    return cls.from_config(scfg if scfg is not None else SpecConfig())
+
+
+def get_verifier(spec, scfg: Optional[SpecConfig] = None) -> Verifier:
+    """Resolve a verifier: instance passthrough, or registry name lookup."""
+    if isinstance(spec, Verifier):
+        return spec
+    try:
+        cls = _VERIFIERS[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown verifier {spec!r}; registered: {available_verifiers()}"
+        ) from None
+    return cls.from_config(scfg if scfg is not None else SpecConfig())

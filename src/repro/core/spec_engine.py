@@ -1,184 +1,170 @@
-"""Speculative-decoding step builders: draft → verify → accept → commit.
+"""Unified speculative decode step: draft → verify → accept → commit.
 
-Three step kinds, all jit-able and fixed-shape (they are what ``dryrun.py``
-lowers for the production mesh):
+One step builder, :func:`make_decode_step`, parameterised by a
+:class:`~repro.core.protocols.Drafter` and a
+:class:`~repro.core.protocols.Verifier` (see ``repro.core.protocols`` for
+the contracts and registries).  The three legacy modes are registry pairs:
 
-* ``make_serve_step``    — Quasar / Ngram: prompt-lookup drafting + parallel
-  verification by the supplied verifier params (W8A8 or BF16);
-* ``make_vanilla_step``  — autoregressive baseline (one token / forward);
-* ``make_pruned_step``   — Table-5 baseline: γ sequential decode steps of a
-  layer-dropped (structurally pruned) model draft, full-model verification.
+  ``spec``     → (``ngram``,   any verifier)   Quasar / PLD drafting
+  ``vanilla``  → (``vanilla``, any verifier)   gamma=0 autoregressive
+  ``pruned``   → (``pruned``,  any verifier)   Table-5 layer-drop drafting
 
-Engine state is a pytree dict:
-  tokens  (B, S_buf) int32   committed text buffer
-  length  (B,)       int32   committed token counts
-  cache   pytree             verifier KV/SSM cache (covers [0, length-1))
-  key     PRNGKey
-  stats   {"commits": (B,), "steps": ()}  acceptance-length bookkeeping
+The step is jit-able and fixed-shape (it is what ``dryrun.py`` lowers for
+the production mesh).  Engine state is a pytree dict:
+
+  tokens         (B, S_buf) int32   committed text buffer
+  length         (B,)       int32   committed token counts
+  target         (B,)       int32   per-request stop lengths (optional slot;
+                                    commits are masked so ``length`` never
+                                    exceeds it — early-exit for finished
+                                    requests in a heterogeneous batch)
+  cache          pytree             verifier KV/SSM cache (covers
+                                    [0, length-1))
+  drafter_state  pytree             opaque drafter-owned state ({} for
+                                    stateless drafters, a pruned-model KV
+                                    cache for ``pruned``, …)
+  key            PRNGKey
+  stats          {"commits": (B,), "steps": ()}  acceptance bookkeeping
+
+``make_serve_step`` / ``make_vanilla_step`` / ``make_pruned_step`` remain
+as thin deprecated shims over ``make_decode_step``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.drafting import draft_tokens
-from repro.core.verification import verify
 
-
-def init_state(model, batch: int, buf_len: int, key, num_layers: Optional[int] = None) -> dict:
-    return {
+def init_state(model, batch: int, buf_len: int, key,
+               num_layers: Optional[int] = None,
+               drafter_state=None, target=None, scan: bool = False) -> dict:
+    """Canonical engine-state pytree — the single source of truth for the
+    decode-step schema (``launch/shapes.py`` eval_shapes this for the
+    production mesh specs)."""
+    state = {
         "tokens": jnp.zeros((batch, buf_len), jnp.int32),
         "length": jnp.zeros((batch,), jnp.int32),
-        "cache": model.init_cache(batch, buf_len, num_layers),
+        "cache": model.init_cache(batch, buf_len, num_layers, scan=scan),
+        "drafter_state": drafter_state if drafter_state is not None else {},
         "key": key,
         "stats": {
             "commits": jnp.zeros((batch,), jnp.int32),
             "steps": jnp.zeros((), jnp.int32),
+            # steps during which the row was still below its target —
+            # the honest denominator for per-row acceptance length
+            "row_steps": jnp.zeros((batch,), jnp.int32),
         },
     }
+    if target is not None:
+        state["target"] = jnp.asarray(target, jnp.int32)
+    return state
 
 
-def _commit_tokens(tokens, length, drafts, next_token, n_accept):
-    """Write [drafts[:n_accept], next_token] at per-row offsets."""
+def _commit_tokens(tokens, length, drafts, next_token, n_accept, n_write=None):
+    """Write [drafts[:n_accept], next_token] at per-row offsets.
+
+    ``n_write`` (default ``n_accept + 1``) caps how many of those tokens
+    are actually written — used to freeze rows that reached their target.
+    """
     B, S = tokens.shape
     gamma = drafts.shape[1]
+    if n_write is None:
+        n_write = n_accept + 1
     i = jnp.arange(gamma + 1)[None, :]                                # (1, γ+1)
     vals = jnp.concatenate([drafts, next_token[:, None]], axis=1)     # (B, γ+1)
     vals = jnp.where(i == n_accept[:, None],
                      next_token[:, None], vals)                       # corrective at slot n
     pos = jnp.clip(length[:, None] + i, 0, S - 1)
-    keep = i <= n_accept[:, None]
+    keep = i < n_write[:, None]
     cur = jnp.take_along_axis(tokens, pos, axis=1)
     vals = jnp.where(keep, vals, cur)
     bidx = jnp.arange(B)[:, None]
     return tokens.at[bidx, pos].set(vals)
 
 
-def make_serve_step(model, scfg, num_layers: Optional[int] = None):
-    """Quasar/Ngram speculative step.  ``serve_step(verifier_params, state)``."""
-    gamma = scfg.gamma
+def make_decode_step(model, drafter, verifier, scfg,
+                     num_layers: Optional[int] = None):
+    """Build the unified decode step: ``decode_step(params, state)``.
 
-    def serve_step(params, state):
+    ``drafter`` / ``verifier`` are protocol instances (or registry names —
+    resolved here for convenience).  ``params`` must already be prepared
+    (``verifier.prepare``); the step itself is pure and fixed-shape.
+    """
+    from repro.core.protocols import get_drafter, get_verifier
+
+    drafter = get_drafter(drafter, scfg)
+    verifier = get_verifier(verifier, scfg)
+
+    def decode_step(params, state):
         tokens, length = state["tokens"], state["length"]
-        drafts = draft_tokens(tokens, length, gamma=gamma,
-                              k_min=scfg.k_min, k_max=scfg.k_max)     # (B, γ)
-        last = jnp.take_along_axis(tokens, jnp.maximum(length - 1, 0)[:, None], axis=1)
-        window = jnp.concatenate([last, drafts], axis=1)              # (B, γ+1)
+        proposal, dstate, key = drafter.propose(
+            model, params, tokens, length, state["drafter_state"],
+            state["key"])
+
+        last = jnp.take_along_axis(
+            tokens, jnp.maximum(length - 1, 0)[:, None], axis=1)
+        window = jnp.concatenate([last, proposal.tokens], axis=1)  # (B, γ+1)
         start = jnp.maximum(length - 1, 0)
 
-        logits, cand = model.verify_step(params, state["cache"], window, start,
-                                         num_layers=num_layers)
-        key, sub = jax.random.split(state["key"])
-        res = verify(logits, drafts, scfg.temperature, sub)
+        logits, cand = model.verify_step(params, state["cache"], window,
+                                         start, num_layers=num_layers)
+        key, sub = jax.random.split(key)
+        res = verifier.verify(logits, proposal, scfg.temperature, sub)
 
         cache = model.commit(cand, res.n_accept, num_layers=num_layers)
-        tokens = _commit_tokens(tokens, length, drafts, res.next_token, res.n_accept)
-        return {
+        dstate = drafter.advance(model, dstate, proposal, res.n_accept)
+
+        n_commit = res.n_commit
+        if "target" in state:
+            # freeze rows that reached their per-request target length
+            n_commit = jnp.clip(n_commit, 0, state["target"] - length)
+            active = (length < state["target"]).astype(jnp.int32)
+        else:
+            active = jnp.ones_like(length)
+        tokens = _commit_tokens(tokens, length, proposal.tokens,
+                                res.next_token, res.n_accept,
+                                n_write=n_commit)
+        out = {
             "tokens": tokens,
-            "length": length + res.n_commit,
+            "length": length + n_commit,
             "cache": cache,
+            "drafter_state": dstate,
             "key": key,
             "stats": {
-                "commits": state["stats"]["commits"] + res.n_commit,
+                "commits": state["stats"]["commits"] + n_commit,
                 "steps": state["stats"]["steps"] + 1,
+                "row_steps": state["stats"]["row_steps"] + active,
             },
         }
+        if "target" in state:
+            out["target"] = state["target"]
+        return out
 
-    return serve_step
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shims (legacy mode-string API)
+# ---------------------------------------------------------------------------
+
+def make_serve_step(model, scfg, num_layers: Optional[int] = None):
+    """Deprecated: ``make_decode_step(model, "ngram", "bf16", scfg)``."""
+    return make_decode_step(model, "ngram", "bf16", scfg,
+                            num_layers=num_layers)
 
 
 def make_vanilla_step(model, temperature: float = 0.0):
-    """Autoregressive baseline: one token per full forward."""
-
-    def vanilla_step(params, state):
-        tokens, length = state["tokens"], state["length"]
-        last = jnp.take_along_axis(tokens, jnp.maximum(length - 1, 0)[:, None], axis=1)
-        start = jnp.maximum(length - 1, 0)
-        logits, cache = model.decode_step(params, state["cache"], last, start)
-        key, sub = jax.random.split(state["key"])
-        if temperature > 0.0:
-            nxt = jax.random.categorical(
-                sub, logits[:, -1].astype(jnp.float32) / temperature
-            ).astype(jnp.int32)
-        else:
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        B, S = tokens.shape
-        bidx = jnp.arange(B)
-        pos = jnp.clip(length, 0, S - 1)
-        tokens = tokens.at[bidx, pos].set(nxt)
-        return {
-            "tokens": tokens,
-            "length": length + 1,
-            "cache": cache,
-            "key": key,
-            "stats": {
-                "commits": state["stats"]["commits"] + 1,
-                "steps": state["stats"]["steps"] + 1,
-            },
-        }
-
-    return vanilla_step
+    """Deprecated: ``make_decode_step(model, "vanilla", "bf16", scfg)``."""
+    from repro.core.config import SpecConfig
+    return make_decode_step(model, "vanilla", "bf16",
+                            SpecConfig(gamma=0, temperature=temperature))
 
 
 def make_pruned_step(model, scfg, retention: float):
-    """Table-5 baseline: structurally pruned (first ``retention·L`` layers)
-    model drafts γ tokens autoregressively; the full model verifies.
+    """Deprecated: ``make_decode_step(model, "pruned", "bf16", scfg)``."""
+    import dataclasses
 
-    State carries an extra ``pruned_cache``.  Only attention-family archs
-    are supported (SSM rollback for the drafter would need per-step states
-    inside a scan; the paper's Table 5 uses a dense model).
-    """
-    gamma = scfg.gamma
-    n_keep = max(1, int(round(model.cfg.num_layers * retention)))
-
-    def pruned_step(params, state):
-        tokens, length = state["tokens"], state["length"]
-        B, S = tokens.shape
-        key = state["key"]
-        pcache = state["pruned_cache"]
-
-        tok = jnp.take_along_axis(tokens, jnp.maximum(length - 1, 0)[:, None], axis=1)
-        pos = jnp.maximum(length - 1, 0)
-        drafts, qprobs = [], []
-        for i in range(gamma):  # unrolled: γ is small and static
-            logits, pcache = model.decode_step(params, pcache, tok, pos + i,
-                                               num_layers=n_keep)
-            lf = logits[:, -1].astype(jnp.float32)
-            if scfg.temperature == 0.0:
-                nxt = jnp.argmax(lf, axis=-1).astype(jnp.int32)
-                qprobs.append(jax.nn.one_hot(nxt, lf.shape[-1], dtype=jnp.float32))
-            else:
-                key, sub = jax.random.split(key)
-                q = jax.nn.softmax(lf / scfg.temperature, axis=-1)
-                nxt = jax.random.categorical(sub, jnp.log(jnp.maximum(q, 1e-30))).astype(jnp.int32)
-                qprobs.append(q)
-            drafts.append(nxt)
-            tok = nxt[:, None]
-        drafts = jnp.stack(drafts, axis=1)                            # (B, γ)
-        draft_probs = jnp.stack(qprobs, axis=1)                       # (B, γ, V)
-
-        last = jnp.take_along_axis(tokens, jnp.maximum(length - 1, 0)[:, None], axis=1)
-        window = jnp.concatenate([last, drafts], axis=1)
-        logits, cand = model.verify_step(params, state["cache"], window,
-                                         jnp.maximum(length - 1, 0))
-        key, sub = jax.random.split(key)
-        res = verify(logits, drafts, scfg.temperature, sub, draft_probs=draft_probs)
-
-        cache = model.commit(cand, res.n_accept)
-        tokens = _commit_tokens(tokens, length, drafts, res.next_token, res.n_accept)
-        return {
-            "tokens": tokens,
-            "length": length + res.n_commit,
-            "cache": cache,
-            "pruned_cache": pcache,
-            "key": key,
-            "stats": {
-                "commits": state["stats"]["commits"] + res.n_commit,
-                "steps": state["stats"]["steps"] + 1,
-            },
-        }
-
-    return pruned_step
+    scfg = dataclasses.replace(scfg, pruned_retention=retention)
+    return make_decode_step(model, "pruned", "bf16", scfg)

@@ -51,6 +51,19 @@ def verify(
     p = _probs(logits, temperature)                                   # (B, γ+1, V)
     k_acc, k_res, k_bonus = jax.random.split(key, 3)
 
+    if gamma == 0:
+        # degenerate vanilla window (VanillaDrafter): nothing to accept —
+        # sample/argmax the single position directly
+        p_at = p[:, 0]
+        if temperature == 0.0:
+            next_token = jnp.argmax(p_at, axis=-1).astype(jnp.int32)
+        else:
+            next_token = jax.random.categorical(
+                k_bonus, jnp.log(jnp.maximum(p_at, 1e-30))).astype(jnp.int32)
+        zero = jnp.zeros((B,), jnp.int32)
+        return VerifyResult(n_accept=zero, next_token=next_token,
+                            n_commit=zero + 1)
+
     p_draft = jnp.take_along_axis(p[:, :gamma], drafts[..., None], axis=-1)[..., 0]  # (B, γ)
     if draft_probs is None:
         ratio = p_draft                                               # q = 1 at draft

@@ -1,0 +1,56 @@
+"""Registered :class:`~repro.core.protocols.Verifier` implementations.
+
+All verifiers share the lossless rejection-sampling accept rule
+(``repro.core.verification.verify``); they differ in *offline weight
+preparation* — what ``prepare`` does to the target params before they are
+streamed every verify step.  This is where the paper's W8A8 claim lives:
+``W8A8Verifier.prepare`` applies SmoothQuant + symmetric INT8 so the
+memory-bound verification pass streams half (or a quarter, ``w4a8``) the
+bytes of BF16.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.config import QuantConfig, SpecConfig
+from repro.core.protocols import Verifier, register_verifier
+
+
+@register_verifier("bf16")
+class BF16Verifier(Verifier):
+    """Full-precision verification: params pass through untouched."""
+
+
+@register_verifier("w8a8")
+class W8A8Verifier(Verifier):
+    """Quantized verification (paper §3.2-3.3): ``prepare`` walks the
+    param pytree and replaces every quantizable linear with its smoothed
+    W8A8 layout.  Idempotent — already-quantized trees pass through.
+
+    ``act_stats`` (per-input-channel activation maxima from a calibration
+    pass) sharpens the SmoothQuant migration; without them smoothing is
+    weight-only (s=1), which is still lossless w.r.t. the *quantized*
+    verifier's own distribution (Eq. 2-3 hold for whatever p the verifier
+    defines).
+    """
+
+    def __init__(self, qcfg: Optional[QuantConfig] = None):
+        self.qcfg = qcfg if qcfg is not None else QuantConfig()
+
+    @classmethod
+    def from_config(cls, scfg: SpecConfig) -> "W8A8Verifier":
+        return cls(QuantConfig())
+
+    def prepare(self, model, params, act_stats=None):
+        from repro.quant.apply import quantize_params
+        return quantize_params(params, act_stats, self.qcfg)
+
+
+@register_verifier("w4a8")
+class W4A8Verifier(W8A8Verifier):
+    """Ultra-low-bit variant (paper §5 future work): INT4 weights where
+    shapes allow, INT8 activations."""
+
+    @classmethod
+    def from_config(cls, scfg: SpecConfig) -> "W4A8Verifier":
+        return cls(QuantConfig(w_bits=4))

@@ -25,7 +25,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+from repro.kernels.pallas_compat import CompilerParams
 
 MASK_VAL = -1e30
 
@@ -109,7 +110,7 @@ def flash_decode(
             pltpu.VMEM((GT, 1), jnp.float32),
             pltpu.VMEM((GT, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -14,7 +14,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+from repro.kernels.pallas_compat import CompilerParams
 
 INT8_MAX = 127.0
 EPS = 1e-8
@@ -60,7 +61,7 @@ def smooth_quant(
             jax.ShapeDtypeStruct((Mp, K), jnp.int8),
             jax.ShapeDtypeStruct((Mp, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 from repro.configs import ASSIGNED, get_config
 from repro.core.config import QuantConfig, SpecConfig
-from repro.core.spec_engine import make_serve_step
+from repro.core.spec_engine import make_decode_step
 from repro.launch import shapes as shp
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import analyze, model_flops_decode, model_flops_train
@@ -104,7 +104,7 @@ def _build(cfg, model, kind, shape_name, mesh, verifier, scfg, scan: bool):
         state = shp.serve_state_specs(cfg, shape_name, model, scfg, scan=scan)
         psh = param_shardings(params, mesh)
         ssh = state_shardings(state, mesh)
-        step = make_serve_step(model, scfg)
+        step = make_decode_step(model, scfg.drafter, verifier, scfg)
         fn = jax.jit(step, in_shardings=(psh, ssh), out_shardings=ssh)
         args = (params, state)
         tokens = state["tokens"].shape[0] * (gamma + 1)

@@ -10,9 +10,14 @@ from __future__ import annotations
 import jax
 
 
-def _mk(shape, axes):
+def make_mesh(shape, axes):
+    """Version-gated ``jax.make_mesh``: older jax releases have no
+    ``jax.sharding.AxisType`` (and default to auto axes anyway)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        shape, axes, axis_types=(axis_type.Auto,) * len(axes)
     )
 
 
@@ -20,13 +25,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips/pod (TPU v5e pod slice); 2 pods when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _mk(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_smoke_mesh():
     """1×1 mesh on the real local device — used by tests to exercise the
     sharding-rule code paths without placeholder devices."""
-    return _mk((1, 1), ("data", "model"))
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:

@@ -5,6 +5,11 @@ params and engine state with the same rules the dry-run validated, and
 runs the speculative serving loop.  On CPU (this container) pass
 ``--reduced`` to demo the identical code path at smoke scale.
 
+Drafting and verification are registry plugins: ``--drafter`` /
+``--verifier`` name any registered implementation, and the engine applies
+the verifier's offline weight preparation itself — ``--verifier w8a8``
+alone serves quantized verification from a BF16 checkpoint.
+
   python -m repro.launch.serve --arch smollm-135m --reduced \
       --verifier w8a8 --gamma 5 --batch 4 --new-tokens 32
 """
@@ -16,11 +21,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.config import QuantConfig, SpecConfig
+from repro.core.config import SpecConfig
+from repro.core.protocols import available_drafters, available_verifiers
 from repro.data import task_prompts
 from repro.models import Model
-from repro.quant import quantize_params
-from repro.serving.engine import SpecEngine
+from repro.serving.engine import LEGACY_MODES, SpecEngine
 from repro.train.checkpoint import load_checkpoint
 
 
@@ -28,9 +33,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--verifier", default="w8a8", choices=["w8a8", "bf16"])
+    ap.add_argument("--verifier", default="w8a8",
+                    choices=list(available_verifiers()))
     ap.add_argument("--kv-cache", default="bf16", choices=["bf16", "int8"])
-    ap.add_argument("--mode", default="spec", choices=["spec", "vanilla", "pruned"])
+    ap.add_argument("--drafter", default=None,
+                    choices=list(available_drafters()))
+    ap.add_argument("--mode", default=None, choices=list(LEGACY_MODES),
+                    help="deprecated alias: spec|vanilla|pruned -> --drafter")
     ap.add_argument("--gamma", type=int, default=5)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--batch", type=int, default=4)
@@ -55,16 +64,18 @@ def main():
     else:
         print("no --ckpt: serving random-init weights (demo)")
         params = model.init_params(jax.random.PRNGKey(0))
-    if args.verifier == "w8a8":
-        params = quantize_params(params, None, QuantConfig())
 
+    drafter = args.drafter or LEGACY_MODES.get(args.mode) or "ngram"
     scfg = SpecConfig(gamma=args.gamma, temperature=args.temperature,
-                      k_min=1, k_max=4)
-    engine = SpecEngine(model, scfg, mode=args.mode)
+                      k_min=1, k_max=4, drafter=drafter,
+                      verifier=args.verifier)
+    # the engine's verifier quantizes internally when scfg.verifier demands it
+    engine = SpecEngine(model, scfg)
     prompts = jnp.asarray(task_prompts(
         args.task, args.batch, args.prompt_len, cfg.vocab_size))
     r = engine.generate(params, prompts, args.new_tokens)
-    print(f"arch={cfg.name} verifier={args.verifier} mode={args.mode}")
+    print(f"arch={cfg.name} verifier={engine.verifier.name} "
+          f"drafter={engine.drafter.name}")
     print(f"generated {r.new_tokens} tokens in {r.wall_s:.2f}s "
           f"({r.tokens_per_s:.1f} tok/s CPU)")
     print(f"verify steps={r.steps}  mean acceptance length L={r.mean_accept_len:.3f}")

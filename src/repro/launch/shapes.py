@@ -73,19 +73,15 @@ def prefill_specs(cfg: ModelConfig, shape_name: str, model, scan: bool = True) -
 def serve_state_specs(cfg: ModelConfig, shape_name: str, model, scfg: SpecConfig,
                       scan: bool = True) -> dict:
     """Engine state for one speculative serve step at this decode shape."""
+    from repro.core.spec_engine import init_state
+
     s = SHAPES[shape_name]
     B, S = s["global_batch"], s["seq_len"]
     buf = S + scfg.gamma + 130  # committed context + speculative slack
+    # eval_shape the engine's own init_state so the schema (drafter_state,
+    # target, stats, …) has exactly one source of truth
     state = jax.eval_shape(
-        lambda: {
-            "tokens": jnp.zeros((B, buf), jnp.int32),
-            "length": jnp.zeros((B,), jnp.int32),
-            "cache": model.init_cache(B, buf, scan=scan),
-            "key": jax.random.PRNGKey(0),
-            "stats": {
-                "commits": jnp.zeros((B,), jnp.int32),
-                "steps": jnp.zeros((), jnp.int32),
-            },
-        }
+        lambda: init_state(model, B, buf, jax.random.PRNGKey(0), scan=scan,
+                           target=jnp.zeros((B,), jnp.int32))
     )
     return state

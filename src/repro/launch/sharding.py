@@ -34,11 +34,17 @@ def _axsize(mesh: Mesh, axes) -> int:
 
 
 def _fit(mesh: Mesh, dim: int, axes):
-    """Return ``axes`` if dim divides their product, else None (replicate)."""
+    """Return ``axes`` if dim divides their product, else None (replicate).
+    Single-axis tuples are unwrapped to the bare axis name so specs
+    compare equal regardless of how callers spell the axis."""
     if axes is None:
         return None
+    if isinstance(axes, str):
+        axes = (axes,)
     sz = _axsize(mesh, axes)
-    return axes if (sz > 1 and dim % sz == 0) else None
+    if not (sz > 1 and dim % sz == 0):
+        return None
+    return axes[0] if len(axes) == 1 else axes
 
 
 def _col(mesh, shape, fsdp):
@@ -146,7 +152,8 @@ def _state_spec(path: str, shape, mesh: Mesh, dp) -> P:
         return P()
     if "states_all" in path:                  # (B, T, H, P, N)
         return P(b, None, _fit(mesh, shape[2], "model"), None, None)
-    if "state" in path and nd == 4:           # SSD state (B, H, P, N)
+    # SSD state leaf only — "drafter_state/…" prefixes must not match
+    if (path.endswith("/state") or path == "state") and nd == 4:
         return P(b, _fit(mesh, shape[1], "model"), None, None)
     if "conv" in path and nd == 3:            # (B, K-1, convdim)
         return P(b, None, _fit(mesh, shape[2], "model"))

@@ -1,1 +1,6 @@
-from repro.serving.engine import SpecEngine  # noqa: F401
+from repro.serving.engine import GenResult, SpecEngine  # noqa: F401
+from repro.serving.request import (  # noqa: F401
+    GenerationRequest,
+    RequestResult,
+    pack_prompts,
+)

@@ -1,26 +1,54 @@
-"""Batched speculative serving engine.
+"""Batched speculative serving engine over the pluggable decoding API.
 
-Wraps the jitted step functions from ``repro.core.spec_engine`` with
-prompt prefill, the generation loop, and acceptance/throughput statistics.
-The engine is verifier-agnostic: pass BF16 params (Ngram baseline), W8A8
-quantized params (Quasar), or choose the vanilla / pruned-drafter modes.
+``SpecEngine`` wraps the unified jitted decode step
+(:func:`repro.core.spec_engine.make_decode_step`) with prompt prefill,
+the generation loop, and acceptance/throughput statistics.  Drafting and
+verification strategies are plugins resolved from the registries in
+``repro.core.protocols``:
+
+    engine = SpecEngine(model, SpecConfig(verifier="w8a8"))   # Quasar
+    engine = SpecEngine(model, scfg, drafter="pruned")        # Table 5
+    engine = SpecEngine(model, scfg, drafter=MyDrafter(...))  # custom
+
+The verifier owns offline weight preparation: with ``verifier="w8a8"``
+the engine quantizes BF16 params internally (SmoothQuant + INT8) on first
+use — callers never invoke ``quantize_params`` by hand.
+
+Two serving entry points:
+
+* :meth:`generate` — one homogeneous batch ``(B, P)`` of prompts, shared
+  token budget (the benchmark/table workhorse);
+* :meth:`generate_requests` — a list of
+  :class:`~repro.serving.request.GenerationRequest` with heterogeneous
+  prompt lengths, ``max_new_tokens`` and seeds, served in one batched
+  loop with per-request early exit; returns per-request
+  :class:`~repro.serving.request.RequestResult`.
+
+The legacy ``mode=`` constructor argument ("spec" | "vanilla" |
+"pruned") remains as a deprecated shim: it maps to the matching drafter
+with a passthrough BF16 verifier (params prepared by the caller), which
+is exactly the seed-era behaviour.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.config import SpecConfig
-from repro.core.spec_engine import (
-    init_state,
-    make_pruned_step,
-    make_serve_step,
-    make_vanilla_step,
-)
+from repro.core.protocols import get_drafter, get_verifier
+from repro.core.spec_engine import init_state, make_decode_step
+from repro.serving.request import GenerationRequest, RequestResult, pack_prompts
+
+# deprecated mode-string → drafter-registry-name mapping (public: the serve
+# CLI builds its --mode choices from it)
+LEGACY_MODES = {"spec": "ngram", "vanilla": "vanilla", "pruned": "pruned"}
+_MAX_TEMP_STEPS = 8        # bound on per-temperature compiled-step cache
 
 
 @dataclass
@@ -38,21 +66,92 @@ class GenResult:
 
 
 class SpecEngine:
-    """mode ∈ {"spec", "vanilla", "pruned"}."""
+    """Drafter x Verifier serving engine (see module docstring)."""
 
-    def __init__(self, model, scfg: SpecConfig = SpecConfig(), mode: str = "spec"):
+    def __init__(self, model, scfg: SpecConfig = SpecConfig(),
+                 mode: Optional[str] = None, *,
+                 drafter=None, verifier=None):
         self.model = model
         self.scfg = scfg
         self.mode = mode
-        if mode == "spec":
-            step = make_serve_step(model, scfg)
-        elif mode == "vanilla":
-            step = make_vanilla_step(model, scfg.temperature)
-        elif mode == "pruned":
-            step = make_pruned_step(model, scfg, scfg.pruned_retention)
-        else:
-            raise ValueError(mode)
-        self._step = jax.jit(step)
+        if mode is not None:                       # deprecated shim
+            if mode not in LEGACY_MODES:
+                raise ValueError(mode)
+            drafter = drafter if drafter is not None else LEGACY_MODES[mode]
+            # legacy callers quantize params themselves: passthrough prepare
+            verifier = verifier if verifier is not None else "bf16"
+        self.drafter = get_drafter(
+            drafter if drafter is not None else scfg.drafter, scfg)
+        self.verifier = get_verifier(
+            verifier if verifier is not None else scfg.verifier, scfg)
+        self._step = jax.jit(
+            make_decode_step(model, self.drafter, self.verifier, scfg))
+        self._steps_by_temp = {}                   # temperature overrides
+        self._prepared = None                      # (params ref, prepared)
+
+    # ------------------------------------------------------------------
+    def prepare_params(self, params, act_stats=None):
+        """Offline weight preparation for this engine's verifier
+        (e.g. SmoothQuant + INT8 for ``w8a8``).  Idempotent."""
+        return self.verifier.prepare(self.model, params, act_stats)
+
+    def _prepare_cached(self, params):
+        # NOTE: keeps a strong reference to the last input tree as the
+        # cache key, so a w8a8 engine pins the BF16 original while alive.
+        # Memory-sensitive callers: params = engine.prepare_params(params)
+        # once, drop the original, and pass the prepared tree (idempotent).
+        if self._prepared is not None and (
+                params is self._prepared[0] or params is self._prepared[1]):
+            return self._prepared[1]
+        self._prepared = (params, self.prepare_params(params))
+        return self._prepared[1]
+
+    def _step_for_temperature(self, t: float):
+        """(jitted step, drafter) with temperature ``t`` baked in."""
+        if t == self.scfg.temperature:
+            return self._step, self.drafter
+        if t not in self._steps_by_temp:
+            if len(self._steps_by_temp) >= _MAX_TEMP_STEPS:
+                # each entry pins a compiled executable — evict the oldest
+                self._steps_by_temp.pop(next(iter(self._steps_by_temp)))
+            scfg_t = dataclasses.replace(self.scfg, temperature=t)
+            drafter = self.drafter.with_temperature(t)
+            step = jax.jit(
+                make_decode_step(self.model, drafter, self.verifier, scfg_t))
+            self._steps_by_temp[t] = (step, drafter)
+        return self._steps_by_temp[t]
+
+    # ------------------------------------------------------------------
+    def _init_state(self, params, prompts, lengths, targets, buf, key, *,
+                    drafter, aux_embeds=None, draft_params=None):
+        """Prefill + assemble the decode-loop state pytree."""
+        B, P = prompts.shape
+        assert P >= 2, "prompts must have >= 2 tokens"
+        state = init_state(self.model, B, buf, key, target=targets)
+        state["tokens"] = state["tokens"].at[:, :P].set(prompts)
+        state["length"] = jnp.asarray(lengths, jnp.int32)
+        # cache covers committed tokens *except the last* (which becomes
+        # the first token of the first verify window) — hence [:, :-1]
+        state["cache"] = self.model.prefill(
+            params, state["cache"], prompts[:, :-1], aux_embeds=aux_embeds)
+        state["drafter_state"] = drafter.init_state(
+            self.model, params, prompts, buf,
+            aux_embeds=aux_embeds, draft_params=draft_params)
+        return state
+
+    def _run(self, step, params, state, max_steps: int):
+        """Drive the jitted step until every row reaches its target."""
+        t0 = time.perf_counter()
+        steps = 0
+        while True:
+            state = step(params, state)
+            steps += 1
+            if bool(jnp.all(state["length"] >= state["target"])):
+                break
+            if steps > max_steps:      # safety: >= 1 token/step guaranteed
+                break
+        jax.block_until_ready(state["tokens"])
+        return state, time.perf_counter() - t0
 
     # ------------------------------------------------------------------
     def generate(
@@ -63,47 +162,28 @@ class SpecEngine:
         *,
         aux_embeds=None,
         key=None,
-        draft_params=None,             # pruned mode: params used for drafting
+        draft_params=None,             # pruned drafting with separate params
     ) -> GenResult:
+        """Homogeneous batch: shared prompt length and token budget."""
         max_new = max_new_tokens or self.scfg.max_new_tokens
         B, P = prompts.shape
-        buf = P + max_new + self.scfg.gamma + 2
+        buf = P + max_new + self.drafter.gamma + 2
         key = key if key is not None else jax.random.PRNGKey(0)
 
-        state = init_state(self.model, B, buf, key)
-        state["tokens"] = state["tokens"].at[:, :P].set(prompts)
-        state["length"] = jnp.full((B,), P, jnp.int32)
-        # cache covers committed tokens *except the last* (which becomes the
-        # first token of the first verify window) — hence prompts[:, :-1]
-        assert P >= 2, "prompts must have ≥ 2 tokens"
-        state["cache"] = self.model.prefill(
-            params, state["cache"], prompts[:, :-1], aux_embeds=aux_embeds
-        )
-        if self.mode == "pruned":
-            n_keep = max(1, int(round(self.model.cfg.num_layers * self.scfg.pruned_retention)))
-            pcache = self.model.init_cache(B, buf, num_layers=n_keep)
-            state["pruned_cache"] = self.model.prefill(
-                draft_params if draft_params is not None else params,
-                pcache, prompts[:, :-1], aux_embeds=aux_embeds, num_layers=n_keep,
-            )
-
-        target = P + max_new
-        t0 = time.perf_counter()
-        steps = 0
-        while True:
-            state = self._step(params, state)
-            steps += 1
-            if int(jnp.min(state["length"])) >= target:
-                break
-            if steps > max_new * 2 + 8:   # safety: ≥1 token/step guaranteed
-                break
-        jax.block_until_ready(state["tokens"])
-        wall = time.perf_counter() - t0
+        params = self._prepare_cached(params)
+        lengths = jnp.full((B,), P, jnp.int32)
+        targets = jnp.full((B,), P + max_new, jnp.int32)
+        state = self._init_state(params, prompts, lengths, targets, buf, key,
+                                 drafter=self.drafter, aux_embeds=aux_embeds,
+                                 draft_params=draft_params)
+        state, wall = self._run(self._step, params, state, max_new * 2 + 8)
 
         commits = state["stats"]["commits"]
         n_steps = int(state["stats"]["steps"])
-        L = float(jnp.mean(commits / jnp.maximum(n_steps, 1)))
-        new_tokens = int(jnp.sum(jnp.minimum(state["length"], target) - P))
+        # per-row denominator: steps while that row was still generating
+        L = float(jnp.mean(
+            commits / jnp.maximum(state["stats"]["row_steps"], 1)))
+        new_tokens = int(jnp.sum(jnp.minimum(state["length"], P + max_new) - P))
         return GenResult(
             tokens=state["tokens"],
             lengths=state["length"],
@@ -112,3 +192,71 @@ class SpecEngine:
             wall_s=wall,
             new_tokens=new_tokens,
         )
+
+    # ------------------------------------------------------------------
+    def generate_requests(
+        self,
+        params,
+        requests: Sequence[GenerationRequest],
+        *,
+        aux_embeds=None,
+        draft_params=None,
+    ) -> List[RequestResult]:
+        """Serve a batch of requests with heterogeneous prompt lengths,
+        budgets and seeds; returns results in request order.
+
+        Heterogeneous *prompt lengths* require attention-family caches
+        (right-padding is masked positionally); recurrent-state archs
+        (ssm/hybrid) must batch equal-length prompts.
+        """
+        if not requests:
+            return []
+        params = self._prepare_cached(params)
+        results: List[Optional[RequestResult]] = [None] * len(requests)
+
+        # temperature is jit-static: group requests per effective T
+        groups = {}
+        for i, r in enumerate(requests):
+            t = self.scfg.temperature if r.temperature is None else float(r.temperature)
+            groups.setdefault(t, []).append(i)
+
+        for t, idxs in groups.items():
+            step, drafter = self._step_for_temperature(t)
+            batch = [requests[i] for i in idxs]
+            prompts_np, lengths_np = pack_prompts(batch)
+            if (len(set(lengths_np.tolist())) > 1
+                    and self.model.cfg.arch_type in ("ssm", "hybrid")):
+                raise ValueError(
+                    f"{self.model.cfg.arch_type} caches are recurrent: "
+                    "heterogeneous prompt lengths cannot be right-padded; "
+                    "batch equal-length prompts")
+            targets_np = lengths_np + np.array(
+                [r.max_new_tokens for r in batch], np.int32)
+            buf = int(targets_np.max()) + drafter.gamma + 2
+
+            key = jax.random.PRNGKey(len(batch))
+            for r in batch:
+                key = jax.random.fold_in(key, r.seed)
+
+            state = self._init_state(
+                params, jnp.asarray(prompts_np), lengths_np, targets_np,
+                buf, key, drafter=drafter, aux_embeds=aux_embeds,
+                draft_params=draft_params)
+            max_new_max = int((targets_np - lengths_np).max())
+            state, wall = self._run(step, params, state, max_new_max * 2 + 8)
+
+            tokens = np.asarray(state["tokens"])
+            commits = np.asarray(state["stats"]["commits"])
+            row_steps = np.asarray(state["stats"]["row_steps"])
+            n_steps = int(state["stats"]["steps"])
+            for row, i in enumerate(idxs):
+                p = int(lengths_np[row])
+                results[i] = RequestResult(
+                    request=requests[i],
+                    tokens=tokens[row, p: int(targets_np[row])].copy(),
+                    prompt_len=p,
+                    accept_len=float(commits[row]) / max(int(row_steps[row]), 1),
+                    steps=n_steps,
+                    wall_s=wall,
+                )
+        return results

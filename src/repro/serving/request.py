@@ -1,0 +1,85 @@
+"""Request-level serving types: per-request prompts, budgets, and results.
+
+``SpecEngine.generate_requests`` serves a list of
+:class:`GenerationRequest` with heterogeneous prompt lengths,
+``max_new_tokens`` and seeds in one fixed-shape batched decode loop:
+
+* prompts are right-padded to the batch maximum (padding junk beyond a
+  row's committed length is never attended — verify windows overwrite
+  positions before the causal frontier reaches them);
+* a per-row ``target`` slot in the engine state masks commits, so rows
+  that finish early freeze exactly at their budget while the batch keeps
+  stepping (early-exit masking);
+* requests with different temperatures are grouped and served per group
+  (temperature is a jit-static of the decode step).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class GenerationRequest:
+    """One decode request.
+
+    ``temperature=None`` inherits the engine's ``SpecConfig.temperature``.
+    ``seed`` feeds the batch PRNG derivation (sampling noise is shared
+    across a batch — per-request streams are reproducible for a fixed
+    batch composition, not across different co-batchings).
+    """
+
+    prompt: np.ndarray                  # (P,) int32 token ids, P >= 2
+    max_new_tokens: int = 64
+    temperature: Optional[float] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size < 2:
+            raise ValueError("prompt must have >= 2 tokens")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+@dataclass
+class RequestResult:
+    """Per-request generation output."""
+
+    request: GenerationRequest
+    tokens: np.ndarray                  # (max_new_tokens,) int32 new tokens
+    prompt_len: int
+    accept_len: float                   # committed tokens per verify step
+    #                                     (counted while the row was active)
+    steps: int                          # verify steps of the serving group
+    wall_s: float                       # wall time of the serving group
+
+    @property
+    def new_tokens(self) -> int:
+        return int(self.tokens.size)
+
+    @property
+    def sequence(self) -> np.ndarray:
+        """prompt + generated tokens."""
+        return np.concatenate([self.request.prompt, self.tokens])
+
+
+def pack_prompts(requests) -> tuple:
+    """Right-pad request prompts to a fixed-shape batch.
+
+    Returns ``(prompts (B, Pmax) int32, lengths (B,) int32)``.  Pad slots
+    repeat the row's last real token; they sit beyond the row's committed
+    length, so drafting masks them and the cache positions they prefill
+    are overwritten/causally masked before ever being read.
+    """
+    if not requests:
+        raise ValueError("pack_prompts needs at least one request")
+    lengths = np.array([r.prompt.size for r in requests], np.int32)
+    pmax = int(lengths.max())
+    out = np.empty((len(requests), pmax), np.int32)
+    for i, r in enumerate(requests):
+        out[i, : r.prompt.size] = r.prompt
+        out[i, r.prompt.size :] = r.prompt[-1]
+    return out, lengths

@@ -1,0 +1,37 @@
+"""Import shim so property-based test modules stay collectible when
+``hypothesis`` is not installed (offline containers).
+
+Use ``from _hypothesis_compat import given, settings, st`` instead of
+importing hypothesis directly: with hypothesis present this re-exports
+the real API; without it, ``@given``-decorated tests are skipped while
+every plain test in the module still collects and runs.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (pip install .[test])")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        """Accepts any strategy-building call and returns None — the
+        decorated tests are skipped, so strategies are never drawn."""
+
+        def __getattr__(self, name):
+            def strategy(*_a, **_k):
+                return None
+            return strategy
+
+    st = _StrategyStub()

@@ -1,0 +1,341 @@
+"""Pluggable decoding API: registries, golden equivalence with the legacy
+step builders, losslessness across all registered drafters, verifier-driven
+quantization, and request-level serving."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    BF16Verifier,
+    DraftProposal,
+    Drafter,
+    NgramDrafter,
+    PrunedDrafter,
+    SpecConfig,
+    VanillaDrafter,
+    W8A8Verifier,
+    available_drafters,
+    available_verifiers,
+    get_drafter,
+    get_verifier,
+    init_state,
+    make_decode_step,
+)
+from repro.core.drafting import draft_tokens
+from repro.core.verification import verify
+from repro.models import Model
+from repro.quant import quantize_params
+from repro.serving import GenerationRequest, SpecEngine
+
+
+def _model():
+    cfg = get_config("smollm-135m").reduced()
+    return Model(cfg)
+
+
+def _prompt(cfg, B=2, reps=5, seed=0):
+    rng = np.random.default_rng(seed)
+    pat = rng.integers(0, cfg.vocab_size, 6)
+    return jnp.array(np.tile(pat, reps)[None, :].repeat(B, 0).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    assert {"ngram", "vanilla", "pruned"} <= set(available_drafters())
+    assert {"bf16", "w8a8", "w4a8"} <= set(available_verifiers())
+
+
+def test_registry_roundtrip_all():
+    scfg = SpecConfig(gamma=3, k_min=1, k_max=2, pruned_retention=0.5)
+    for name in available_drafters():
+        d = get_drafter(name, scfg)
+        assert isinstance(d, Drafter) and d.name == name
+        if name != "vanilla":
+            assert d.gamma == scfg.gamma
+        assert get_drafter(d) is d                  # instance passthrough
+    for name in available_verifiers():
+        v = get_verifier(name, scfg)
+        assert v.name == name
+        assert get_verifier(v) is v
+
+
+def test_registry_lookup_types():
+    scfg = SpecConfig(gamma=4)
+    assert isinstance(get_drafter("ngram", scfg), NgramDrafter)
+    assert isinstance(get_drafter("vanilla", scfg), VanillaDrafter)
+    d = get_drafter("pruned", dataclasses.replace(scfg, pruned_retention=0.5))
+    assert isinstance(d, PrunedDrafter) and d.retention == 0.5
+    assert isinstance(get_verifier("bf16"), BF16Verifier)
+    assert isinstance(get_verifier("w8a8"), W8A8Verifier)
+
+
+def test_unknown_names_raise():
+    with pytest.raises(ValueError, match="unknown drafter"):
+        get_drafter("treebeard")
+    with pytest.raises(ValueError, match="unknown verifier"):
+        get_verifier("fp4")
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence vs the legacy (seed-era) serve step
+# ---------------------------------------------------------------------------
+
+def _legacy_commit_tokens(tokens, length, drafts, next_token, n_accept):
+    """Frozen copy of the seed-era ``_commit_tokens``."""
+    B, S = tokens.shape
+    gamma = drafts.shape[1]
+    i = jnp.arange(gamma + 1)[None, :]
+    vals = jnp.concatenate([drafts, next_token[:, None]], axis=1)
+    vals = jnp.where(i == n_accept[:, None], next_token[:, None], vals)
+    pos = jnp.clip(length[:, None] + i, 0, S - 1)
+    keep = i <= n_accept[:, None]
+    cur = jnp.take_along_axis(tokens, pos, axis=1)
+    vals = jnp.where(keep, vals, cur)
+    bidx = jnp.arange(B)[:, None]
+    return tokens.at[bidx, pos].set(vals)
+
+
+def _legacy_make_serve_step(model, scfg):
+    """Frozen copy of the seed-era ``make_serve_step`` (pre-protocols)."""
+    gamma = scfg.gamma
+
+    def serve_step(params, state):
+        tokens, length = state["tokens"], state["length"]
+        drafts = draft_tokens(tokens, length, gamma=gamma,
+                              k_min=scfg.k_min, k_max=scfg.k_max)
+        last = jnp.take_along_axis(
+            tokens, jnp.maximum(length - 1, 0)[:, None], axis=1)
+        window = jnp.concatenate([last, drafts], axis=1)
+        start = jnp.maximum(length - 1, 0)
+
+        logits, cand = model.verify_step(params, state["cache"], window, start)
+        key, sub = jax.random.split(state["key"])
+        res = verify(logits, drafts, scfg.temperature, sub)
+
+        cache = model.commit(cand, res.n_accept)
+        tokens = _legacy_commit_tokens(tokens, length, drafts,
+                                       res.next_token, res.n_accept)
+        return {
+            "tokens": tokens,
+            "length": length + res.n_commit,
+            "cache": cache,
+            "key": key,
+            "stats": {
+                "commits": state["stats"]["commits"] + res.n_commit,
+                "steps": state["stats"]["steps"] + 1,
+            },
+        }
+
+    return serve_step
+
+
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_golden_equivalence_ngram_vs_legacy(temperature):
+    """make_decode_step(ngram, bf16) reproduces the seed-era serve step
+    bit-exactly: same tokens, lengths, commit counts, every step."""
+    m = _model()
+    cfg = m.cfg
+    params = m.init_params(jax.random.PRNGKey(0))
+    prompt = _prompt(cfg)
+    B, P = prompt.shape
+    scfg = SpecConfig(gamma=4, temperature=temperature)
+    buf = P + 40
+
+    def mk_state(with_drafter_slot):
+        key = jax.random.PRNGKey(42)
+        if with_drafter_slot:
+            state = init_state(m, B, buf, key)
+        else:   # seed-era state layout
+            state = {
+                "tokens": jnp.zeros((B, buf), jnp.int32),
+                "length": jnp.zeros((B,), jnp.int32),
+                "cache": m.init_cache(B, buf),
+                "key": key,
+                "stats": {"commits": jnp.zeros((B,), jnp.int32),
+                          "steps": jnp.zeros((), jnp.int32)},
+            }
+        state["tokens"] = state["tokens"].at[:, :P].set(prompt)
+        state["length"] = jnp.full((B,), P, jnp.int32)
+        state["cache"] = m.prefill(params, state["cache"], prompt[:, :-1])
+        return state
+
+    new_step = jax.jit(make_decode_step(m, "ngram", "bf16", scfg))
+    old_step = jax.jit(_legacy_make_serve_step(m, scfg))
+    s_new, s_old = mk_state(True), mk_state(False)
+    for _ in range(6):
+        s_new = new_step(params, s_new)
+        s_old = old_step(params, s_old)
+        assert bool(jnp.all(s_new["tokens"] == s_old["tokens"]))
+        assert bool(jnp.all(s_new["length"] == s_old["length"]))
+        assert bool(jnp.all(
+            s_new["stats"]["commits"] == s_old["stats"]["commits"]))
+
+
+# ---------------------------------------------------------------------------
+# Losslessness across every registered drafter
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("drafter", sorted(available_drafters()))
+def test_all_drafters_lossless_greedy(drafter):
+    """At T=0 every registered drafter commits exactly the autoregressive
+    stream of the same verifier — the losslessness guarantee is drafting-
+    strategy independent."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    prompt = _prompt(m.cfg)
+    N, P = 10, prompt.shape[1]
+    scfg = SpecConfig(temperature=0.0, gamma=3, pruned_retention=0.5)
+    rv = SpecEngine(m, scfg, drafter="vanilla", verifier="bf16").generate(
+        params, prompt, N)
+    rd = SpecEngine(m, scfg, drafter=drafter, verifier="bf16").generate(
+        params, prompt, N)
+    assert bool(jnp.all(rv.tokens[:, : P + N] == rd.tokens[:, : P + N]))
+    assert rd.mean_accept_len >= 1.0
+
+
+def test_legacy_mode_shim_matches_new_api():
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    prompt = _prompt(m.cfg)
+    scfg = SpecConfig(temperature=0.0, gamma=4)
+    r_old = SpecEngine(m, scfg, mode="spec").generate(params, prompt, 10)
+    r_new = SpecEngine(m, scfg, drafter="ngram", verifier="bf16").generate(
+        params, prompt, 10)
+    assert bool(jnp.all(r_old.tokens == r_new.tokens))
+    assert r_old.steps == r_new.steps
+
+
+# ---------------------------------------------------------------------------
+# Verifier-driven quantization (SpecConfig.verifier is live)
+# ---------------------------------------------------------------------------
+
+def test_w8a8_verifier_field_drives_quantization():
+    """``verifier="w8a8"`` alone must produce quantized verification:
+    identical stream to manually quantizing and serving BF16-passthrough."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    prompt = _prompt(m.cfg)
+    N, P = 10, prompt.shape[1]
+    scfg = SpecConfig(temperature=0.0, gamma=4, verifier="w8a8")
+
+    auto = SpecEngine(m, scfg).generate(params, prompt, N)
+    qparams = quantize_params(params, None)
+    manual = SpecEngine(m, scfg, drafter="ngram", verifier="bf16").generate(
+        qparams, prompt, N)
+    assert bool(jnp.all(auto.tokens[:, : P + N] == manual.tokens[:, : P + N]))
+
+    # and it differs from unquantized BF16 params at least in param bytes:
+    prepared = SpecEngine(m, scfg).prepare_params(params)
+    int8_leaves = [x for x in jax.tree.leaves(prepared)
+                   if hasattr(x, "dtype") and x.dtype == jnp.int8]
+    assert int8_leaves, "w8a8 prepare produced no int8 weights"
+
+
+def test_prepare_params_idempotent():
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    eng = SpecEngine(m, SpecConfig(verifier="w8a8"))
+    q1 = eng.prepare_params(params)
+    q2 = eng.prepare_params(q1)
+    assert jax.tree.structure(q1) == jax.tree.structure(q2)
+
+
+# ---------------------------------------------------------------------------
+# Request-level serving
+# ---------------------------------------------------------------------------
+
+def test_generate_requests_heterogeneous_matches_solo():
+    """Heterogeneous prompt lengths + budgets + seeds in one batched loop:
+    each request's stream equals its solo single-row run (T=0)."""
+    m = _model()
+    cfg = m.cfg
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    pat = rng.integers(0, cfg.vocab_size, 6)
+    scfg = SpecConfig(temperature=0.0, gamma=4)
+    requests = [
+        GenerationRequest(np.tile(pat, 5), max_new_tokens=6, seed=1),
+        GenerationRequest(np.tile(pat, 4), max_new_tokens=14, seed=2),
+        GenerationRequest(np.tile(pat, 3), max_new_tokens=9, seed=3),
+    ]
+    eng = SpecEngine(m, scfg, verifier="bf16")
+    results = eng.generate_requests(params, requests)
+    assert len(results) == len(requests)
+    for req, res in zip(requests, results):
+        assert res.new_tokens == req.max_new_tokens      # early-exit masking
+        solo = SpecEngine(m, scfg, verifier="bf16").generate(
+            params, jnp.asarray(req.prompt)[None], req.max_new_tokens)
+        solo_new = np.asarray(solo.tokens)[
+            0, req.prompt.size: req.prompt.size + req.max_new_tokens]
+        np.testing.assert_array_equal(res.tokens, solo_new)
+        assert res.accept_len >= 0.0
+        np.testing.assert_array_equal(res.sequence[: req.prompt.size],
+                                      req.prompt)
+
+
+def test_generate_requests_temperature_groups():
+    m = _model()
+    cfg = m.cfg
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    pat = rng.integers(0, cfg.vocab_size, 6)
+    requests = [
+        GenerationRequest(np.tile(pat, 4), max_new_tokens=5, temperature=0.0),
+        GenerationRequest(np.tile(pat, 4), max_new_tokens=7, temperature=1.0,
+                          seed=9),
+    ]
+    eng = SpecEngine(m, SpecConfig(gamma=3), verifier="bf16")
+    results = eng.generate_requests(params, requests)
+    for req, res in zip(requests, results):
+        assert res.new_tokens == req.max_new_tokens
+        toks = np.asarray(res.tokens)
+        assert toks.min() >= 0 and toks.max() < cfg.vocab_size
+
+
+def test_generate_requests_validation():
+    with pytest.raises(ValueError, match="prompt"):
+        GenerationRequest(np.array([1]), max_new_tokens=4)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        GenerationRequest(np.array([1, 2, 3]), max_new_tokens=0)
+    m = _model()
+    assert SpecEngine(m, SpecConfig(), verifier="bf16").generate_requests(
+        m.init_params(jax.random.PRNGKey(0)), []) == []
+
+
+# ---------------------------------------------------------------------------
+# Custom (unregistered) drafter plugs straight in
+# ---------------------------------------------------------------------------
+
+class _LastTokenDrafter(Drafter):
+    """Toy custom strategy: always propose the last committed token."""
+
+    name = "last-token"
+
+    def __init__(self, gamma):
+        self.gamma = gamma
+
+    def propose(self, model, params, tokens, length, dstate, key):
+        last = jnp.take_along_axis(
+            tokens, jnp.maximum(length - 1, 0)[:, None], axis=1)
+        drafts = jnp.repeat(last, self.gamma, axis=1)
+        return DraftProposal(tokens=drafts, probs=None), dstate, key
+
+
+def test_custom_drafter_instance_lossless():
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    prompt = _prompt(m.cfg)
+    N, P = 8, prompt.shape[1]
+    scfg = SpecConfig(temperature=0.0, gamma=3)
+    rv = SpecEngine(m, scfg, drafter="vanilla", verifier="bf16").generate(
+        params, prompt, N)
+    rc = SpecEngine(m, scfg, drafter=_LastTokenDrafter(3),
+                    verifier="bf16").generate(params, prompt, N)
+    assert bool(jnp.all(rv.tokens[:, : P + N] == rc.tokens[:, : P + N]))

@@ -1,7 +1,7 @@
 """Prompt-lookup drafter properties."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis optional
 
 from repro.core.drafting import draft_tokens
 

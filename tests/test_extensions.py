@@ -81,6 +81,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import sys; sys.path.insert(0, %r)
 import jax, jax.numpy as jnp
 from repro.configs import get_config
+from repro.launch.mesh import make_mesh
 from repro.models import moe as moe_mod
 from repro.models.moe import init_moe, apply_moe
 
@@ -88,8 +89,7 @@ cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
 p = init_moe(jax.random.PRNGKey(0), cfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model), cfg.dtype)
 y0, _ = jax.jit(lambda p, x: apply_moe(p, cfg, x))(p, x)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 2), ("data", "model"))
 for fsdp in (False, True):
     moe_mod.set_shard_map(mesh, ("data",), fsdp)
     with mesh:

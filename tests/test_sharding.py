@@ -105,11 +105,11 @@ def test_full_sharding_tree_on_real_params():
     from repro.launch.sharding import param_shardings, state_shardings
     from repro.models import Model
 
+    from repro.launch.mesh import make_mesh
     cfg = get_config("zamba2-2.7b").reduced()
     m = Model(cfg)
     params = jax.eval_shape(m.init_params, jax.random.PRNGKey(0))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     tree = param_shardings(params, mesh, fsdp=("data",))
     assert len(jax.tree.leaves(tree, is_leaf=lambda x: x is None)) > 0
     cache = jax.eval_shape(lambda: m.init_cache(2, 64, scan=True))

@@ -66,8 +66,8 @@ import sys, json
 sys.path.insert(0, %r)
 import jax
 from repro.launch.dryrun import lower_combo
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 with mesh:
     row = lower_combo("smollm-135m", "decode_32k", mesh, "w8a8", gamma=5,
                       skip_loop_costs=True)

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis optional
 
 from repro.core.verification import verify
 
@@ -98,7 +98,10 @@ def test_acceptance_improves_with_alignment():
     B, g, V = 64, 5, 50
     key = jax.random.PRNGKey(3)
     k0, k1, k2 = jax.random.split(key, 3)
-    logits = jax.random.normal(k0, (B, g + 1, V)) * 3.0
+    # scale 5: peaky enough that argmax-aligned drafts clear the +1 margin
+    # (at 3.0 the mean gap is only ~0.9 — this test never ran in the seed,
+    # its module errored at collection on the hypothesis import)
+    logits = jax.random.normal(k0, (B, g + 1, V)) * 5.0
     aligned = jnp.argmax(logits[:, :g], -1)
     random_d = jax.random.randint(k1, (B, g), 0, V)
     r_al = verify(logits, aligned, 1.0, k2)
