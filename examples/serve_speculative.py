@@ -12,9 +12,11 @@ Part 1 — method comparison (the paper's three serving modes, expressed as
 Reports measured acceptance lengths + CPU wall, and the Eq. 11-13 modeled
 TPU speedups at paper scale (7B-class target model on one v5e chip).
 
-Part 2 — request-level serving: a batch of ``GenerationRequest``s with
-heterogeneous prompt lengths, token budgets and seeds served in ONE
-batched speculative loop with per-request early exit.
+Part 2 — continuous-batching serving: a queue of ``GenerationRequest``s
+with heterogeneous prompt lengths, token budgets and seeds flows through
+a fixed number of batch slots (``--slots``); finished rows are harvested
+and refilled mid-loop without recompiling the decode step, and each
+request reports its own queue/service latency.
 
 Run:  PYTHONPATH=src python examples/serve_speculative.py [--task gsm8k]
 """
@@ -38,6 +40,8 @@ def main():
     ap.add_argument("--gamma", type=int, default=5)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=2,
+                    help="decode slots for the continuous-batching demo")
     ap.add_argument("--new-tokens", type=int, default=32)
     args = ap.parse_args()
 
@@ -63,7 +67,8 @@ def main():
         print(f"{method:10s} {r['L']:6.2f} {r['cpu_tok_s']:10.1f} {sp:19.2f}x")
 
     # ------------------------------------------------------------------
-    print("\n== request-level serving (heterogeneous budgets/seeds) ==")
+    print(f"\n== continuous batching: 4 requests through {args.slots} "
+          f"slots ==")
     V = model.cfg.vocab_size
     base = np.asarray(task_prompts(args.task, 4, 40, V))
     requests = [
@@ -73,11 +78,16 @@ def main():
         GenerationRequest(base[3],       max_new_tokens=12, seed=44),
     ]
     engine = SpecEngine(model, scfg, verifier="w8a8")
-    results = engine.generate_requests(qparams, requests)
+    results = engine.generate_requests(qparams, requests,
+                                       batch_slots=args.slots)
     for i, r in enumerate(results):
         print(f"req[{i}] prompt={r.prompt_len:3d} budget="
               f"{r.request.max_new_tokens:3d} -> new={r.new_tokens:3d} "
-              f"L={r.accept_len:.2f} first8={r.tokens[:8].tolist()}")
+              f"L={r.accept_len:.2f} queue={r.queue_s*1e3:7.1f}ms "
+              f"service={r.service_s*1e3:7.1f}ms "
+              f"first8={r.tokens[:8].tolist()}")
+    print(f"decode-step compilations: {engine.step_traces} "
+          f"(admission is retrace-free)")
 
 
 if __name__ == "__main__":

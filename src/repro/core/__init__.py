@@ -1,4 +1,5 @@
 """The paper's primary contribution: quantized self-speculative decoding."""
+from repro.core import prng  # noqa: F401
 from repro.core.config import ModelConfig, QuantConfig, SpecConfig  # noqa: F401
 from repro.core.drafting import draft_tokens  # noqa: F401
 from repro.core.verification import verify, VerifyResult  # noqa: F401

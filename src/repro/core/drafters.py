@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import prng
 from repro.core.config import SpecConfig
 from repro.core.drafting import draft_tokens
 from repro.core.protocols import DraftProposal, Drafter, register_drafter
@@ -93,9 +94,15 @@ class PrunedDrafter(Drafter):
             num_layers=n_keep,
         )
 
+    def alloc_state(self, model, params, batch: int, buf_len: int, *,
+                    draft_params=None):
+        # empty (un-prefilled) draft cache; rows are filled on admission
+        return model.init_cache(batch, buf_len, num_layers=self.n_keep(model))
+
     def propose(self, model, params, tokens, length, dstate, key):
         n_keep = self.n_keep(model)
         pcache = dstate
+        per_row = prng.is_per_row(key)
         tok = jnp.take_along_axis(
             tokens, jnp.maximum(length - 1, 0)[:, None], axis=1)
         pos = jnp.maximum(length - 1, 0)
@@ -109,10 +116,11 @@ class PrunedDrafter(Drafter):
                 qprobs.append(jax.nn.one_hot(nxt, lf.shape[-1],
                                              dtype=jnp.float32))
             else:
-                key, sub = jax.random.split(key)
+                key, sub = prng.next_key(key)
                 q = jax.nn.softmax(lf / self.temperature, axis=-1)
-                nxt = jax.random.categorical(
-                    sub, jnp.log(jnp.maximum(q, 1e-30))).astype(jnp.int32)
+                logq = jnp.log(jnp.maximum(q, 1e-30))
+                nxt = (prng.categorical_rows(sub, logq) if per_row
+                       else jax.random.categorical(sub, logq)).astype(jnp.int32)
                 qprobs.append(q)
             drafts.append(nxt)
             tok = nxt[:, None]

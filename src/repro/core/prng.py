@@ -1,0 +1,80 @@
+"""Per-row PRNG streams for batch-composition-invariant sampling.
+
+The decode step threads a PRNG key through drafting and verification.
+With a *single* key, sampling noise is shared across the batch: the
+random bits a row consumes depend on which other rows it was co-batched
+with, so T>0 generations were only reproducible for a fixed batch
+composition.
+
+Continuous batching makes that unacceptable — a request may be admitted
+into any slot at any step — so the engine state's ``key`` slot now also
+accepts a *per-row* key array of shape ``(B, 2)`` (one legacy uint32
+PRNGKey per row).  Each row's key is derived purely from the request's
+``seed`` (:func:`request_key`) and split once per decode step, making a
+row's sample stream a function of (seed, own token history) only:
+invariant to co-batching, admission order, slot index and batch size.
+
+The helpers below dispatch on key rank so the same traced decode step
+serves both layouts:
+
+* ``key.ndim == 1`` — single shared key ``(2,)``: legacy behaviour,
+  bit-for-bit identical to the pre-scheduler code path.
+* ``key.ndim == 2`` — per-row keys ``(B, 2)``: every split / uniform /
+  categorical is vmapped over rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Salt for deriving request streams; any fixed constant works — it only
+# decouples request streams from other PRNGKey(0) uses in the codebase.
+REQUEST_STREAM_SALT = 0x5EED
+
+
+def request_key(seed: int) -> jax.Array:
+    """The per-request root key: a pure function of ``seed``.
+
+    Independent of batch composition, admission order and slot index, so
+    a request's sample stream is reproducible across any co-batching.
+    """
+    return jax.random.fold_in(jax.random.PRNGKey(REQUEST_STREAM_SALT), seed)
+
+
+def is_per_row(key: jax.Array) -> bool:
+    """True for a ``(B, 2)`` per-row key array, False for a single key."""
+    return key.ndim == 2
+
+
+def next_key(key: jax.Array):
+    """Split into ``(carry, sub)`` — per-row keys split row-wise."""
+    if is_per_row(key):
+        ks = jax.vmap(jax.random.split)(key)          # (B, 2, 2)
+        return ks[:, 0], ks[:, 1]
+    ks = jax.random.split(key)
+    return ks[0], ks[1]
+
+
+def split3(key: jax.Array):
+    """Three-way split matching :func:`next_key` semantics."""
+    if is_per_row(key):
+        ks = jax.vmap(lambda k: jax.random.split(k, 3))(key)   # (B, 3, 2)
+        return ks[:, 0], ks[:, 1], ks[:, 2]
+    k0, k1, k2 = jax.random.split(key, 3)
+    return k0, k1, k2
+
+
+def uniform_rows(key: jax.Array, n: int) -> jax.Array:
+    """(B, 2) per-row keys → (B, n) uniforms, one lane per row."""
+    return jax.vmap(lambda k: jax.random.uniform(k, (n,)))(key)
+
+
+def categorical_rows(key: jax.Array, logits: jax.Array) -> jax.Array:
+    """(B, 2) per-row keys + (B, V) logits → (B,) per-row samples."""
+    return jax.vmap(jax.random.categorical)(key, logits)
+
+
+def fill_row(keys: jax.Array, row: int, seed: int) -> jax.Array:
+    """Return ``keys`` with ``row`` reset to the request stream for ``seed``
+    (outside jit — used by slot admission)."""
+    return keys.at[row].set(request_key(seed))

@@ -25,6 +25,18 @@ Protocol contracts
   after verification; reconcile draft-side caches with the accepted
   prefix).  Default: identity.
 
+Continuous batching adds two *slot-level* lifecycle hooks (both outside
+jit; defaults work for any drafter whose state pytree is batch-leading):
+
+* ``alloc_state(model, params, batch, buf_len, ...)`` → an **empty**
+  drafter-state pytree with ``batch`` rows.  The scheduler allocates this
+  once per serving loop; rows are populated on admission.  Default ``{}``.
+* ``prefill_row(model, params, dstate, row, prompt, buf_len, ...)`` →
+  drafter-state with slot ``row`` reset for a newly admitted request: the
+  default re-runs ``init_state`` on the single-row prompt and scatters the
+  result into ``dstate``, guaranteeing a recycled slot carries no state
+  from its previous occupant.
+
 ``Verifier`` — two methods:
 
 * ``prepare(model, params, act_stats=None)`` → params (runs outside jit,
@@ -93,6 +105,31 @@ class Drafter:
     def advance(self, model, dstate, proposal: DraftProposal, n_accept):
         """Reconcile drafter state with the accepted prefix (inside jit)."""
         return dstate
+
+    # -- continuous batching (slot-level lifecycle, outside jit) --------
+    def alloc_state(self, model, params, batch: int, buf_len: int, *,
+                    draft_params=None) -> Any:
+        """Allocate an empty ``batch``-row drafter-state pytree for a
+        scheduler loop; rows are filled by :meth:`prefill_row` on
+        admission.  Default: ``{}`` (stateless drafters)."""
+        return {}
+
+    def prefill_row(self, model, params, dstate, row: int, prompt,
+                    buf_len: int, *, aux_embeds=None, draft_params=None):
+        """Reset slot ``row`` of ``dstate`` for a newly admitted request.
+
+        ``prompt`` is ``(1, P)``.  The default builds a fresh single-row
+        state via :meth:`init_state` and scatters it into the batch
+        pytree, so the recycled slot cannot leak draft-side state from
+        its previous occupant.  Stateless drafters are a no-op.
+        """
+        fresh = self.init_state(model, params, prompt, buf_len,
+                                aux_embeds=aux_embeds,
+                                draft_params=draft_params)
+        if not fresh:
+            return dstate
+        return jax.tree.map(lambda full, one: full.at[row].set(one[0]),
+                            dstate, fresh)
 
 
 class Verifier:

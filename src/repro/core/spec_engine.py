@@ -23,7 +23,11 @@ the production mesh).  Engine state is a pytree dict:
   drafter_state  pytree             opaque drafter-owned state ({} for
                                     stateless drafters, a pruned-model KV
                                     cache for ``pruned``, …)
-  key            PRNGKey
+  key            PRNGKey or (B, 2)  single shared key, or per-row request
+                                    streams (``repro.core.prng``) so each
+                                    row samples independently of its
+                                    co-batched neighbours — the layout the
+                                    continuous-batching scheduler uses
   stats          {"commits": (B,), "steps": ()}  acceptance bookkeeping
 
 ``make_serve_step`` / ``make_vanilla_step`` / ``make_pruned_step`` remain
@@ -35,6 +39,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import prng
 
 
 def init_state(model, batch: int, buf_len: int, key,
@@ -110,7 +116,7 @@ def make_decode_step(model, drafter, verifier, scfg,
 
         logits, cand = model.verify_step(params, state["cache"], window,
                                          start, num_layers=num_layers)
-        key, sub = jax.random.split(key)
+        key, sub = prng.next_key(key)
         res = verifier.verify(logits, proposal, scfg.temperature, sub)
 
         cache = model.commit(cand, res.n_accept, num_layers=num_layers)

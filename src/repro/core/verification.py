@@ -19,6 +19,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import prng
+
 
 class VerifyResult(NamedTuple):
     n_accept: jax.Array      # (B,) int32 — accepted draft tokens ∈ [0, γ]
@@ -45,11 +47,23 @@ def verify(
     ``draft_probs=None`` means a deterministic drafter (one-hot q).  With a
     stochastic drafter (the Table-5 pruned-model baseline), the full Eq. 2
     ratio p/q and Eq. 3 residual are used.
+
+    ``key`` is either a single PRNGKey (sampling noise shared across the
+    batch — legacy) or a ``(B, 2)`` per-row key array (``repro.core.prng``):
+    every row then consumes its own stream, making the committed tokens
+    invariant to batch composition (continuous batching relies on this).
     """
     B, g1, V = logits.shape
     gamma = g1 - 1
+    per_row = prng.is_per_row(key)
     p = _probs(logits, temperature)                                   # (B, γ+1, V)
-    k_acc, k_res, k_bonus = jax.random.split(key, 3)
+    k_acc, k_res, k_bonus = prng.split3(key)
+
+    def _sample(k, probs):
+        logp = jnp.log(jnp.maximum(probs, 1e-30))
+        if per_row:
+            return prng.categorical_rows(k, logp).astype(jnp.int32)
+        return jax.random.categorical(k, logp).astype(jnp.int32)
 
     if gamma == 0:
         # degenerate vanilla window (VanillaDrafter): nothing to accept —
@@ -58,8 +72,7 @@ def verify(
         if temperature == 0.0:
             next_token = jnp.argmax(p_at, axis=-1).astype(jnp.int32)
         else:
-            next_token = jax.random.categorical(
-                k_bonus, jnp.log(jnp.maximum(p_at, 1e-30))).astype(jnp.int32)
+            next_token = _sample(k_bonus, p_at)
         zero = jnp.zeros((B,), jnp.int32)
         return VerifyResult(n_accept=zero, next_token=next_token,
                             n_commit=zero + 1)
@@ -71,7 +84,8 @@ def verify(
         q_draft = jnp.take_along_axis(draft_probs, drafts[..., None], axis=-1)[..., 0]
         ratio = p_draft / jnp.maximum(q_draft, 1e-20)
 
-    r = jax.random.uniform(k_acc, (B, gamma))
+    r = (prng.uniform_rows(k_acc, gamma) if per_row
+         else jax.random.uniform(k_acc, (B, gamma)))
     accept = r < jnp.minimum(ratio, 1.0)                              # (B, γ)
     # prefix acceptance: position i counts only if 0..i-1 all accepted
     prefix_ok = jnp.cumprod(accept.astype(jnp.int32), axis=1)
@@ -96,8 +110,8 @@ def verify(
         # fall back to p when the residual is numerically empty
         rsum = jnp.sum(residual, axis=-1, keepdims=True)
         residual = jnp.where(rsum > 1e-9, residual / jnp.maximum(rsum, 1e-20), p_at)
-        corrective = jax.random.categorical(k_res, jnp.log(jnp.maximum(residual, 1e-30)))
-        bonus = jax.random.categorical(k_bonus, jnp.log(jnp.maximum(p_at, 1e-30)))
+        corrective = _sample(k_res, residual)
+        bonus = _sample(k_bonus, p_at)
         next_token = jnp.where(all_accepted, bonus, corrective).astype(jnp.int32)
 
     return VerifyResult(n_accept=n_accept, next_token=next_token, n_commit=n_accept + 1)

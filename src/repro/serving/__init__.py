@@ -1,6 +1,12 @@
-from repro.serving.engine import GenResult, SpecEngine  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    DEFAULT_BATCH_SLOTS,
+    GenResult,
+    SpecEngine,
+)
 from repro.serving.request import (  # noqa: F401
     GenerationRequest,
     RequestResult,
     pack_prompts,
+    pad_prompt,
 )
+from repro.serving.scheduler import Scheduler, SlotEvent  # noqa: F401

@@ -20,9 +20,14 @@ Two serving entry points:
   token budget (the benchmark/table workhorse);
 * :meth:`generate_requests` — a list of
   :class:`~repro.serving.request.GenerationRequest` with heterogeneous
-  prompt lengths, ``max_new_tokens`` and seeds, served in one batched
-  loop with per-request early exit; returns per-request
-  :class:`~repro.serving.request.RequestResult`.
+  prompt lengths, budgets, seeds and temperatures, served through the
+  continuous-batching :class:`~repro.serving.scheduler.Scheduler`: a
+  fixed number of batch slots steps in one jit-compiled loop, and
+  whenever a row exhausts its budget the next pending request is admitted
+  into the freed slot via :meth:`prefill_into_slot` — the decode step
+  never retraces on admission (``step_traces`` counts compilations).
+  Returns per-request :class:`~repro.serving.request.RequestResult` with
+  queue/service timing.
 
 The legacy ``mode=`` constructor argument ("spec" | "vanilla" |
 "pruned") remains as a deprecated shim: it maps to the matching drafter
@@ -38,17 +43,19 @@ from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.core import prng
 from repro.core.config import SpecConfig
 from repro.core.protocols import get_drafter, get_verifier
 from repro.core.spec_engine import init_state, make_decode_step
-from repro.serving.request import GenerationRequest, RequestResult, pack_prompts
+from repro.serving.request import GenerationRequest, RequestResult, pad_prompt
+from repro.serving.scheduler import Scheduler
 
 # deprecated mode-string → drafter-registry-name mapping (public: the serve
 # CLI builds its --mode choices from it)
 LEGACY_MODES = {"spec": "ngram", "vanilla": "vanilla", "pruned": "pruned"}
 _MAX_TEMP_STEPS = 8        # bound on per-temperature compiled-step cache
+DEFAULT_BATCH_SLOTS = 8    # decode rows per scheduler loop (memory bound)
 
 
 @dataclass
@@ -84,10 +91,20 @@ class SpecEngine:
             drafter if drafter is not None else scfg.drafter, scfg)
         self.verifier = get_verifier(
             verifier if verifier is not None else scfg.verifier, scfg)
-        self._step = jax.jit(
+        # decode-step (re)compilations across all temperature variants —
+        # the continuous-batching tests assert admission never bumps this
+        self.step_traces = 0
+        self._step = self._jit_counted(
             make_decode_step(model, self.drafter, self.verifier, scfg))
         self._steps_by_temp = {}                   # temperature overrides
         self._prepared = None                      # (params ref, prepared)
+
+    def _jit_counted(self, step_fn):
+        """jit the decode step, counting traces (== XLA compilations)."""
+        def counted(params, state):
+            self.step_traces += 1      # runs at trace time only
+            return step_fn(params, state)
+        return jax.jit(counted)
 
     # ------------------------------------------------------------------
     def prepare_params(self, params, act_stats=None):
@@ -116,7 +133,7 @@ class SpecEngine:
                 self._steps_by_temp.pop(next(iter(self._steps_by_temp)))
             scfg_t = dataclasses.replace(self.scfg, temperature=t)
             drafter = self.drafter.with_temperature(t)
-            step = jax.jit(
+            step = self._jit_counted(
                 make_decode_step(self.model, drafter, self.verifier, scfg_t))
             self._steps_by_temp[t] = (step, drafter)
         return self._steps_by_temp[t]
@@ -194,16 +211,95 @@ class SpecEngine:
         )
 
     # ------------------------------------------------------------------
+    # Continuous batching
+    # ------------------------------------------------------------------
+    def prefill_into_slot(
+        self,
+        params,
+        state: dict,
+        row: int,
+        request: GenerationRequest,
+        *,
+        pmax: Optional[int] = None,
+        drafter=None,
+        aux_embeds=None,               # (1, Sa, D) — this request's slice
+        draft_params=None,
+    ) -> dict:
+        """Admit ``request`` into slot ``row`` of a live decode state.
+
+        Resets *every* per-row slice the decode step reads — token buffer,
+        committed length, target, per-row PRNG stream, acceptance stats,
+        KV/SSM cache row (freshly initialised then prefilled, so nothing
+        leaks from the slot's previous occupant) and the drafter-state row
+        (``Drafter.prefill_row``).  Pure host-side scatters on the state
+        pytree: all shapes are unchanged, so the jitted decode step serves
+        the updated state without retracing.
+
+        ``pmax`` fixes the padded prompt length (the serving group's
+        maximum) so admission prefill compiles once per group; ``params``
+        must already be prepared (``prepare_params``).  Returns a new
+        state dict; the input is not mutated.
+        """
+        drafter = drafter if drafter is not None else self.drafter
+        P = request.prompt.size
+        buf = state["tokens"].shape[1]
+        pmax = P if pmax is None else pmax
+        if not P <= pmax <= buf:
+            raise ValueError(f"pmax {pmax} outside [{P}, {buf}]")
+        prompt = jnp.asarray(pad_prompt(request.prompt, pmax))[None]  # (1,pmax)
+
+        state = dict(state)
+        state["stats"] = dict(state["stats"])
+        row_tokens = jnp.zeros((buf,), jnp.int32).at[:pmax].set(prompt[0])
+        state["tokens"] = state["tokens"].at[row].set(row_tokens)
+        state["length"] = state["length"].at[row].set(P)
+        state["target"] = state["target"].at[row].set(
+            P + request.max_new_tokens)
+        state["key"] = prng.fill_row(state["key"], row, request.seed)
+        state["stats"]["commits"] = state["stats"]["commits"].at[row].set(0)
+        state["stats"]["row_steps"] = \
+            state["stats"]["row_steps"].at[row].set(0)
+
+        # KV/SSM cache row: fresh init + single-row prefill, scattered in.
+        # The padded prefill writes junk K/V at positions [P-1, pmax-1),
+        # but verify windows cover every position gap-free before the
+        # causal frontier reads it — dead weight, never live state.
+        row_cache = self.model.init_cache(1, buf)
+        row_cache = self.model.prefill(
+            params, row_cache, prompt[:, :-1], aux_embeds=aux_embeds)
+        state["cache"] = jax.tree.map(
+            lambda full, one: full.at[row].set(one[0]),
+            state["cache"], row_cache)
+        # the drafter gets the UNPADDED prompt: draft-side caches may have
+        # slots the drafter never rewrites (e.g. the pruned drafter skips
+        # the last draft position on a full accept), so pad junk there
+        # would be live — solo runs have zeros, and bit-identity demands
+        # the admitted row does too
+        state["drafter_state"] = drafter.prefill_row(
+            self.model, params, state["drafter_state"], row,
+            jnp.asarray(request.prompt, jnp.int32)[None], buf,
+            aux_embeds=aux_embeds, draft_params=draft_params)
+        return state
+
     def generate_requests(
         self,
         params,
         requests: Sequence[GenerationRequest],
         *,
-        aux_embeds=None,
+        batch_slots: Optional[int] = None,
+        aux_embeds=None,               # (len(requests), Sa, D), request order
         draft_params=None,
     ) -> List[RequestResult]:
-        """Serve a batch of requests with heterogeneous prompt lengths,
-        budgets and seeds; returns results in request order.
+        """Serve requests with heterogeneous prompt lengths, budgets,
+        seeds and temperatures; returns results in request order.
+
+        Requests flow through the continuous-batching scheduler:
+        ``batch_slots`` rows (default ``min(len(group), 8)``) step in one
+        fixed-shape jitted loop, and finished rows are refilled from the
+        pending queue mid-loop — with ``len(requests) > batch_slots`` the
+        batch stays saturated instead of freezing finished rows.  Each
+        request's tokens are bit-identical to serving it solo (per-row
+        PRNG streams + full per-row state reset at admission).
 
         Heterogeneous *prompt lengths* require attention-family caches
         (right-padding is masked positionally); recurrent-state archs
@@ -211,52 +307,55 @@ class SpecEngine:
         """
         if not requests:
             return []
+        t_arrival = time.perf_counter()    # queue_s counts from call time,
+        #                                    across sequential temp groups
         params = self._prepare_cached(params)
         results: List[Optional[RequestResult]] = [None] * len(requests)
 
         # temperature is jit-static: group requests per effective T
         groups = {}
         for i, r in enumerate(requests):
-            t = self.scfg.temperature if r.temperature is None else float(r.temperature)
+            t = (self.scfg.temperature if r.temperature is None
+                 else float(r.temperature))
             groups.setdefault(t, []).append(i)
 
         for t, idxs in groups.items():
             step, drafter = self._step_for_temperature(t)
             batch = [requests[i] for i in idxs]
-            prompts_np, lengths_np = pack_prompts(batch)
-            if (len(set(lengths_np.tolist())) > 1
+            lengths = [r.prompt.size for r in batch]
+            if (len(set(lengths)) > 1
                     and self.model.cfg.arch_type in ("ssm", "hybrid")):
                 raise ValueError(
                     f"{self.model.cfg.arch_type} caches are recurrent: "
                     "heterogeneous prompt lengths cannot be right-padded; "
                     "batch equal-length prompts")
-            targets_np = lengths_np + np.array(
-                [r.max_new_tokens for r in batch], np.int32)
-            buf = int(targets_np.max()) + drafter.gamma + 2
+            slots = min(DEFAULT_BATCH_SLOTS if batch_slots is None
+                        else batch_slots, len(batch))
+            pmax = max(lengths)
+            buf = max(r.prompt.size + r.max_new_tokens for r in batch) \
+                + drafter.gamma + 2
 
-            key = jax.random.PRNGKey(len(batch))
-            for r in batch:
-                key = jax.random.fold_in(key, r.seed)
+            # all slots idle (length == target == 0); the scheduler admits
+            keys0 = jnp.zeros((slots, 2), jnp.uint32)   # per-row streams
+            state = init_state(
+                self.model, slots, buf, keys0,
+                drafter_state=drafter.alloc_state(
+                    self.model, params, slots, buf,
+                    draft_params=draft_params),
+                target=jnp.zeros((slots,), jnp.int32))
 
-            state = self._init_state(
-                params, jnp.asarray(prompts_np), lengths_np, targets_np,
-                buf, key, drafter=drafter, aux_embeds=aux_embeds,
-                draft_params=draft_params)
-            max_new_max = int((targets_np - lengths_np).max())
-            state, wall = self._run(step, params, state, max_new_max * 2 + 8)
+            def admit(st, slot, j, _idxs=idxs, _drafter=drafter, _pmax=pmax):
+                i = _idxs[j]
+                aux = aux_embeds[i: i + 1] if aux_embeds is not None else None
+                return self.prefill_into_slot(
+                    params, st, slot, requests[i], pmax=_pmax,
+                    drafter=_drafter, aux_embeds=aux,
+                    draft_params=draft_params)
 
-            tokens = np.asarray(state["tokens"])
-            commits = np.asarray(state["stats"]["commits"])
-            row_steps = np.asarray(state["stats"]["row_steps"])
-            n_steps = int(state["stats"]["steps"])
-            for row, i in enumerate(idxs):
-                p = int(lengths_np[row])
-                results[i] = RequestResult(
-                    request=requests[i],
-                    tokens=tokens[row, p: int(targets_np[row])].copy(),
-                    prompt_len=p,
-                    accept_len=float(commits[row]) / max(int(row_steps[row]), 1),
-                    steps=n_steps,
-                    wall_s=wall,
-                )
+            sched = Scheduler(batch, slots)
+            _, group_results = sched.run(
+                state, admit=admit, step=lambda st, _s=step: _s(params, st),
+                t0=t_arrival)
+            for j, i in enumerate(idxs):
+                results[i] = group_results[j]
         return results

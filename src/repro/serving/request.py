@@ -2,16 +2,23 @@
 
 ``SpecEngine.generate_requests`` serves a list of
 :class:`GenerationRequest` with heterogeneous prompt lengths,
-``max_new_tokens`` and seeds in one fixed-shape batched decode loop:
+``max_new_tokens``, seeds and temperatures through the continuous-batching
+scheduler (:class:`repro.serving.scheduler.Scheduler`):
 
-* prompts are right-padded to the batch maximum (padding junk beyond a
-  row's committed length is never attended — verify windows overwrite
-  positions before the causal frontier reaches them);
-* a per-row ``target`` slot in the engine state masks commits, so rows
-  that finish early freeze exactly at their budget while the batch keeps
-  stepping (early-exit masking);
-* requests with different temperatures are grouped and served per group
-  (temperature is a jit-static of the decode step).
+* a fixed number of batch *slots* steps in one jit-compiled decode loop;
+  prompts are right-padded to the serving group's maximum (padding junk
+  beyond a row's committed length is never attended — verify windows
+  overwrite positions before the causal frontier reaches them);
+* a per-row ``target`` slot in the engine state masks commits, so a row
+  that exhausts its budget freezes exactly there; the scheduler harvests
+  it and admits the next pending request into the freed slot
+  (prefill-into-slot — no recompilation, the decode step stays
+  fixed-shape);
+* each request's ``seed`` derives a per-row PRNG stream
+  (``repro.core.prng.request_key``), so generated tokens are invariant to
+  batch composition, admission order and slot placement;
+* requests with different temperatures are grouped and scheduled per
+  group (temperature is a jit-static of the decode step).
 """
 from __future__ import annotations
 
@@ -26,9 +33,9 @@ class GenerationRequest:
     """One decode request.
 
     ``temperature=None`` inherits the engine's ``SpecConfig.temperature``.
-    ``seed`` feeds the batch PRNG derivation (sampling noise is shared
-    across a batch — per-request streams are reproducible for a fixed
-    batch composition, not across different co-batchings).
+    ``seed`` derives the request's own PRNG stream: the generated tokens
+    depend only on (prompt, seed, temperature, params), never on which
+    other requests happened to share the batch.
     """
 
     prompt: np.ndarray                  # (P,) int32 token ids, P >= 2
@@ -46,15 +53,23 @@ class GenerationRequest:
 
 @dataclass
 class RequestResult:
-    """Per-request generation output."""
+    """Per-request generation output (all fields are request-level)."""
 
     request: GenerationRequest
     tokens: np.ndarray                  # (max_new_tokens,) int32 new tokens
     prompt_len: int
     accept_len: float                   # committed tokens per verify step
-    #                                     (counted while the row was active)
-    steps: int                          # verify steps of the serving group
-    wall_s: float                       # wall time of the serving group
+    #                                     while this request occupied a slot
+    steps: int                          # verify steps this request was
+    #                                     actively decoding for
+    queue_s: float                      # time spent waiting for a slot
+    service_s: float                    # time from slot admission to the
+    #                                     step that completed the request
+
+    @property
+    def wall_s(self) -> float:
+        """End-to-end request latency: queueing + service."""
+        return self.queue_s + self.service_s
 
     @property
     def new_tokens(self) -> int:
@@ -83,3 +98,12 @@ def pack_prompts(requests) -> tuple:
         out[i, : r.prompt.size] = r.prompt
         out[i, r.prompt.size :] = r.prompt[-1]
     return out, lengths
+
+
+def pad_prompt(prompt: np.ndarray, pmax: int) -> np.ndarray:
+    """Right-pad one prompt to ``pmax`` with its last real token (the
+    single-row analogue of :func:`pack_prompts`, used by slot admission)."""
+    prompt = np.asarray(prompt, np.int32).reshape(-1)
+    out = np.full((pmax,), prompt[-1], np.int32)
+    out[: prompt.size] = prompt
+    return out

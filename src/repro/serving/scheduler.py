@@ -1,0 +1,158 @@
+"""Slot-level continuous batching: admit → step → harvest.
+
+The scheduler keeps the fixed-shape batched decode loop saturated.  A
+serving *group* (requests sharing a temperature) gets ``batch_slots``
+rows in the engine-state pytree; the scheduler
+
+1. **admits** pending requests into free slots
+   (``SpecEngine.prefill_into_slot`` resets the row's token buffer,
+   KV/SSM cache slice, drafter-state row, per-row PRNG stream, ``length``
+   / ``target`` and per-row stats — all pure host-side ``.at[row].set``
+   scatters, so the jit-compiled decode step never retraces);
+2. **steps** the whole batch through the jitted decode step;
+3. **harvests** rows whose per-row ``target`` fired (``length >=
+   target``), records the request's tokens + queue/service timing, and
+   frees the slot for the next admission;
+
+until the pending queue drains and every slot is empty.  Because each
+row's PRNG stream, cache slice and token buffer are functions of its own
+request only, the harvested tokens are bit-identical to serving the
+request solo — scheduling is an invisible throughput optimisation, never
+a semantic one (the losslessness framing of Draft & Verify, arXiv:
+2309.08168, extended to the serving loop).
+
+The scheduler is deliberately array-framework-agnostic: it orchestrates
+via two callables (``admit``, ``step``) and reads the canonical engine
+state schema (``repro.core.spec_engine.init_state``) with
+``np.asarray``.  That keeps it unit-testable without a model and reusable
+by any engine that honours the state schema.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.request import GenerationRequest, RequestResult
+
+
+@dataclass
+class SlotEvent:
+    """Audit-trail entry: one request's occupancy of one slot."""
+
+    request_index: int
+    slot: int
+    admit_step: int            # scheduler step count at admission
+    harvest_step: int = -1     # step count when the row was harvested
+
+
+@dataclass
+class Scheduler:
+    """Continuous-batching loop over a fixed number of decode slots.
+
+    ``run`` consumes the request list in arrival order (FIFO admission)
+    and returns per-request :class:`RequestResult` in request order.  The
+    ``events`` audit trail records every (request, slot) occupancy with
+    admit/harvest step counts — the property tests assert the scheduler's
+    conservation laws on it (every request served exactly once, no slot
+    double-booked).
+    """
+
+    requests: Sequence[GenerationRequest]
+    batch_slots: int
+    events: List[SlotEvent] = field(default_factory=list)
+    steps: int = 0             # decode steps taken by the loop
+
+    def __post_init__(self):
+        if self.batch_slots < 1:
+            raise ValueError("batch_slots must be >= 1")
+        self.requests = list(self.requests)
+        self._pending = deque(range(len(self.requests)))
+        self._slots: List[Optional[SlotEvent]] = [None] * self.batch_slots
+
+    # ------------------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return bool(self._pending) or any(
+            ev is not None for ev in self._slots)
+
+    def run(
+        self,
+        state: dict,
+        *,
+        admit: Callable[[dict, int, int], dict],
+        step: Callable[[dict], dict],
+        t0: Optional[float] = None,
+    ) -> tuple:
+        """Drive the loop until the queue drains.
+
+        ``admit(state, slot, request_index)`` must return the state with
+        that slot prefilled for the request; ``step(state)`` advances the
+        whole batch one verify step.  ``t0`` is the arrival timestamp the
+        requests' ``queue_s`` is measured from (``time.perf_counter``
+        clock) — callers serving several scheduler loops sequentially
+        pass the call-level start so later loops report the full wait.
+        Returns ``(state, results)`` with ``results`` in request order.
+        """
+        results: List[Optional[RequestResult]] = [None] * len(self.requests)
+        t0 = time.perf_counter() if t0 is None else t0
+        admit_t = [time.perf_counter()] * self.batch_slots
+        # hard safety: every active row commits >= 1 token per step, so
+        # the loop is bounded by the total token budget (+ slack per wave)
+        max_steps = sum(r.max_new_tokens for r in self.requests) \
+            + 8 * (len(self.requests) + self.batch_slots) + 8
+
+        while self.busy:
+            for slot in range(self.batch_slots):
+                if self._slots[slot] is None and self._pending:
+                    i = self._pending.popleft()
+                    # stamp before admit(): prefill cost is service, not
+                    # queueing
+                    admit_t[slot] = time.perf_counter()
+                    state = admit(state, slot, i)
+                    ev = SlotEvent(request_index=i, slot=slot,
+                                   admit_step=self.steps)
+                    self._slots[slot] = ev
+                    self.events.append(ev)
+
+            state = step(state)
+            self.steps += 1
+
+            lengths = np.asarray(state["length"])
+            targets = np.asarray(state["target"])
+            done = [s for s in range(self.batch_slots)
+                    if self._slots[s] is not None
+                    and lengths[s] >= targets[s]]
+            if done:
+                now = time.perf_counter()
+                tokens = np.asarray(state["tokens"])
+                commits = np.asarray(state["stats"]["commits"])
+                row_steps = np.asarray(state["stats"]["row_steps"])
+                for s in done:
+                    ev = self._slots[s]
+                    ev.harvest_step = self.steps
+                    r = self.requests[ev.request_index]
+                    P = r.prompt.size
+                    results[ev.request_index] = RequestResult(
+                        request=r,
+                        tokens=tokens[s, P: P + r.max_new_tokens].copy(),
+                        prompt_len=P,
+                        accept_len=float(commits[s])
+                        / max(int(row_steps[s]), 1),
+                        steps=int(row_steps[s]),
+                        queue_s=admit_t[s] - t0,
+                        service_s=now - admit_t[s],
+                    )
+                    self._slots[s] = None
+
+            if self.steps > max_steps:
+                stuck = [ev.request_index for ev in self._slots
+                         if ev is not None]
+                raise RuntimeError(
+                    f"scheduler failed to drain: {len(self._pending)} "
+                    f"pending, slots stuck on requests {stuck} after "
+                    f"{self.steps} steps")
+        return state, results
