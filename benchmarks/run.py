@@ -55,6 +55,7 @@ def main() -> None:
         table3_sensitivity,
         table4_accuracy,
         table5_pruning,
+        table6_tree,
         roofline_report,
     )
 
@@ -91,6 +92,15 @@ def main() -> None:
     lines.append(("table5_pruning", step_us,
                   f"quasar={qs['modeled_speedup']:.2f}x;pruned50_L="
                   f"{p50[0]['L'] if p50 else 'n/a'}"))
+
+    t6 = table6_tree.rows(quick=args.quick)
+    t6w = [r for r in t6
+           if r["verifier"] == "w8a8" and r["task"] == "ambiguous"]
+    chain = [r for r in t6w if r["template"].startswith("chain")][0]
+    widest = max(t6w, key=lambda r: r["leaves"])
+    lines.append(("table6_tree", step_us,
+                  f"chain_L={chain['L']:.2f};{widest['template']}_L="
+                  f"{widest['L']:.2f};speedup={widest['modeled_speedup']:.2f}x"))
 
     ab = ablation_bits.rows(quick=args.quick)
     w4 = [r for r in ab if r["verifier"] == "w4a8"][0]

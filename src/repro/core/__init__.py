@@ -1,8 +1,14 @@
 """The paper's primary contribution: quantized self-speculative decoding."""
 from repro.core import prng  # noqa: F401
 from repro.core.config import ModelConfig, QuantConfig, SpecConfig  # noqa: F401
-from repro.core.drafting import draft_tokens  # noqa: F401
-from repro.core.verification import verify, VerifyResult  # noqa: F401
+from repro.core.drafting import draft_tokens, draft_tree_tokens  # noqa: F401
+from repro.core.tree import TreeTemplate  # noqa: F401
+from repro.core.verification import (  # noqa: F401
+    TreeVerifyResult,
+    VerifyResult,
+    verify,
+    verify_tree,
+)
 from repro.core.protocols import (  # noqa: F401
     DraftProposal,
     Drafter,
@@ -15,7 +21,9 @@ from repro.core.protocols import (  # noqa: F401
     register_verifier,
 )
 from repro.core.drafters import (  # noqa: F401
+    ChainTreeAdapter,
     NgramDrafter,
+    NgramTreeDrafter,
     PrunedDrafter,
     VanillaDrafter,
 )

@@ -234,6 +234,11 @@ class SpecConfig:
     k_max: int = 4                      # prompt-lookup n-gram max (paper: ≤4)
     temperature: float = 0.0
     max_new_tokens: int = 64
-    drafter: str = "ngram"              # registered: ngram | vanilla | pruned
+    drafter: str = "ngram"              # registered: ngram | vanilla |
+    #                                     pruned | ngram-tree
     verifier: str = "w8a8"              # registered: w8a8 | w4a8 | bf16
     pruned_retention: float = 0.75      # for the Table-5 baseline
+    # per-depth branch factors for tree drafters ("ngram-tree"); None ⇒
+    # the degenerate (1,)*gamma chain template.  E.g. (3, 2, 1, 1) = 3
+    # root continuations, each forked once at depth 2, chains below.
+    tree_branches: Optional[Tuple[int, ...]] = None

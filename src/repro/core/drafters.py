@@ -1,10 +1,19 @@
 """Registered :class:`~repro.core.protocols.Drafter` implementations.
 
-* ``ngram``   — prompt-lookup (PLD) self-drafting, the paper's strategy.
-* ``vanilla`` — degenerate gamma=0 drafter: the unified decode step reduces
-  to the autoregressive baseline (one token per forward).
-* ``pruned``  — Table-5 baseline: the first ``retention * L`` layers of the
-  target model draft gamma tokens autoregressively (stochastic q at T>0).
+* ``ngram``      — prompt-lookup (PLD) self-drafting, the paper's strategy.
+* ``vanilla``    — degenerate gamma=0 drafter: the unified decode step
+  reduces to the autoregressive baseline (one token per forward).
+* ``pruned``     — Table-5 baseline: the first ``retention * L`` layers of
+  the target model draft gamma tokens autoregressively (stochastic q at
+  T>0).
+* ``ngram-tree`` — token-tree prompt lookup: a static
+  :class:`~repro.core.tree.TreeTemplate` populated from the top-k most
+  recent n-gram matches; verified down the tree (longest accepted
+  root-to-leaf path).
+
+:class:`ChainTreeAdapter` runs *any* chain drafter through the tree
+verification path as the degenerate single-branch tree — the
+bit-equality bridge the tree tests are built on.
 """
 from __future__ import annotations
 
@@ -13,8 +22,9 @@ import jax.numpy as jnp
 
 from repro.core import prng
 from repro.core.config import SpecConfig
-from repro.core.drafting import draft_tokens
+from repro.core.drafting import draft_tokens, draft_tree_tokens
 from repro.core.protocols import DraftProposal, Drafter, register_drafter
+from repro.core.tree import TreeTemplate
 
 
 @register_drafter("ngram")
@@ -37,6 +47,87 @@ class NgramDrafter(Drafter):
         drafts = draft_tokens(tokens, length, gamma=self.gamma,
                               k_min=self.k_min, k_max=self.k_max)
         return DraftProposal(tokens=drafts, probs=None), dstate, key
+
+
+@register_drafter("ngram-tree")
+class NgramTreeDrafter(Drafter):
+    """Token-tree prompt-lookup drafting (SpecInfer-style topology over
+    the paper's PLD strategy): one verifier pass scores ``num_leaves``
+    candidate continuations instead of one.  Deterministic
+    (``probs=None``), stateless, cache-free.  Exposes ``template`` — the
+    static topology the decode step builds its tree path from — and
+    attaches the template's ``parents``/``tree_mask`` to every proposal.
+    """
+
+    def __init__(self, template: TreeTemplate | None = None, *,
+                 gamma: int = 5, k_min: int = 1, k_max: int = 4):
+        self.template = (template if template is not None
+                         else TreeTemplate.chain(gamma))
+        self.gamma = self.template.gamma
+        self.k_min = k_min
+        self.k_max = k_max
+
+    @classmethod
+    def from_config(cls, scfg: SpecConfig) -> "NgramTreeDrafter":
+        tpl = (TreeTemplate(scfg.tree_branches) if scfg.tree_branches
+               else TreeTemplate.chain(scfg.gamma))
+        return cls(tpl, k_min=scfg.k_min, k_max=scfg.k_max)
+
+    def propose(self, model, params, tokens, length, dstate, key):
+        drafts = draft_tree_tokens(tokens, length, self.template,
+                                   k_min=self.k_min, k_max=self.k_max)
+        return DraftProposal(tokens=drafts, probs=None,
+                             parents=self.template.parents_dev,
+                             tree_mask=self.template.mask_dev), dstate, key
+
+
+class ChainTreeAdapter(Drafter):
+    """Run any chain drafter through the tree verification path.
+
+    Wraps a base :class:`Drafter` with the degenerate single-branch
+    :class:`TreeTemplate`, delegating every lifecycle hook.  The decode
+    step then takes the tree route — depth positions, ancestor mask,
+    path commit — which must be *bit-identical* to the chain route
+    (``tests/test_tree.py`` asserts it per drafter × verifier).  Also the
+    template for bolting tree verification onto custom chain drafters.
+    """
+
+    name = "chain-tree"
+
+    def __init__(self, base: Drafter):
+        self.base = base
+        self.gamma = base.gamma
+        self.template = TreeTemplate.chain(base.gamma)
+
+    def with_temperature(self, temperature: float) -> "ChainTreeAdapter":
+        return ChainTreeAdapter(self.base.with_temperature(temperature))
+
+    def init_state(self, model, params, prompts, buf_len, *,
+                   aux_embeds=None, draft_params=None):
+        return self.base.init_state(model, params, prompts, buf_len,
+                                    aux_embeds=aux_embeds,
+                                    draft_params=draft_params)
+
+    def alloc_state(self, model, params, batch, buf_len, *,
+                    draft_params=None):
+        return self.base.alloc_state(model, params, batch, buf_len,
+                                     draft_params=draft_params)
+
+    def prefill_row(self, model, params, dstate, row, prompt, buf_len, *,
+                    aux_embeds=None, draft_params=None):
+        return self.base.prefill_row(model, params, dstate, row, prompt,
+                                     buf_len, aux_embeds=aux_embeds,
+                                     draft_params=draft_params)
+
+    def propose(self, model, params, tokens, length, dstate, key):
+        proposal, dstate, key = self.base.propose(model, params, tokens,
+                                                  length, dstate, key)
+        return proposal._replace(parents=self.template.parents_dev,
+                                 tree_mask=self.template.mask_dev), \
+            dstate, key
+
+    def advance(self, model, dstate, proposal, n_accept):
+        return self.base.advance(model, dstate, proposal, n_accept)
 
 
 @register_drafter("vanilla")

@@ -19,11 +19,12 @@ import jax
 import jax.numpy as jnp
 
 
-def _match_k(tokens: jax.Array, length: jax.Array, k: int):
-    """Most recent occurrence of the trailing k-gram.
+def _match_valid(tokens: jax.Array, length: jax.Array, k: int):
+    """Validity mask of trailing-k-gram matches.
 
     tokens: (B, S) committed-token buffer; length: (B,) committed counts.
-    Returns (found (B,) bool, start (B,) int32 — index *after* the match).
+    Returns ``valid`` (B, S-k+1) bool — position j starts an occurrence of
+    the trailing k-gram strictly before the trailing gram itself.
     """
     B, S = tokens.shape
     # trailing k-gram per row: tokens[l-k : l]
@@ -36,10 +37,36 @@ def _match_k(tokens: jax.Array, length: jax.Array, k: int):
 
     j = jnp.arange(S - k + 1)[None, :]
     # exclude the trailing gram itself and anything beyond the committed text
-    valid = eq & (j < length[:, None] - k) & (length[:, None] >= 2 * k)
+    return eq & (j < length[:, None] - k) & (length[:, None] >= 2 * k)
+
+
+def _match_k(tokens: jax.Array, length: jax.Array, k: int):
+    """Most recent occurrence of the trailing k-gram.
+
+    Returns (found (B,) bool, start (B,) int32 — index *after* the match).
+    """
+    valid = _match_valid(tokens, length, k)
+    j = jnp.arange(valid.shape[1])[None, :]
     found = jnp.any(valid, axis=1)
     best = jnp.argmax(jnp.where(valid, j, -1), axis=1)               # most recent
     return found, best + k
+
+
+def _match_k_top(tokens: jax.Array, length: jax.Array, k: int, m: int):
+    """The ``m`` most recent trailing-k-gram occurrences (tree drafting).
+
+    Returns (found (B,) bool, starts (B, m) int32 — index after each
+    match, most recent first, valid (B, m) bool).  Rows with fewer than
+    ``m`` occurrences have trailing invalid slots.
+    """
+    valid = _match_valid(tokens, length, k)
+    j = jnp.arange(valid.shape[1])[None, :]
+    scored = jnp.where(valid, j, -1)
+    top, _ = jax.lax.top_k(scored, min(m, valid.shape[1]))           # (B, ≤m)
+    if top.shape[1] < m:
+        top = jnp.pad(top, ((0, 0), (0, m - top.shape[1])),
+                      constant_values=-1)
+    return jnp.any(valid, axis=1), top + k, top >= 0
 
 
 def draft_tokens(
@@ -73,3 +100,81 @@ def draft_tokens(
 @functools.partial(jax.jit, static_argnames=("gamma", "k_min", "k_max"))
 def draft_tokens_jit(tokens, length, gamma: int, k_min: int = 1, k_max: int = 4):
     return draft_tokens(tokens, length, gamma=gamma, k_min=k_min, k_max=k_max)
+
+
+def draft_tree_tokens(
+    tokens: jax.Array,     # (B, S) committed token buffer
+    length: jax.Array,     # (B,) committed lengths
+    template,              # repro.core.tree.TreeTemplate (static)
+    *,
+    k_min: int = 1,
+    k_max: int = 4,
+) -> jax.Array:
+    """Populate a token-tree template from top-k prompt-lookup matches.
+
+    Where chain PLD proposes the continuation of the *single* most recent
+    trailing-k-gram match, the tree drafter gathers the most recent
+    matches (longest matching k wins, as in :func:`draft_tokens`),
+    **diversifies** them — matches whose first continuation token
+    duplicates an earlier (more recent) match are stably pushed back, so
+    the *root's* children cover distinct continuations where the text
+    diverges — and routes match ``m``'s continuation down the template's
+    ``m``-th root-to-leaf path: a node at depth ``d`` takes token ``d-1``
+    of its *representative* (smallest-ordinal) leaf's continuation.
+    Child 0 of the root therefore always carries the chain drafter's
+    proposal, and rows with fewer matches than leaves fall back to the
+    most recent one (duplicate subtrees cost acceptance, never
+    correctness).  Returns the (B, N-1) packed draft tokens (node 0 —
+    the committed root — excluded).
+
+    Caveat: diversification is applied at the match's *first* token, so
+    only forks at depth 1 are guaranteed coherent.  A fork deeper in the
+    template splices a different match's tail onto the representative
+    leaf's prefix — still lossless, but such branches only accept past
+    the fork when the matches happen to agree up to it.  Prefer
+    root-heavy templates (e.g. ``(3, 2, 1, 1)`` over ``(1, 1, 2, 3)``);
+    trie-consistent population of sub-root forks is a ROADMAP follow-up.
+    """
+    B, S = tokens.shape
+    M, D = template.num_leaves, template.max_depth
+    if D == 0:
+        return jnp.zeros((B, 0), jnp.int32)
+
+    M2 = M + 8 if M > 1 else M     # extra candidates for the dedupe pass
+    starts = jnp.zeros((B, M2), jnp.int32)
+    svalid = jnp.zeros((B, M2), bool)
+    found_any = jnp.zeros((B,), bool)
+    # longest matching k wins, exactly as in the chain drafter
+    for k in range(k_min, k_max + 1):
+        found, st, v = _match_k_top(tokens, length, k, M2)
+        starts = jnp.where(found[:, None], st.astype(jnp.int32), starts)
+        svalid = jnp.where(found[:, None], v, svalid)
+        found_any = found_any | found
+
+    # slots beyond the row's match count reuse the most recent match
+    starts = jnp.where(svalid, starts, starts[:, :1])
+    if M2 > M:
+        # first continuation token of each candidate match
+        tok0 = jnp.take_along_axis(tokens, jnp.clip(starts, 0, S - 1),
+                                   axis=1)                        # (B, M2)
+        dup = jnp.any((tok0[:, :, None] == tok0[:, None, :])
+                      & (jnp.arange(M2)[None, :] < jnp.arange(M2)[:, None]
+                         )[None], axis=2)                         # (B, M2)
+        # stable compaction: fresh tokens first, recency order inside
+        order = jnp.argsort(dup.astype(jnp.int32) * M2
+                            + jnp.arange(M2)[None, :], axis=1)
+        starts = jnp.take_along_axis(starts, order[:, :M], axis=1)
+
+    # continuations: cont[b, m, d] = tokens[b, starts[b, m] + d]
+    idx = starts[:, :, None] + jnp.arange(D)[None, None, :]          # (B, M, D)
+    last = jnp.take_along_axis(tokens,
+                               jnp.maximum(length - 1, 0)[:, None], axis=1)
+    in_text = (idx < length[:, None, None]) & found_any[:, None, None]
+    flat = jnp.take_along_axis(tokens, jnp.clip(idx, 0, S - 1).reshape(B, M * D),
+                               axis=1).reshape(B, M, D)
+    cont = jnp.where(in_text, flat, last[:, :, None])
+
+    # scatter continuations into packed node order (static index tables)
+    node_leaf = template.src_leaf[1:]                                # (N-1,)
+    node_depth = template.depths[1:] - 1
+    return cont[:, node_leaf, node_depth].astype(jnp.int32)

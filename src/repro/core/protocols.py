@@ -46,6 +46,14 @@ jit; defaults work for any drafter whose state pytree is batch-leading):
   sites.  Must be idempotent.
 * ``verify(logits, proposal, temperature, key)`` → ``VerifyResult``
   (traced): the lossless accept/reject rule (Eq. 2-3).
+* ``verify_tree(logits, proposal, template, temperature, key)`` →
+  ``TreeVerifyResult`` (traced): the tree-scoring override — lossless
+  rejection sampling down a token tree, longest accepted root-to-leaf
+  path commits.  Inherited by every registered verifier, so tree
+  topology composes with any weight preparation.  Drafters opt into the
+  tree route by exposing a ``template``
+  (:class:`~repro.core.tree.TreeTemplate`) and attaching its
+  ``parents``/``tree_mask`` to each proposal.
 
 Registries
 ----------
@@ -63,15 +71,31 @@ from typing import Any, Dict, NamedTuple, Optional, Type
 import jax
 
 from repro.core.config import SpecConfig
-from repro.core.verification import VerifyResult, verify
+from repro.core.verification import (
+    TreeVerifyResult,
+    VerifyResult,
+    verify,
+    verify_tree,
+)
 
 
 class DraftProposal(NamedTuple):
-    """Fixed-shape drafting output: the drafter→verifier contract."""
+    """Fixed-shape drafting output: the drafter→verifier contract.
+
+    ``parents``/``tree_mask`` extend the contract to *token-tree*
+    proposals (SpecInfer-style): both are static per-template constants
+    over the N-node verify window ``[last_committed, tokens...]``
+    (``N = gamma + 1``).  ``None`` ⇒ chain — the degenerate single-branch
+    tree — which keeps every pre-tree drafter valid unchanged.
+    """
 
     tokens: jax.Array                  # (B, gamma) int32 drafted tokens
     probs: Optional[jax.Array] = None  # (B, gamma, V) f32 draft dist q, or
     #                                    None for deterministic drafters
+    parents: Optional[jax.Array] = None    # (N,) int32 window-parent
+    #                                        pointers, -1 at the root
+    tree_mask: Optional[jax.Array] = None  # (N, N) bool ancestor-or-self
+    #                                        mask over the packed window
 
 
 class Drafter:
@@ -150,6 +174,18 @@ class Verifier:
                key) -> VerifyResult:
         return verify(logits, proposal.tokens, temperature, key,
                       draft_probs=proposal.probs)
+
+    def verify_tree(self, logits, proposal: DraftProposal, template,
+                    temperature: float, key) -> TreeVerifyResult:
+        """Tree-scoring override: lossless rejection sampling *down* the
+        token tree (SpecInfer-style sibling round-robin with residual
+        updates), committing the longest accepted root-to-leaf path.
+        Every registered verifier inherits this, so tree drafting
+        composes with any weight preparation (BF16 / W8A8 / W4A8) —
+        the paper's orthogonality claim extended to tree topology.
+        """
+        return verify_tree(logits, proposal.tokens, template, temperature,
+                           key, draft_probs=proposal.probs)
 
 
 # ---------------------------------------------------------------------------

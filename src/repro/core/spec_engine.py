@@ -9,6 +9,11 @@ the contracts and registries).  The three legacy modes are registry pairs:
   ``vanilla``  → (``vanilla``, any verifier)   gamma=0 autoregressive
   ``pruned``   → (``pruned``,  any verifier)   Table-5 layer-drop drafting
 
+plus the token-tree route (``ngram-tree`` or any drafter exposing a
+``template``): one verifier pass scores a packed candidate tree and the
+longest accepted root-to-leaf path commits (``docs/decoding_api.md``,
+*Tree speculation*).
+
 The step is jit-able and fixed-shape (it is what ``dryrun.py`` lowers for
 the production mesh).  Engine state is a pytree dict:
 
@@ -97,11 +102,32 @@ def make_decode_step(model, drafter, verifier, scfg,
     ``drafter`` / ``verifier`` are protocol instances (or registry names —
     resolved here for convenience).  ``params`` must already be prepared
     (``verifier.prepare``); the step itself is pure and fixed-shape.
+
+    A drafter exposing a non-chain ``template``
+    (:class:`~repro.core.tree.TreeTemplate`) switches the step onto the
+    **token-tree** route: the verify window becomes the packed node tree
+    (depth positions + ancestor mask), verification walks the tree
+    (``Verifier.verify_tree``) and the cache commit compacts the accepted
+    root-to-leaf path.  The chain route is exactly the degenerate
+    single-branch tree, and the two are asserted bit-identical in
+    ``tests/test_tree.py``.
     """
     from repro.core.protocols import get_drafter, get_verifier
 
     drafter = get_drafter(drafter, scfg)
     verifier = get_verifier(verifier, scfg)
+    template = getattr(drafter, "template", None)
+    if template is not None:
+        if model.cfg.arch_type in ("ssm", "hybrid"):
+            raise ValueError(
+                f"tree speculation needs attention-family caches; "
+                f"{model.cfg.arch_type!r} caches are recurrent (per-node "
+                "state branching is a ROADMAP follow-up)")
+        if model.cfg.sliding_window:
+            raise ValueError(
+                "tree speculation requires a contiguous KV cache; "
+                "sliding-window (ring) caches cannot hold sibling nodes "
+                "at one position")
 
     def decode_step(params, state):
         tokens, length = state["tokens"], state["length"]
@@ -111,15 +137,26 @@ def make_decode_step(model, drafter, verifier, scfg,
 
         last = jnp.take_along_axis(
             tokens, jnp.maximum(length - 1, 0)[:, None], axis=1)
-        window = jnp.concatenate([last, proposal.tokens], axis=1)  # (B, γ+1)
+        window = jnp.concatenate([last, proposal.tokens], axis=1)  # (B, N)
         start = jnp.maximum(length - 1, 0)
 
-        logits, cand = model.verify_step(params, state["cache"], window,
-                                         start, num_layers=num_layers)
         key, sub = prng.next_key(key)
-        res = verifier.verify(logits, proposal, scfg.temperature, sub)
-
-        cache = model.commit(cand, res.n_accept, num_layers=num_layers)
+        if template is None:
+            logits, cand = model.verify_step(params, state["cache"], window,
+                                             start, num_layers=num_layers)
+            res = verifier.verify(logits, proposal, scfg.temperature, sub)
+            cache = model.commit(cand, res.n_accept, num_layers=num_layers)
+            drafts = proposal.tokens
+        else:
+            logits, cand = model.verify_step(
+                params, state["cache"], window, start, num_layers=num_layers,
+                tree_depths=template.depths_dev,
+                tree_mask=template.mask_dev)
+            res = verifier.verify_tree(logits, proposal, template,
+                                       scfg.temperature, sub)
+            cache = model.commit_tree(cand, start, res.path_nodes,
+                                      res.n_accept, num_layers=num_layers)
+            drafts = res.path_tokens           # accepted path, chain order
         dstate = drafter.advance(model, dstate, proposal, res.n_accept)
 
         n_commit = res.n_commit
@@ -129,7 +166,7 @@ def make_decode_step(model, drafter, verifier, scfg,
             active = (length < state["target"]).astype(jnp.int32)
         else:
             active = jnp.ones_like(length)
-        tokens = _commit_tokens(tokens, length, proposal.tokens,
+        tokens = _commit_tokens(tokens, length, drafts,
                                 res.next_token, res.n_accept,
                                 n_write=n_commit)
         out = {

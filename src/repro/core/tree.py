@@ -1,0 +1,170 @@
+"""Static token-tree templates for tree-style speculative decoding.
+
+Tree drafting (SpecInfer / Sequoia / Medusa-style) amortizes one
+memory-bound verifier forward over *many* candidate continuations: the
+verify window is a packed token tree instead of a single chain, an
+ancestor mask keeps every node conditioned on exactly its root-to-node
+path, and verification commits the longest accepted root-to-leaf path.
+The chain window the rest of the codebase uses is the degenerate
+single-branch tree, so everything here reduces bit-exactly to the
+existing path when ``branches == (1, 1, ..., 1)``.
+
+A :class:`TreeTemplate` is **shape-static**: the topology is fixed per
+drafter instance (per-depth branch factors), so the decode step jits
+once and every derived table below is a plain numpy constant baked into
+the trace.
+
+Packed node layout (BFS / level order)
+--------------------------------------
+Node 0 is the *root* — the last committed token, never re-scored.  Level
+``d`` (1-indexed) holds ``prod(branches[:d])`` nodes, children of one
+parent adjacent, subtrees left-to-right.  The verify window is therefore
+``[last_committed, draft_1, ..., draft_{N-1}]`` with ``N = num_nodes``,
+exactly the chain window when every branch factor is 1.
+
+Derived tables (all numpy, shape-static):
+
+* ``parents``   (N,)  int32 — parent node index, ``-1`` for the root.
+* ``depths``    (N,)  int32 — root depth 0; node positions are
+  ``length - 1 + depth`` (siblings share a RoPE position).
+* ``mask``      (N, N) bool — ancestor-*or-self* mask:
+  ``mask[i, j]`` ⇔ node ``j`` lies on the root→``i`` path.  This is the
+  attention mask applied over the packed query window; for a chain it is
+  the lower-triangular causal mask.
+* ``children``  (N, max_branch) int32 — child node ids, ``-1`` padded.
+  Sibling order is *verification order*: child 0 of the root carries the
+  chain drafter's proposal, so tree acceptance dominates chain acceptance
+  step-for-step at T=0.
+* ``paths``     (num_leaves, max_depth + 1) int32 — root→leaf node ids
+  (column 0 is always the root).
+* ``src_leaf``  (N,) int32 — representative leaf *ordinal* under each
+  node (smallest leaf index); tree drafters fill node tokens from the
+  representative leaf's candidate continuation.
+
+Cache layout note
+-----------------
+Window node ``i`` writes its K/V at cache slot ``start + i`` (packed
+order) while its RoPE position is ``start + depth[i]``.  After
+verification, :func:`repro.models.transformer.commit_cache_tree`
+compacts the accepted path's rows into chain slots
+``start .. start + n_accept``; an accepted node at depth ``d`` was
+rotated at position ``start + d``, which *is* its final committed
+position, so compaction is an exact gather — no recompute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import numpy as np
+
+
+class TreeTemplate:
+    """Immutable static token-tree topology (see module docstring)."""
+
+    def __init__(self, branches: Tuple[int, ...]):
+        branches = tuple(int(b) for b in branches)
+        if any(b < 1 for b in branches):
+            raise ValueError(f"branch factors must be >= 1, got {branches}")
+        if int(np.prod([b for b in branches] or [1])) > 64:
+            raise ValueError(f"template too wide: {branches} "
+                             "(> 64 leaves)")
+        self.branches = branches
+        self._build()
+        self._build_dev()
+
+    @classmethod
+    def chain(cls, gamma: int) -> "TreeTemplate":
+        """The degenerate single-branch template: a γ-token chain."""
+        if gamma < 0:
+            raise ValueError(f"gamma must be >= 0, got {gamma}")
+        return cls((1,) * gamma)
+
+    # ------------------------------------------------------------------
+    def _build(self) -> None:
+        parents = [-1]
+        depths = [0]
+        frontier = [0]                       # node ids of the previous level
+        for d, b in enumerate(self.branches, start=1):
+            nxt = []
+            for p in frontier:
+                for _ in range(b):
+                    nxt.append(len(parents))
+                    parents.append(p)
+                    depths.append(d)
+            frontier = nxt
+        N = len(parents)
+        self.num_nodes = N
+        self.max_depth = len(self.branches)
+        self.max_branch = max(self.branches) if self.branches else 1
+        self.parents = np.asarray(parents, np.int32)
+        self.depths = np.asarray(depths, np.int32)
+
+        # ancestor-or-self mask
+        mask = np.zeros((N, N), bool)
+        for i in range(N):
+            j = i
+            while j >= 0:
+                mask[i, j] = True
+                j = int(self.parents[j])
+        self.mask = mask
+
+        # children table, verification order == packed order
+        children = np.full((N, self.max_branch), -1, np.int32)
+        counts = np.zeros(N, np.int64)
+        for i in range(1, N):
+            p = int(self.parents[i])
+            children[p, counts[p]] = i
+            counts[p] += 1
+        self.children = children
+
+        # leaves (depth == max_depth) in packed order; root→leaf paths
+        leaves = [i for i in range(N) if depths[i] == self.max_depth]
+        self.num_leaves = len(leaves)
+        self.leaves = np.asarray(leaves, np.int32)
+        paths = np.zeros((self.num_leaves, self.max_depth + 1), np.int32)
+        for li, leaf in enumerate(leaves):
+            j = leaf
+            for d in range(self.max_depth, -1, -1):
+                paths[li, d] = j
+                j = int(self.parents[j])
+        self.paths = paths
+
+        # representative leaf ordinal per node (smallest leaf under it)
+        src_leaf = np.zeros(N, np.int32)
+        for li in range(self.num_leaves - 1, -1, -1):
+            for j in paths[li]:
+                src_leaf[j] = li
+        self.src_leaf = src_leaf
+
+    # ------------------------------------------------------------------
+    @property
+    def gamma(self) -> int:
+        """Draft tokens per window (everything but the root)."""
+        return self.num_nodes - 1
+
+    @property
+    def is_chain(self) -> bool:
+        return all(b == 1 for b in self.branches)
+
+    def __repr__(self) -> str:
+        return (f"TreeTemplate(branches={self.branches}, "
+                f"nodes={self.num_nodes}, leaves={self.num_leaves})")
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, TreeTemplate)
+                and self.branches == other.branches)
+
+    def __hash__(self) -> int:
+        return hash(self.branches)
+
+    # -- device constants ----------------------------------------------
+    # Materialized *eagerly* at construction (templates are built outside
+    # jit): a lazily-cached jnp.asarray would capture a tracer if first
+    # touched inside a traced decode step, then leak it across traces.
+    def _build_dev(self) -> None:
+        import jax.numpy as jnp
+        self.depths_dev = jnp.asarray(self.depths)
+        self.mask_dev = jnp.asarray(self.mask)
+        self.parents_dev = jnp.asarray(self.parents)
+        self.children_dev = jnp.asarray(self.children)

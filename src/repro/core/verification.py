@@ -35,6 +35,31 @@ def _probs(logits: jax.Array, temperature: float) -> jax.Array:
     return jax.nn.softmax(logits.astype(jnp.float32) / temperature, axis=-1)
 
 
+def _sample(k, probs, per_row: bool):
+    """Categorical draw dispatching on the per-row key layout."""
+    logp = jnp.log(jnp.maximum(probs, 1e-30))
+    if per_row:
+        return prng.categorical_rows(k, logp).astype(jnp.int32)
+    return jax.random.categorical(k, logp).astype(jnp.int32)
+
+
+def _residual(p, q):
+    """Eq. 3: norm(max(0, p - q)) with the numerically-empty fallback to
+    p.  Single definition shared by chain and tree verification — the
+    degenerate-tree bit-equality contract depends on the two paths using
+    the exact same thresholds."""
+    r = jnp.maximum(p - q, 0.0)
+    rsum = jnp.sum(r, axis=-1, keepdims=True)
+    return jnp.where(rsum > 1e-9, r / jnp.maximum(rsum, 1e-20), p)
+
+
+def _sample_single(p_at, temperature: float, k_bonus, per_row: bool):
+    """Degenerate window (no drafts): argmax / sample the one position."""
+    if temperature == 0.0:
+        return jnp.argmax(p_at, axis=-1).astype(jnp.int32)
+    return _sample(k_bonus, p_at, per_row)
+
+
 def verify(
     logits: jax.Array,       # (B, γ+1, V) — logits[i] is p(· | window[:i+1])
     drafts: jax.Array,       # (B, γ) drafted tokens (window[1:])
@@ -59,20 +84,10 @@ def verify(
     p = _probs(logits, temperature)                                   # (B, γ+1, V)
     k_acc, k_res, k_bonus = prng.split3(key)
 
-    def _sample(k, probs):
-        logp = jnp.log(jnp.maximum(probs, 1e-30))
-        if per_row:
-            return prng.categorical_rows(k, logp).astype(jnp.int32)
-        return jax.random.categorical(k, logp).astype(jnp.int32)
-
     if gamma == 0:
         # degenerate vanilla window (VanillaDrafter): nothing to accept —
         # sample/argmax the single position directly
-        p_at = p[:, 0]
-        if temperature == 0.0:
-            next_token = jnp.argmax(p_at, axis=-1).astype(jnp.int32)
-        else:
-            next_token = _sample(k_bonus, p_at)
+        next_token = _sample_single(p[:, 0], temperature, k_bonus, per_row)
         zero = jnp.zeros((B,), jnp.int32)
         return VerifyResult(n_accept=zero, next_token=next_token,
                             n_commit=zero + 1)
@@ -106,12 +121,149 @@ def verify(
         else:
             q_at = jnp.take_along_axis(
                 draft_probs, jnp.minimum(n_accept, gamma - 1)[:, None, None], axis=1)[:, 0]
-        residual = jnp.maximum(p_at - q_at, 0.0)
-        # fall back to p when the residual is numerically empty
-        rsum = jnp.sum(residual, axis=-1, keepdims=True)
-        residual = jnp.where(rsum > 1e-9, residual / jnp.maximum(rsum, 1e-20), p_at)
-        corrective = _sample(k_res, residual)
-        bonus = _sample(k_bonus, p_at)
+        corrective = _sample(k_res, _residual(p_at, q_at), per_row)
+        bonus = _sample(k_bonus, p_at, per_row)
         next_token = jnp.where(all_accepted, bonus, corrective).astype(jnp.int32)
 
     return VerifyResult(n_accept=n_accept, next_token=next_token, n_commit=n_accept + 1)
+
+
+# ---------------------------------------------------------------------------
+# Tree verification: longest accepted root-to-leaf path (SpecInfer-style)
+# ---------------------------------------------------------------------------
+
+class TreeVerifyResult(NamedTuple):
+    n_accept: jax.Array      # (B,) int32 — accepted path depth ∈ [0, D]
+    next_token: jax.Array    # (B,) int32 — corrective / bonus token
+    n_commit: jax.Array      # (B,) int32 — tokens committed = n_accept + 1
+    path_nodes: jax.Array    # (B, D+1) int32 — window-node ids of the
+    #                          accepted path (col 0 = root); cols beyond
+    #                          n_accept are 0-filled and must be masked
+    path_tokens: jax.Array   # (B, D) int32 — tokens along the accepted
+    #                          path in chain order (commit-ready drafts)
+
+
+def verify_tree(
+    logits: jax.Array,       # (B, N, V) — logits[i] = p(· | root→i path)
+    drafts: jax.Array,       # (B, N-1) drafted tokens, packed node order
+    template,                # TreeTemplate (static topology)
+    temperature: float,
+    key: jax.Array,
+    draft_probs: jax.Array | None = None,   # (B, N-1, V) stochastic q
+) -> TreeVerifyResult:
+    """Lossless rejection sampling down a token tree (Eq. 2-3 per branch).
+
+    Walks the template level by level; at each level the current node's
+    children are tested *in packed order* against the running target
+    distribution ``p_cur`` (Eq. 2 ratio p/q).  A rejection folds the
+    rejected child's q out of ``p_cur`` (Eq. 3 residual) before the next
+    sibling is tested — the multi-draft recursive rejection rule, which
+    keeps the committed stream distributed exactly as standalone sampling
+    from the verifier for *any* tree.  If no child at a level is
+    accepted, the corrective token is sampled from the final residual;
+    a fully accepted path earns the leaf's bonus token.
+
+    At T=0 this reduces to exact-match down the tree: a child is
+    accepted iff its token equals the argmax at its parent, and the
+    corrective token is that argmax.
+
+    **Chain parity**: for the degenerate single-branch template this
+    consumes PRNG bit-identically to :func:`verify` — same
+    ``split3`` layout, same uniform shapes, same categorical draws —
+    so a chain-as-tree decode step reproduces the chain step exactly
+    (asserted per drafter × verifier in ``tests/test_tree.py``).
+    """
+    B, N, V = logits.shape
+    D, mb = template.max_depth, template.max_branch
+    per_row = prng.is_per_row(key)
+    p_all = _probs(logits, temperature)                              # (B, N, V)
+    k_acc, k_res, k_bonus = prng.split3(key)
+
+    if N == 1:
+        # root-only template (vanilla drafter as a tree): identical to
+        # the chain gamma == 0 branch
+        next_token = _sample_single(p_all[:, 0], temperature, k_bonus,
+                                    per_row)
+        zero = jnp.zeros((B,), jnp.int32)
+        return TreeVerifyResult(
+            n_accept=zero, next_token=next_token, n_commit=zero + 1,
+            path_nodes=jnp.zeros((B, 1), jnp.int32),
+            path_tokens=jnp.zeros((B, 0), jnp.int32))
+
+    children = template.children_dev                                 # (N, mb)
+    u = (prng.uniform_rows(k_acc, D * mb) if per_row
+         else jax.random.uniform(k_acc, (B, D * mb)))
+    u = u.reshape(B, D, mb)
+
+    cur = jnp.zeros((B,), jnp.int32)          # node the walk sits on
+    p_cur = p_all[:, 0]                       # target dist at `cur`
+    done = jnp.zeros((B,), bool)              # a level rejected everything
+    n_accept = jnp.zeros((B,), jnp.int32)
+    node_cols = []
+    tok_cols = []
+
+    for d in range(1, D + 1):                 # static unroll: D is small
+        ch_row = jnp.take(children, cur, axis=0)                     # (B, mb)
+        accepted = jnp.zeros((B,), bool)
+        new_cur = cur
+        for s in range(mb):
+            child = ch_row[:, s]
+            has = child >= 0
+            cidx = jnp.clip(child, 1, N - 1)
+            tok = jnp.take_along_axis(drafts, cidx[:, None] - 1,
+                                      axis=1)[:, 0]
+            p_tok = jnp.take_along_axis(p_cur, tok[:, None], axis=1)[:, 0]
+            if draft_probs is None:
+                ratio = p_tok                 # q is one-hot at the draft
+                q_dist = None
+            else:
+                q_dist = jnp.take_along_axis(
+                    draft_probs, (cidx - 1)[:, None, None], axis=1)[:, 0]
+                q_tok = jnp.take_along_axis(q_dist, tok[:, None],
+                                            axis=1)[:, 0]
+                ratio = p_tok / jnp.maximum(q_tok, 1e-20)
+            ok = ((~done) & (~accepted) & has
+                  & (u[:, d - 1, s] < jnp.minimum(ratio, 1.0)))
+            if temperature != 0.0:
+                # fold the rejected sibling's q out of the running target
+                # (Eq. 3) so the next sibling / corrective sample sees
+                # the proper residual.  At T=0 p is one-hot and the
+                # update is a no-op, so it is skipped (chain parity).
+                tested = (~done) & (~accepted) & has
+                q_at = (jax.nn.one_hot(tok, V, dtype=jnp.float32)
+                        if q_dist is None else q_dist)
+                p_cur = jnp.where((tested & ~ok)[:, None],
+                                  _residual(p_cur, q_at), p_cur)
+            new_cur = jnp.where(ok, cidx, new_cur)
+            accepted = accepted | ok
+        # rows that accepted a child descend: p_cur ← p(· | path to child)
+        p_next = jnp.take_along_axis(p_all, new_cur[:, None, None],
+                                     axis=1)[:, 0]
+        p_cur = jnp.where(accepted[:, None], p_next, p_cur)
+        n_accept = n_accept + accepted.astype(jnp.int32)
+        done = done | ~accepted
+        cur = new_cur
+        node_cols.append(jnp.where(accepted, new_cur, 0))
+        tok_new = jnp.take_along_axis(drafts,
+                                      jnp.clip(new_cur - 1, 0, N - 2)[:, None],
+                                      axis=1)[:, 0]
+        tok_cols.append(jnp.where(accepted, tok_new, 0))
+
+    all_accepted = n_accept == D
+    if temperature == 0.0:
+        next_token = jnp.argmax(p_cur, axis=-1).astype(jnp.int32)
+    else:
+        # p_cur is the residual for rejected rows
+        corrective = _sample(k_res, p_cur, per_row)
+        p_bonus = jnp.take_along_axis(p_all, cur[:, None, None],
+                                      axis=1)[:, 0]
+        bonus = _sample(k_bonus, p_bonus, per_row)
+        next_token = jnp.where(all_accepted, bonus, corrective).astype(jnp.int32)
+
+    path_nodes = jnp.concatenate(
+        [jnp.zeros((B, 1), jnp.int32)] + [c[:, None] for c in node_cols],
+        axis=1)
+    path_tokens = jnp.stack(tok_cols, axis=1)
+    return TreeVerifyResult(n_accept=n_accept, next_token=next_token,
+                            n_commit=n_accept + 1, path_nodes=path_nodes,
+                            path_tokens=path_tokens)

@@ -1,4 +1,5 @@
 from repro.data.synthetic import (  # noqa: F401
+    ambiguous_prompts,
     lm_batches,
     synthetic_corpus,
     task_prompts,

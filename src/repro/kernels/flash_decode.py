@@ -13,10 +13,18 @@ dominated).  Design:
   (rows = G·T ≤ a few dozen — one VREG tile);
 * causality against the cache: slot index == absolute position
   (contiguous cache layout), masked against the per-(row, t) query
-  positions streamed in as an int32 block.
+  positions streamed in as an int32 block;
+* **token-tree windows** (``tree_mask``/``win_start``): the T window
+  tokens occupy cache slots ``[win_start, win_start + T)`` in packed node
+  order while ``qpos`` carries ``win_start + depth``.  Inside that slot
+  range the template's ancestor-or-self mask replaces position causality.
+  The per-column ancestor bit is gathered MXU-style — a (GT, T) mask
+  matmul against a (T, block_s) relative-slot one-hot — so the kernel
+  needs no dynamic gathers.
 
-The pure-jnp oracle is the ``attend`` direct path in models/attention.py;
-tests sweep shapes and assert allclose in interpret mode.
+The pure-jnp oracle is the ``attend`` path in models/attention.py (which
+accepts the same ``tree_mask``/``win_start``); tests sweep shapes and
+templates and assert allclose in interpret mode.
 """
 from __future__ import annotations
 
@@ -31,8 +39,9 @@ from repro.kernels.pallas_compat import CompilerParams
 MASK_VAL = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, qpos_ref, o_ref, m_ref, l_ref, acc_ref,
-            *, ns: int, block_s: int, scale: float):
+def _flash_body(q_ref, k_ref, v_ref, qpos_ref, tm_ref, ws_ref,
+                o_ref, m_ref, l_ref, acc_ref,
+                *, ns: int, block_s: int, scale: float):
     s_idx = pl.program_id(2)
 
     @pl.when(s_idx == 0)
@@ -49,6 +58,18 @@ def _kernel(q_ref, k_ref, v_ref, qpos_ref, o_ref, m_ref, l_ref, acc_ref,
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (GT, bs)
     kpos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     valid = kpos <= qpos                          # slot==position causality
+    if tm_ref is not None:
+        T = tm_ref.shape[-1]
+        ws = ws_ref[0]                            # scalar window start
+        rel = kpos - ws                           # (GT, bs) row-invariant
+        in_win = (rel >= 0) & (rel < T)
+        # ancestor gather as a matmul: onehot[j, c] = (slot_c - ws == j)
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (T, block_s), 0)
+                  == (jax.lax.broadcasted_iota(jnp.int32, (T, block_s), 1)
+                      + s_idx * block_s - ws)).astype(jnp.float32)
+        anc = jnp.dot(tm_ref[0, 0], onehot,
+                      preferred_element_type=jnp.float32) > 0.5  # (GT, bs)
+        valid = jnp.where(in_win, anc, valid)
     s = jnp.where(valid, s, MASK_VAL)
 
     m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
@@ -64,6 +85,21 @@ def _kernel(q_ref, k_ref, v_ref, qpos_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _kernel(q_ref, k_ref, v_ref, qpos_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, ns: int, block_s: int, scale: float):
+    _flash_body(q_ref, k_ref, v_ref, qpos_ref, None, None,
+                o_ref, m_ref, l_ref, acc_ref,
+                ns=ns, block_s=block_s, scale=scale)
+
+
+def _kernel_tree(q_ref, k_ref, v_ref, qpos_ref, tm_ref, ws_ref,
+                 o_ref, m_ref, l_ref, acc_ref,
+                 *, ns: int, block_s: int, scale: float):
+    _flash_body(q_ref, k_ref, v_ref, qpos_ref, tm_ref, ws_ref,
+                o_ref, m_ref, l_ref, acc_ref,
+                ns=ns, block_s=block_s, scale=scale)
+
+
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def flash_decode(
     q: jax.Array,        # (B, T, Hq, dh) query window
@@ -71,6 +107,8 @@ def flash_decode(
     v: jax.Array,        # (B, S, Hkv, dh)
     qpos: jax.Array,     # (B, T) int32 absolute query positions
     *,
+    tree_mask: jax.Array | None = None,   # (T, T) bool ancestor-or-self
+    win_start: jax.Array | None = None,   # (B,) int32 first window slot
     block_s: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
@@ -79,6 +117,9 @@ def flash_decode(
     G = Hq // Hkv
     GT = G * T
     scale = dh ** -0.5
+    tree = tree_mask is not None
+    if tree and win_start is None:
+        raise ValueError("tree_mask requires win_start")
 
     bs = min(block_s, S)
     Sp = (-S) % bs + S
@@ -94,15 +135,31 @@ def flash_decode(
     # per-row query positions, broadcast over G
     qp = jnp.repeat(qpos[:, None, :], G, axis=1).reshape(B, GT, 1)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, GT, dh), lambda b, h, s: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, dh), lambda b, h, s: (b, h, s, 0)),
+        pl.BlockSpec((1, 1, bs, dh), lambda b, h, s: (b, h, s, 0)),
+        pl.BlockSpec((1, GT, 1), lambda b, h, s: (b, 0, 0)),
+    ]
+    operands = [qg, kk, vv, qp]
+    if tree:
+        # ancestor rows repeated per grouped head: GT index = g*T + t
+        tm = jnp.tile(tree_mask.astype(jnp.float32), (G, 1))   # (GT, T)
+        in_specs.append(
+            pl.BlockSpec((1, 1, GT, T), lambda b, h, s: (0, 0, 0, 0)))
+        in_specs.append(
+            pl.BlockSpec((1,), lambda b, h, s: (b,),
+                         memory_space=pltpu.SMEM))
+        operands += [tm[None, None], win_start.astype(jnp.int32)]
+        kernel = functools.partial(_kernel_tree, ns=ns, block_s=bs,
+                                   scale=scale)
+    else:
+        kernel = functools.partial(_kernel, ns=ns, block_s=bs, scale=scale)
+
     out = pl.pallas_call(
-        functools.partial(_kernel, ns=ns, block_s=bs, scale=scale),
+        kernel,
         grid=(B, Hkv, ns),
-        in_specs=[
-            pl.BlockSpec((1, 1, GT, dh), lambda b, h, s: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, dh), lambda b, h, s: (b, h, s, 0)),
-            pl.BlockSpec((1, 1, bs, dh), lambda b, h, s: (b, h, s, 0)),
-            pl.BlockSpec((1, GT, 1), lambda b, h, s: (b, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, GT, dh), lambda b, h, s: (b, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hkv, GT, dh), q.dtype),
         scratch_shapes=[
@@ -114,7 +171,7 @@ def flash_decode(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(qg, kk, vv, qp)
+    )(*operands)
 
     # (B, Hkv, GT, dh) → (B, T, Hq, dh)
     return out.reshape(B, Hkv, G, T, dh).transpose(0, 3, 1, 2, 4).reshape(B, T, Hq, dh)

@@ -40,7 +40,13 @@ def main():
                     choices=list(available_drafters()))
     ap.add_argument("--mode", default=None, choices=list(LEGACY_MODES),
                     help="deprecated alias: spec|vanilla|pruned -> --drafter")
-    ap.add_argument("--gamma", type=int, default=5)
+    ap.add_argument("--gamma", type=int, default=None,
+                    help="draft length (default 5); with --tree-branches "
+                         "the template fixes the draft length instead")
+    ap.add_argument("--tree-branches", default=None,
+                    help="comma-separated per-depth branch factors for "
+                         "tree drafters, e.g. '3,2,1,1' (--drafter "
+                         "ngram-tree); default: the (1,)*gamma chain")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=48)
@@ -65,10 +71,23 @@ def main():
         print("no --ckpt: serving random-init weights (demo)")
         params = model.init_params(jax.random.PRNGKey(0))
 
-    drafter = args.drafter or LEGACY_MODES.get(args.mode) or "ngram"
-    scfg = SpecConfig(gamma=args.gamma, temperature=args.temperature,
+    branches = (tuple(int(b) for b in args.tree_branches.split(","))
+                if args.tree_branches else None)
+    # --tree-branches implies the tree drafter; reject combinations that
+    # would silently ignore the template
+    default_drafter = "ngram-tree" if branches is not None else "ngram"
+    drafter = args.drafter or LEGACY_MODES.get(args.mode) or default_drafter
+    if branches is not None:
+        if args.gamma is not None:
+            ap.error("--gamma conflicts with --tree-branches: the template "
+                     "fixes the draft length (nodes - 1)")
+        if drafter != "ngram-tree":
+            ap.error(f"--tree-branches is only read by tree drafters; "
+                     f"drafter {drafter!r} would silently ignore it")
+    scfg = SpecConfig(gamma=args.gamma if args.gamma is not None else 5,
+                      temperature=args.temperature,
                       k_min=1, k_max=4, drafter=drafter,
-                      verifier=args.verifier)
+                      verifier=args.verifier, tree_branches=branches)
     # the engine's verifier quantizes internally when scfg.verifier demands it
     engine = SpecEngine(model, scfg)
     prompts = jnp.asarray(task_prompts(

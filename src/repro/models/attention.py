@@ -76,7 +76,7 @@ def _lin(p, x, collect, path):
 # Core attend: q (B,T,Hq,dh) over k/v (B,S,Hkv,dh) with position mask
 # ---------------------------------------------------------------------------
 
-def _mask(qpos, kpos, window, causal):
+def _mask(qpos, kpos, window, causal, tree_mask=None, win_start=None):
     # qpos (B,T) ; kpos (B,S) or (S,) -> (B,1,1,T,S) bool
     if kpos.ndim == 1:
         kpos = kpos[None, :]
@@ -88,6 +88,22 @@ def _mask(qpos, kpos, window, causal):
     else:
         valid = kpos[:, None, :] >= 0  # cross-attn: all real slots valid
         valid = jnp.broadcast_to(valid, (qpos.shape[0], qpos.shape[1], kpos.shape[-1]))
+    if tree_mask is not None:
+        # Token-tree verify window: the T window tokens sit at cache
+        # slots [win_start, win_start + T) in *packed node order* while
+        # their positions are win_start + depth (siblings share one).
+        # Within that slot range position causality is meaningless, so
+        # those columns are overridden by the template's ancestor-or-self
+        # mask; committed context (kpos < win_start) keeps the positional
+        # rule, and junk slots beyond the window (kpos >= win_start + T >
+        # max qpos) stay masked by it.
+        T = tree_mask.shape[0]
+        kpos_b = jnp.broadcast_to(kpos, (qpos.shape[0], kpos.shape[-1]))
+        rel = kpos_b - win_start[:, None]                        # (B, S)
+        in_win = (rel >= 0) & (rel < T)
+        anc = jnp.moveaxis(
+            jnp.take(tree_mask, jnp.clip(rel, 0, T - 1), axis=1), 0, 1)
+        valid = jnp.where(in_win[:, None, :], anc, valid)        # (B, T, S)
     return valid[:, None, None, :, :]
 
 
@@ -161,8 +177,8 @@ def _attend_chunked(q, k, v, valid, k_scale=None, v_scale=None):
 
 
 def attend(q, k, v, qpos, kpos, *, window=None, causal=True,
-           k_scale=None, v_scale=None):
-    valid = _mask(qpos, kpos, window, causal)
+           k_scale=None, v_scale=None, tree_mask=None, win_start=None):
+    valid = _mask(qpos, kpos, window, causal, tree_mask, win_start)
     S = k.shape[1]
     if S > CHUNK_THRESHOLD and S % KV_CHUNK == 0:
         return _attend_chunked(q, k, v, valid, k_scale, v_scale)
@@ -226,6 +242,11 @@ def self_attention(
     causal: bool = True,
     collect=None,
     path: str = "",
+    slots=None,           # (B, T) cache-slot override (tree verify: the
+    #                       packed window occupies start + arange(T) while
+    #                       qpos carries start + depth)
+    tree_mask=None,       # (T, T) ancestor-or-self mask over the window
+    win_start=None,       # (B,) first window slot (= start)
 ):
     """Returns (out (B,T,D), updated cache or None).
 
@@ -243,12 +264,14 @@ def self_attention(
         k = apply_rope(k, qpos, cfg.rope_theta)
 
     if cache is not None:
-        cache = write_cache(cache, k, v, qpos, window)
+        cache = write_cache(cache, k, v,
+                            slots if slots is not None else qpos, window)
     if cache is not None and read_cache:
         keys, values = cache["k"], cache["v"]
         kpos = cache.get("kpos", jnp.arange(keys.shape[1], dtype=jnp.int32))
         o = attend(q, keys, values, qpos, kpos, window=window, causal=causal,
-                   k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"))
+                   k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
+                   tree_mask=tree_mask, win_start=win_start)
     else:
         o = attend(q, k, v, qpos, qpos, window=window, causal=causal)
 

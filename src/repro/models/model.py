@@ -76,15 +76,26 @@ class Model:
         _, cache, _ = self._fwd(params, tokens, start, **kw)
         return cache
 
-    def verify_step(self, params, cache, window_tokens, start, num_layers=None):
+    def verify_step(self, params, cache, window_tokens, start, num_layers=None,
+                    tree_depths=None, tree_mask=None):
         """Forward a speculative window (B, T=γ+1) at per-row ``start``.
 
-        Returns (logits, candidate cache); resolve with ``commit`` once
-        acceptance lengths are known.
+        ``tree_depths``/``tree_mask`` switch the window to a packed token
+        tree (``repro.core.tree.TreeTemplate``): node positions follow
+        depth, cache slots follow packed order, and the ancestor mask
+        replaces position causality inside the window.  Returns
+        (logits, candidate cache); resolve with ``commit`` (chain) or
+        ``commit_tree`` once acceptance lengths are known.
         """
         kw = dict(cache=cache, collect_states=True)
-        if "scan" not in params:
+        if "scan" in params:
+            if tree_depths is not None:
+                raise NotImplementedError(
+                    "tree verification is not lowered for the scan "
+                    "(stacked-layer) param layout")
+        else:
             kw["num_layers"] = num_layers
+            kw.update(tree_depths=tree_depths, tree_mask=tree_mask)
         logits, cache, _ = self._fwd(params, window_tokens, start, **kw)
         return logits, cache
 
@@ -100,3 +111,12 @@ class Model:
         if "scan" in cache:
             return S.commit_cache(self.cfg, cache, n_last)
         return transformer.commit_cache(self.cfg, cache, n_last, num_layers)
+
+    def commit_tree(self, cache, start, path_nodes, n_accept, num_layers=None):
+        """Tree-verify commit: compact the accepted root-to-leaf path's
+        K/V rows into chain slots (see ``transformer.commit_cache_tree``)."""
+        if "scan" in cache:
+            raise NotImplementedError(
+                "tree verification is not lowered for the scan cache layout")
+        return transformer.commit_cache_tree(self.cfg, cache, start,
+                                             path_nodes, n_accept, num_layers)

@@ -177,6 +177,9 @@ def _apply_block(
     enc_out=None,
     collect=None,
     path: str = "",
+    slots=None,
+    tree_mask=None,
+    win_start=None,
 ):
     """One decoder block of any kind.  Returns (x, new_cache, aux)."""
     w = cfg.sliding_window
@@ -203,6 +206,7 @@ def _apply_block(
             blk["attn"], cfg, apply_norm(cfg, blk["attn_norm"], x), qpos,
             cache=sc, read_cache=read_cache, window=w,
             collect=collect, path=f"{path}/attn",
+            slots=slots, tree_mask=tree_mask, win_start=win_start,
         )
         x = x + h
         ccache = {"ck": lcache["ck"], "cv": lcache["cv"]} if lcache is not None else None
@@ -220,6 +224,7 @@ def _apply_block(
             blk["attn"], cfg, apply_norm(cfg, blk["attn_norm"], x), qpos,
             cache=lcache, read_cache=read_cache, window=w,
             collect=collect, path=f"{path}/attn",
+            slots=slots, tree_mask=tree_mask, win_start=win_start,
         )
         x = x + h
         xn = apply_norm(cfg, blk["ffn_norm"], x)
@@ -259,10 +264,20 @@ def forward(
     num_layers: Optional[int] = None,  # structural-pruning baseline (Table 5)
     need_logits: bool = True,          # prefill skips the LM head entirely
     path: str = "",
+    tree_depths=None,                  # (T,) node depths of a tree window
+    tree_mask=None,                    # (T, T) ancestor-or-self mask
 ):
     """Returns (logits (B,T,V) or None, new_cache, aux_loss)."""
     B, T = tokens.shape
-    qpos = start[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    if tree_depths is not None:
+        # token-tree verify window: positions follow node *depth* while
+        # cache slots follow packed node order (start + arange)
+        qpos = start[:, None] + tree_depths[None, :]
+        slots = start[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+        win_start = start
+    else:
+        qpos = start[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+        slots = win_start = None
     kinds = layer_kinds(cfg)
     n_layers = num_layers or cfg.num_layers
     w = cfg.sliding_window
@@ -289,6 +304,7 @@ def forward(
             kinds[i], params["layers"][i], cfg, x, qpos, lcache,
             read_cache=read_cache, collect_states=collect_states,
             enc_out=enc_out, collect=collect, path=f"{path}layers/{i}",
+            slots=slots, tree_mask=tree_mask, win_start=win_start,
         )
         aux_total = aux_total + aux
         new_layers.append(lcache)
@@ -359,4 +375,65 @@ def commit_cache(cfg, cache: dict, n_last: jax.Array, num_layers: Optional[int] 
     out = {"layers": layers}
     if "shared" in cache:
         out["shared"] = cache["shared"]
+    return out
+
+
+def _compact_attn_rows(lcache: dict, start, path_nodes, n_accept) -> dict:
+    """Gather the accepted tree path's K/V rows into chain slots.
+
+    A tree verify window wrote node ``i`` at slot ``start + i`` with RoPE
+    position ``start + depth[i]``; an accepted node at depth ``d`` has
+    position ``start + d``, which is exactly its committed slot under the
+    contiguous slot == position convention — so committing is a pure
+    row move ``start + path_nodes[d] → start + d`` (``d ≤ n_accept``),
+    no recompute.  Chain templates move rows onto themselves, keeping the
+    degenerate path bit-identical to the chain commit (a no-op).
+    """
+    B, D1 = path_nodes.shape
+    D = D1 - 1
+    if D == 0:
+        return lcache
+    S = lcache["k"].shape[1]
+    depth = jnp.arange(1, D + 1, dtype=jnp.int32)[None, :]           # (1, D)
+    src = jnp.clip(start[:, None] + path_nodes[:, 1:], 0, S - 1)     # (B, D)
+    dst = jnp.clip(start[:, None] + depth, 0, S - 1)
+    keep = depth <= n_accept[:, None]                                # (B, D)
+    bidx = jnp.arange(B)[:, None]
+    new = dict(lcache)
+    for name in ("k", "v", "k_scale", "v_scale"):
+        if name not in lcache:
+            continue
+        buf = lcache[name]
+        moved = buf[bidx, src]
+        stay = buf[bidx, dst]
+        tail = (1,) * (buf.ndim - 2)
+        vals = jnp.where(keep.reshape(keep.shape + tail), moved, stay)
+        new[name] = buf.at[bidx, dst].set(vals)
+    return new
+
+
+def commit_cache_tree(cfg, cache: dict, start, path_nodes, n_accept,
+                      num_layers: Optional[int] = None) -> dict:
+    """Resolve tree-verify candidate caches: compact the accepted
+    root-to-leaf path (see :func:`_compact_attn_rows`).  Attention-family
+    layers only — recurrent (ssm/hybrid) caches are gated off by the
+    decode-step builder."""
+    kinds = layer_kinds(cfg)[: num_layers or cfg.num_layers]
+    layers = []
+    for kind, lcache in zip(kinds, cache["layers"]):
+        if kind == "ssm":
+            raise NotImplementedError(
+                "tree speculation does not support recurrent caches")
+        if kind == "cross" or lcache is None:
+            layers.append(lcache)
+        elif kind == "audio":
+            layers.append({**lcache, "self": _compact_attn_rows(
+                lcache["self"], start, path_nodes, n_accept)})
+        else:
+            layers.append(_compact_attn_rows(lcache, start, path_nodes,
+                                             n_accept))
+    out = {"layers": layers}
+    if "shared" in cache:
+        raise NotImplementedError(
+            "tree speculation does not support shared-attention caches")
     return out

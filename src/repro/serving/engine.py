@@ -9,6 +9,8 @@ verification strategies are plugins resolved from the registries in
     engine = SpecEngine(model, SpecConfig(verifier="w8a8"))   # Quasar
     engine = SpecEngine(model, scfg, drafter="pruned")        # Table 5
     engine = SpecEngine(model, scfg, drafter=MyDrafter(...))  # custom
+    engine = SpecEngine(                                      # token tree
+        model, SpecConfig(tree_branches=(3, 2, 1, 1)), drafter="ngram-tree")
 
 The verifier owns offline weight preparation: with ``verifier="w8a8"``
 the engine quantizes BF16 params internally (SmoothQuant + INT8) on first

@@ -36,12 +36,15 @@ class GenerationRequest:
     ``seed`` derives the request's own PRNG stream: the generated tokens
     depend only on (prompt, seed, temperature, params), never on which
     other requests happened to share the batch.
+    ``priority`` orders *admission* (lower = more urgent; FIFO within a
+    priority class) — it shifts ``queue_s``, never the generated tokens.
     """
 
     prompt: np.ndarray                  # (P,) int32 token ids, P >= 2
     max_new_tokens: int = 64
     temperature: Optional[float] = None
     seed: int = 0
+    priority: int = 0
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

@@ -29,8 +29,8 @@ by any engine that honours the state schema.
 """
 from __future__ import annotations
 
+import heapq
 import time
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
@@ -53,12 +53,17 @@ class SlotEvent:
 class Scheduler:
     """Continuous-batching loop over a fixed number of decode slots.
 
-    ``run`` consumes the request list in arrival order (FIFO admission)
-    and returns per-request :class:`RequestResult` in request order.  The
-    ``events`` audit trail records every (request, slot) occupancy with
-    admit/harvest step counts — the property tests assert the scheduler's
-    conservation laws on it (every request served exactly once, no slot
-    double-booked).
+    ``run`` returns per-request :class:`RequestResult` in request order.
+    Admission is **priority-aware**: pending requests pop by
+    ``(request.priority, arrival index)`` — lower priority value first,
+    FIFO within a class — so an urgent late arrival jumps the queue the
+    moment a slot frees, while the all-default case is plain FIFO.
+    Priority only reorders *admission* (it shifts ``queue_s``); per-row
+    seed streams keep every request's tokens independent of when it was
+    admitted.  The ``events`` audit trail records every (request, slot)
+    occupancy with admit/harvest step counts — the property tests assert
+    the scheduler's conservation laws on it (every request served exactly
+    once, no slot double-booked).
     """
 
     requests: Sequence[GenerationRequest]
@@ -70,7 +75,9 @@ class Scheduler:
         if self.batch_slots < 1:
             raise ValueError("batch_slots must be >= 1")
         self.requests = list(self.requests)
-        self._pending = deque(range(len(self.requests)))
+        self._pending = [(int(getattr(r, "priority", 0)), i)
+                         for i, r in enumerate(self.requests)]
+        heapq.heapify(self._pending)
         self._slots: List[Optional[SlotEvent]] = [None] * self.batch_slots
 
     # ------------------------------------------------------------------
@@ -108,7 +115,7 @@ class Scheduler:
         while self.busy:
             for slot in range(self.batch_slots):
                 if self._slots[slot] is None and self._pending:
-                    i = self._pending.popleft()
+                    _, i = heapq.heappop(self._pending)
                     # stamp before admit(): prefill cost is service, not
                     # queueing
                     admit_t[slot] = time.perf_counter()

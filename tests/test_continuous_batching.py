@@ -236,12 +236,15 @@ def test_request_result_timing_fields(model, params):
 # Scheduler conservation laws (model-free: a synthetic decode loop)
 # ---------------------------------------------------------------------------
 
-def _fake_loop(prompt_lens, budgets, batch_slots, accept_seed=0):
+def _fake_loop(prompt_lens, budgets, batch_slots, accept_seed=0,
+               priorities=None):
     """Drive Scheduler with a synthetic numpy 'decode step' that commits
     1..3 tokens per active row per step.  Returns (scheduler, results)."""
+    priorities = priorities if priorities is not None else [0] * len(budgets)
     reqs = [GenerationRequest(np.arange(2 + p) % 7, max_new_tokens=b,
-                              seed=i)
-            for i, (p, b) in enumerate(zip(prompt_lens, budgets))]
+                              seed=i, priority=pr)
+            for i, (p, b, pr) in enumerate(zip(prompt_lens, budgets,
+                                               priorities))]
     buf = max(r.prompt.size + r.max_new_tokens for r in reqs) + 4
     state = {
         "tokens": np.zeros((batch_slots, buf), np.int32),
@@ -336,3 +339,48 @@ def test_scheduler_conservation_property(mix, batch_slots, accept_seed):
     sched, results = _fake_loop(prompt_lens, budgets, batch_slots,
                                 accept_seed=accept_seed)
     _assert_conservation(sched, results, len(mix))
+
+
+# ---------------------------------------------------------------------------
+# Priority-aware admission
+# ---------------------------------------------------------------------------
+
+def test_scheduler_priority_admission():
+    """Pending requests pop by (priority, arrival): through one slot,
+    low-priority-value requests are admitted first, FIFO inside a class,
+    and conservation still holds."""
+    priorities = [2, 0, 1, 0, 2, 1]
+    sched, results = _fake_loop([3] * 6, [4] * 6, batch_slots=1,
+                                priorities=priorities)
+    _assert_conservation(sched, results, 6)
+    order = [ev.request_index for ev in
+             sorted(sched.events, key=lambda e: e.admit_step)]
+    assert order == [1, 3, 2, 5, 0, 4]
+    # queueing time is monotone in admission order
+    waits = [results[i].queue_s for i in order]
+    assert waits == sorted(waits)
+
+
+def test_scheduler_default_priority_is_fifo():
+    """All-default priorities keep the pre-priority FIFO admission."""
+    sched, _ = _fake_loop([2, 4, 1, 3, 5], [3, 2, 4, 1, 2], batch_slots=2)
+    first_wave = sorted(ev.request_index for ev in sched.events
+                       if ev.admit_step == 0)
+    assert first_wave == [0, 1]
+
+
+def test_priority_never_changes_tokens(model, params):
+    """Priority reorders admission only: the harvested streams stay
+    bit-identical to the all-default-priority run (per-request seed
+    streams make tokens independent of admission order)."""
+    scfg = SpecConfig(temperature=0.0, gamma=3)
+    eng = SpecEngine(model, scfg, verifier="bf16")
+    base = _requests(model.cfg)
+    flipped = [GenerationRequest(r.prompt, r.max_new_tokens,
+                                 temperature=r.temperature, seed=r.seed,
+                                 priority=-i)
+               for i, r in enumerate(base)]
+    r0 = eng.generate_requests(params, base, batch_slots=2)
+    r1 = eng.generate_requests(params, flipped, batch_slots=2)
+    for a, b in zip(r0, r1):
+        np.testing.assert_array_equal(a.tokens, b.tokens)

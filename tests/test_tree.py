@@ -1,0 +1,386 @@
+"""Token-tree speculation: template topology, degenerate-tree ↔ chain
+bit-equality for every drafter × verifier, tree-masked flash_decode vs the
+pure-jnp oracle, and the acceptance-length win over the γ-chain on the
+ambiguous-repetition workload under the W8A8 verifier."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis optional
+
+from repro.configs import get_config
+from repro.core import (
+    ChainTreeAdapter,
+    NgramTreeDrafter,
+    SpecConfig,
+    TreeTemplate,
+    get_drafter,
+)
+from repro.core.drafting import draft_tokens, draft_tree_tokens
+from repro.data import ambiguous_prompts, lm_batches
+from repro.kernels.flash_decode import flash_decode
+from repro.models import Model
+from repro.models.attention import attend
+from repro.serving import GenerationRequest, SpecEngine
+
+BRANCH_CHOICES = [(1, 1, 1), (2, 2), (3, 1), (2, 1, 2), (4,)]
+
+
+@pytest.fixture(scope="module")
+def model():
+    return Model(get_config("smollm-135m").reduced())
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Template topology
+# ---------------------------------------------------------------------------
+
+def test_template_chain_is_degenerate():
+    tpl = TreeTemplate.chain(4)
+    assert tpl.is_chain and tpl.num_nodes == 5 and tpl.gamma == 4
+    np.testing.assert_array_equal(tpl.parents, [-1, 0, 1, 2, 3])
+    np.testing.assert_array_equal(tpl.depths, [0, 1, 2, 3, 4])
+    np.testing.assert_array_equal(tpl.mask, np.tril(np.ones((5, 5), bool)))
+    np.testing.assert_array_equal(tpl.paths, [[0, 1, 2, 3, 4]])
+    assert TreeTemplate.chain(0).num_nodes == 1
+
+
+def test_template_wide_topology():
+    tpl = TreeTemplate((2, 2))
+    # BFS packing: root, level 1 = {1, 2}, level 2 = {3, 4} ∪ {5, 6}
+    assert tpl.num_nodes == 7 and tpl.num_leaves == 4 and not tpl.is_chain
+    np.testing.assert_array_equal(tpl.parents, [-1, 0, 0, 1, 1, 2, 2])
+    np.testing.assert_array_equal(tpl.depths, [0, 1, 1, 2, 2, 2, 2])
+    np.testing.assert_array_equal(
+        tpl.children, [[1, 2], [3, 4], [5, 6],
+                       [-1, -1], [-1, -1], [-1, -1], [-1, -1]])
+    np.testing.assert_array_equal(
+        tpl.paths, [[0, 1, 3], [0, 1, 4], [0, 2, 5], [0, 2, 6]])
+    # ancestor-or-self: node 5's path is {0, 2, 5}; siblings masked out
+    assert list(np.where(tpl.mask[5])[0]) == [0, 2, 5]
+    # representative leaf = smallest leaf ordinal under the node
+    np.testing.assert_array_equal(tpl.src_leaf, [0, 0, 2, 0, 1, 2, 3])
+
+
+@given(branches=st.lists(st.integers(1, 3), min_size=1, max_size=4))
+@settings(max_examples=25, deadline=None)
+def test_template_invariants(branches):
+    tpl = TreeTemplate(tuple(branches))
+    N = tpl.num_nodes
+    # every non-root node: parent is earlier in packed order, one level up
+    for i in range(1, N):
+        p = tpl.parents[i]
+        assert 0 <= p < i and tpl.depths[i] == tpl.depths[p] + 1
+        # mask rows are inherited: ancestors(i) = ancestors(p) ∪ {i}
+        expect = tpl.mask[p].copy()
+        expect[i] = True
+        np.testing.assert_array_equal(tpl.mask[i], expect)
+    assert tpl.num_leaves == int(np.prod(branches))
+    # paths are root-to-leaf chains through `parents`
+    for path in tpl.paths:
+        assert path[0] == 0
+        for a, b in zip(path, path[1:]):
+            assert tpl.parents[b] == a
+
+
+def test_template_validation():
+    with pytest.raises(ValueError, match="branch factors"):
+        TreeTemplate((2, 0))
+    with pytest.raises(ValueError, match="gamma"):
+        TreeTemplate.chain(-1)
+    with pytest.raises(ValueError, match="too wide"):
+        TreeTemplate((5, 5, 5))
+
+
+# ---------------------------------------------------------------------------
+# Tree drafting
+# ---------------------------------------------------------------------------
+
+def test_chain_template_drafts_match_chain_drafter():
+    """draft_tree_tokens over the degenerate template is bit-identical to
+    the chain prompt-lookup drafter."""
+    rng = np.random.default_rng(0)
+    pat = rng.integers(0, 50, 7)
+    tokens = jnp.asarray(np.tile(pat, 6)[None].repeat(3, 0).astype(np.int32))
+    length = jnp.array([42, 30, 17], jnp.int32)
+    tpl = TreeTemplate.chain(5)
+    chain = draft_tokens(tokens, length, gamma=5)
+    tree = draft_tree_tokens(tokens, length, tpl)
+    np.testing.assert_array_equal(np.asarray(chain), np.asarray(tree))
+
+
+def test_tree_drafts_diversify_siblings():
+    """Root children must cover *distinct* continuations when the trailing
+    gram has divergent matches (most recent first = the chain draft)."""
+    # "a b X ... a b Y ... a b" — matches continue with X (old), Y (recent)
+    a, b, X, Y = 1, 2, 7, 9
+    row = [a, b, X, 3, 4, 5, a, b, Y, 6, 8, 10, a, b]
+    tokens = jnp.asarray(np.asarray(row, np.int32)[None])
+    length = jnp.full((1,), len(row), jnp.int32)
+    tpl = TreeTemplate((2, 1))
+    drafts = np.asarray(draft_tree_tokens(tokens, length, tpl))[0]
+    root_children_tokens = {drafts[tpl.children[0, 0] - 1],
+                           drafts[tpl.children[0, 1] - 1]}
+    assert root_children_tokens == {X, Y}
+    # child 0 carries the chain (most recent match) proposal
+    assert drafts[tpl.children[0, 0] - 1] == Y
+
+
+# ---------------------------------------------------------------------------
+# (a) Degenerate single-path tree ↔ chain bit-equality
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("drafter", ["ngram", "vanilla", "pruned"])
+@pytest.mark.parametrize("verifier", ["bf16", "w8a8"])
+def test_degenerate_tree_bit_equals_chain(model, params, drafter, verifier):
+    """The chain decode path is exactly the single-branch tree: running any
+    registered chain drafter through the tree route (depth positions,
+    ancestor mask, path commit, tree rejection sampling) must reproduce
+    the chain route bit-for-bit — at T=0 and T>0, on the same per-request
+    seed streams."""
+    scfg = SpecConfig(gamma=3, temperature=0.0, pruned_retention=0.5)
+    rng = np.random.default_rng(11)
+    pat = rng.integers(0, model.cfg.vocab_size, 6)
+    requests = [
+        GenerationRequest(np.tile(pat, 4), max_new_tokens=8, seed=5),
+        GenerationRequest(np.tile(pat, 5), max_new_tokens=11, seed=6,
+                          temperature=1.0),
+        GenerationRequest(np.tile(pat, 3), max_new_tokens=6, seed=7,
+                          temperature=1.0),
+    ]
+    chain_eng = SpecEngine(model, scfg, drafter=drafter, verifier=verifier)
+    tree_eng = SpecEngine(
+        model, scfg, drafter=ChainTreeAdapter(get_drafter(drafter, scfg)),
+        verifier=verifier)
+    r_chain = chain_eng.generate_requests(params, requests, batch_slots=2)
+    r_tree = tree_eng.generate_requests(params, requests, batch_slots=2)
+    for rc, rt in zip(r_chain, r_tree):
+        np.testing.assert_array_equal(rc.tokens, rt.tokens)
+        assert rc.steps == rt.steps and rc.accept_len == rt.accept_len
+
+
+def test_ngram_tree_chain_template_bit_equals_ngram(model, params):
+    """The registered tree drafter with the default (chain) template is
+    bit-identical to the chain ngram drafter end to end."""
+    scfg = SpecConfig(gamma=4, temperature=0.0)
+    rng = np.random.default_rng(2)
+    prompt = jnp.asarray(
+        np.tile(rng.integers(0, model.cfg.vocab_size, 6), 5)[None]
+        .repeat(2, 0).astype(np.int32))
+    P = prompt.shape[1]
+    a = SpecEngine(model, scfg, drafter="ngram", verifier="bf16").generate(
+        params, prompt, 12)
+    b = SpecEngine(model, scfg, drafter="ngram-tree",
+                   verifier="bf16").generate(params, prompt, 12)
+    assert bool(jnp.all(a.tokens[:, : P + 12] == b.tokens[:, : P + 12]))
+    assert a.steps == b.steps
+
+
+def test_wide_tree_lossless_greedy(model, params):
+    """Whatever the template proposes, T=0 verification commits exactly
+    the autoregressive stream (losslessness is topology-independent)."""
+    rng = np.random.default_rng(3)
+    prompt = jnp.asarray(
+        np.tile(rng.integers(0, model.cfg.vocab_size, 6), 5)[None]
+        .repeat(2, 0).astype(np.int32))
+    P = prompt.shape[1]
+    van = SpecEngine(model, SpecConfig(gamma=0, temperature=0.0),
+                     drafter="vanilla", verifier="bf16").generate(
+        params, prompt, 12)
+    for branches in [(2, 2), (3, 1, 2)]:
+        scfg = SpecConfig(temperature=0.0, tree_branches=branches)
+        tree = SpecEngine(model, scfg, drafter="ngram-tree",
+                          verifier="bf16").generate(params, prompt, 12)
+        assert bool(jnp.all(
+            van.tokens[:, : P + 12] == tree.tokens[:, : P + 12])), branches
+
+
+def test_tree_gating_recurrent_and_windowed():
+    """Recurrent caches and ring buffers cannot hold a tree window."""
+    ssm = Model(get_config("mamba2-370m").reduced())
+    with pytest.raises(ValueError, match="recurrent"):
+        SpecEngine(ssm, SpecConfig(tree_branches=(2, 1)),
+                   drafter="ngram-tree", verifier="bf16")
+    import dataclasses
+    cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                              sliding_window=64)
+    with pytest.raises(ValueError, match="contiguous"):
+        SpecEngine(Model(cfg), SpecConfig(tree_branches=(2, 1)),
+                   drafter="ngram-tree", verifier="bf16")
+
+
+# ---------------------------------------------------------------------------
+# (b) Tree-masked flash_decode vs the pure-jnp oracle
+# ---------------------------------------------------------------------------
+
+def _tree_mask_oracle(tpl, start, B, T, S):
+    """Brute-force validity: committed context ∪ ancestor-or-self."""
+    mask = np.zeros((B, T, S), bool)
+    for bb in range(B):
+        for t in range(T):
+            for s in range(S):
+                if s < start[bb]:
+                    mask[bb, t, s] = True
+                elif s < start[bb] + T:
+                    mask[bb, t, s] = tpl.mask[t, s - start[bb]]
+    return mask
+
+
+def test_attend_tree_mask_matches_bruteforce():
+    """The attend() oracle's tree override against an O(B·T·S) loop."""
+    tpl = TreeTemplate((2, 2))
+    B, S, H, dh = 2, 24, 2, 8
+    T = tpl.num_nodes
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, T, H, dh))
+    k = jax.random.normal(kk, (B, S, H, dh))
+    v = jax.random.normal(kv, (B, S, H, dh))
+    start = np.array([3, 10])
+    qpos = jnp.asarray(start)[:, None] + tpl.depths_dev[None, :]
+    o = attend(q, k, v, qpos, jnp.arange(S, dtype=jnp.int32),
+               tree_mask=tpl.mask_dev, win_start=jnp.asarray(start))
+    mask = _tree_mask_oracle(tpl, start, B, T, S)
+    qn, kn, vn = map(np.asarray, (q, k, v))
+    for bb in range(B):
+        for h in range(H):
+            s = qn[bb, :, h] @ kn[bb, :, h].T * dh ** -0.5
+            s = np.where(mask[bb], s, -1e30)
+            p = np.exp(s - s.max(-1, keepdims=True))
+            p = np.where(mask[bb], p, 0.0)
+            p /= p.sum(-1, keepdims=True)
+            np.testing.assert_allclose(np.asarray(o)[bb, :, h],
+                                       p @ vn[bb, :, h],
+                                       rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    tidx=st.integers(0, len(BRANCH_CHOICES) - 1),
+    b=st.integers(1, 2),
+    s=st.integers(16, 96),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_flash_decode_tree_matches_attend(tidx, b, s, hkv, g, dh, seed):
+    """Tree-masked flash_decode ≡ the attend() oracle, in interpret mode,
+    across template shapes, GQA group sizes and window placements."""
+    tpl = TreeTemplate(BRANCH_CHOICES[tidx])
+    t = tpl.num_nodes
+    s = max(s, t + 2)
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    hq = hkv * g
+    q = jax.random.normal(kq, (b, t, hq, dh))
+    k = jax.random.normal(kk, (b, s, hkv, dh))
+    v = jax.random.normal(kv, (b, s, hkv, dh))
+    start = jax.random.randint(kp, (b,), 0, s - t + 1)
+    qpos = start[:, None] + tpl.depths_dev[None, :]
+    o_flash = flash_decode(q, k, v, qpos, tree_mask=tpl.mask_dev,
+                           win_start=start, block_s=32, interpret=True)
+    o_ref = attend(q, k, v, qpos, jnp.arange(s, dtype=jnp.int32),
+                   tree_mask=tpl.mask_dev, win_start=start)
+    np.testing.assert_allclose(np.asarray(o_flash), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("branches", BRANCH_CHOICES)
+def test_flash_decode_tree_template_sweep(branches):
+    """Deterministic template sweep (runs with or without hypothesis):
+    tree-masked flash_decode ≡ attend() in interpret mode, including a
+    cache length that is not a multiple of the block size."""
+    tpl = TreeTemplate(branches)
+    t = tpl.num_nodes
+    b, s, hkv, g, dh = 2, 50, 2, 2, 8
+    key = jax.random.PRNGKey(hash(branches) % 2 ** 31)
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (b, t, hkv * g, dh))
+    k = jax.random.normal(kk, (b, s, hkv, dh))
+    v = jax.random.normal(kv, (b, s, hkv, dh))
+    start = jax.random.randint(kp, (b,), 0, s - t + 1)
+    qpos = start[:, None] + tpl.depths_dev[None, :]
+    o_flash = flash_decode(q, k, v, qpos, tree_mask=tpl.mask_dev,
+                           win_start=start, block_s=16, interpret=True)
+    o_ref = attend(q, k, v, qpos, jnp.arange(s, dtype=jnp.int32),
+                   tree_mask=tpl.mask_dev, win_start=start)
+    np.testing.assert_allclose(np.asarray(o_flash), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_chain_unchanged():
+    """tree_mask=None keeps the original kernel path bit-compatible."""
+    key = jax.random.PRNGKey(5)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, 4, 4, 16))
+    k = jax.random.normal(kk, (2, 64, 2, 16))
+    v = jax.random.normal(kv, (2, 64, 2, 16))
+    qpos = jnp.tile(jnp.arange(30, 34)[None], (2, 1))
+    o = flash_decode(q, k, v, qpos, block_s=32, interpret=True)
+    o_ref = attend(q, k, v, qpos, jnp.arange(64, dtype=jnp.int32))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# (c) Wider-than-chain template beats the γ-chain (W8A8 verifier)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def trained(model):
+    """Briefly trained stand-in (Markov corpus) so greedy continuations
+    follow the successor table the ambiguous workload is built from."""
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.trainer import Trainer
+    tr = Trainer(model, AdamWConfig(lr=1.5e-3, warmup_steps=20,
+                                    total_steps=250))
+    params, opt = tr.init(jax.random.PRNGKey(0))
+    params, _, _ = tr.fit(
+        params, opt,
+        lm_batches(8, 96, model.cfg.vocab_size, seed=0, markov_alpha=0.97),
+        steps=250, log_every=250, log_fn=None)
+    return params
+
+
+def test_wide_tree_beats_chain_acceptance(model, trained):
+    """On the ambiguous-repetition workload (older matches carry the
+    model-likely continuations, the most recent match carries junk) a
+    wider-than-chain template must achieve *strictly* higher mean
+    acceptance length than the γ-chain of the same depth, under the W8A8
+    verifier — and both must commit the identical (lossless) stream."""
+    V = model.cfg.vocab_size
+    prompts = jnp.asarray(ambiguous_prompts(6, 64, V, depth=4, seed=0))
+    P = prompts.shape[1]
+    chain_scfg = SpecConfig(gamma=4, temperature=0.0, verifier="w8a8")
+    tree_scfg = SpecConfig(temperature=0.0, verifier="w8a8",
+                           tree_branches=(3, 2, 1, 1))
+    r_chain = SpecEngine(model, chain_scfg, drafter="ngram").generate(
+        trained, prompts, 10)
+    r_tree = SpecEngine(model, tree_scfg, drafter="ngram-tree").generate(
+        trained, prompts, 10)
+    assert bool(jnp.all(
+        r_chain.tokens[:, : P + 10] == r_tree.tokens[:, : P + 10]))
+    assert r_tree.mean_accept_len > r_chain.mean_accept_len, (
+        r_tree.mean_accept_len, r_chain.mean_accept_len)
+
+
+def test_tree_drafter_through_scheduler(model, trained):
+    """Tree drafting composes with continuous batching: scheduled serving
+    through recycled slots stays bit-identical to solo runs."""
+    scfg = SpecConfig(temperature=0.0, tree_branches=(2, 2, 1))
+    eng = SpecEngine(model, scfg, drafter="ngram-tree", verifier="bf16")
+    rng = np.random.default_rng(7)
+    pat = rng.integers(0, model.cfg.vocab_size, 6)
+    reqs = [GenerationRequest(np.tile(pat, 4), max_new_tokens=7, seed=1),
+            GenerationRequest(np.tile(pat, 5), max_new_tokens=5, seed=2),
+            GenerationRequest(np.tile(pat, 3), max_new_tokens=9, seed=3)]
+    results = eng.generate_requests(trained, reqs, batch_slots=1)
+    for req, res in zip(reqs, results):
+        solo = eng.generate_requests(trained, [req], batch_slots=1)[0]
+        np.testing.assert_array_equal(res.tokens, solo.tokens)
