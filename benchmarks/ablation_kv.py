@@ -1,0 +1,135 @@
+"""Quantized flash verification ablation: int8 vs bf16 KV cache.
+
+The paper's Eq. 11-12 memory term counts weight streaming; at long
+context the *cache read* is the larger half of verification HBM traffic
+(§Roofline, decode_32k).  This ablation extends the bandwidth argument
+to the KV cache:
+
+* **modeled** — ``roofline.kv_cache_read_bytes`` at paper scale
+  (quasar-paper-7b) swept over context ∈ {2k, 8k, 32k}: int8 halves the
+  K/V payload (≈0.53× including the f32 scale rows) and the Eq. 13
+  speedup with the measured L follows;
+* **measured fidelity** — acceptance length L on the CPU stand-in model
+  with ``kv_cache_dtype`` bf16 vs int8 (same weights, same prompts): the
+  quantization fidelity cost speculative decoding actually pays;
+* **measured step time** — CPU wall time of ``attend`` over long caches
+  at a KV_CHUNK-aligned and a non-aligned S: both must take the chunked
+  online-softmax path (the non-aligned case used to fall back silently
+  to the O(B·H·T·S) direct path — the padding fix keeps it chunked).
+
+Results land in ``benchmarks/results/ablation_kv.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.config import SpecConfig
+from repro.launch.roofline import kv_cache_read_bytes
+from repro.models import Model
+from repro.models.attention import CHUNK_THRESHOLD, KV_CHUNK, _quant_kv, attend
+
+from benchmarks.common import LatencyModel, get_trained, run_engine, save_json
+
+CONTEXTS = [2048, 8192, 32768]
+GAMMA = 5
+
+
+def _measured_L(quick: bool):
+    """Acceptance length with bf16 vs int8 KV on the trained stand-in."""
+    model, params, _ = get_trained("qwen3-sub")
+    scfg = SpecConfig(gamma=GAMMA, temperature=0.0)
+    new_tokens = 16 if quick else 24
+    out = {}
+    for kv in ("bf16", "int8"):
+        m = Model(dataclasses.replace(model.cfg, kv_cache_dtype=kv))
+        r = run_engine(m, params, mode="spec", scfg=scfg, task="gsm8k",
+                       new_tokens=new_tokens)
+        out[kv] = r["L"]
+    return out
+
+
+def _time_attend(S: int, kv: str, *, iters: int = 8):
+    """CPU wall μs of one jitted attend over an S-token cache (T=γ+1)."""
+    B, T, Hkv, G, dh = 1, GAMMA + 1, 2, 2, 32
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, T, Hkv * G, dh))
+    k = jax.random.normal(kk, (B, S, Hkv, dh))
+    v = jax.random.normal(kv_, (B, S, Hkv, dh))
+    qpos = jnp.tile(jnp.arange(S - T, S)[None], (B, 1))
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    if kv == "int8":
+        k, ks = _quant_kv(k)
+        v, vs = _quant_kv(v)
+    else:
+        ks = vs = None
+    fn = jax.jit(lambda *a: attend(a[0], a[1], a[2], a[3], a[4],
+                                   k_scale=ks, v_scale=vs, impl="jnp"))
+    o = fn(q, k, v, qpos, kpos)
+    jax.block_until_ready(o)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        o = fn(q, k, v, qpos, kpos)
+    jax.block_until_ready(o)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def rows(quick: bool = False):
+    cfg = get_config("quasar-paper-7b")
+    contexts = CONTEXTS[:1] + CONTEXTS[-1:] if quick else CONTEXTS
+
+    ls = _measured_L(quick)
+    modeled = []
+    for ctx in contexts:
+        lat = LatencyModel(context=ctx)
+        bf16_bytes = kv_cache_read_bytes(cfg, 1, ctx, "bf16")
+        for kv, kv_bits in (("bf16", 16), ("int8", 8)):
+            b = kv_cache_read_bytes(cfg, 1, ctx, kv)
+            modeled.append({
+                "context": ctx,
+                "kv_cache": kv,
+                "kv_read_gbytes": round(b / 1e9, 4),
+                "kv_bytes_vs_bf16": round(b / bf16_bytes, 4),
+                "t_verify_ms": round(
+                    lat.t_verify(GAMMA, 8, kv_bits) * 1e3, 4),
+                "modeled_speedup": round(
+                    lat.speedup(ls[kv], GAMMA, verifier_bits=8,
+                                kv_bits=kv_bits), 3),
+            })
+
+    acceptance = [{"kv_cache": kv, "L": round(L, 3),
+                   "L_delta_vs_bf16": round(L - ls["bf16"], 4)}
+                  for kv, L in ls.items()]
+
+    # chunk-padding fix: aligned and non-aligned long caches both take the
+    # online-softmax path — comparable step time, no O(S)-scores blow-up
+    s_aligned = CHUNK_THRESHOLD + KV_CHUNK          # 5120
+    s_odd = CHUNK_THRESHOLD + KV_CHUNK // 2 + 79    # 4687, non-aligned
+    assert s_aligned % KV_CHUNK == 0 and s_odd % KV_CHUNK != 0
+    assert min(s_aligned, s_odd) > CHUNK_THRESHOLD  # both take chunked path
+    cpu_step = [{"S": S, "kv_cache": kv, "aligned": S % KV_CHUNK == 0,
+                 "attend_us": round(_time_attend(S, kv,
+                                                 iters=4 if quick else 8), 1)}
+                for S in (s_aligned, s_odd) for kv in ("bf16", "int8")]
+
+    out = {"modeled": modeled, "acceptance": acceptance,
+           "cpu_step": cpu_step}
+    save_json("ablation_kv.json", out)
+    return out
+
+
+def main():
+    out = rows()
+    for section, rs in out.items():
+        print(f"-- {section}")
+        for r in rs:
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

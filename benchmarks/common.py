@@ -106,15 +106,19 @@ class LatencyModel:
         n = self.cfg.active_param_count()
         return n * bits / 8 + (n / self.cfg.d_model) * 4.0  # + per-channel scales
 
-    def _kv_bytes(self) -> float:
-        c = self.cfg
-        return (2 * self.batch * self.context * c.kv_dim * 2.0 * c.num_layers)
+    def _kv_bytes(self, kv_bits: int = 16) -> float:
+        from repro.launch.roofline import kv_cache_read_bytes
+        return kv_cache_read_bytes(
+            self.cfg, self.batch, self.context,
+            "int8" if kv_bits <= 8 else "bf16")
 
-    def t_verify(self, gamma: int, bits: int) -> float:
-        """Eq. 11/12: memory term + compute term for a (γ+1)-token window."""
+    def t_verify(self, gamma: int, bits: int, kv_bits: int = 16) -> float:
+        """Eq. 11/12: memory term + compute term for a (γ+1)-token window.
+        ``kv_bits=8`` models the int8 KV cache (halved K/V stream + f32
+        scale rows, matching ``roofline.kv_cache_read_bytes``)."""
         c = self.cfg
         tokens = self.batch * (gamma + 1)
-        mem = (self._weight_bytes(bits) + self._kv_bytes()) / HBM_BW
+        mem = (self._weight_bytes(bits) + self._kv_bytes(kv_bits)) / HBM_BW
         peak = PEAK_INT8 if bits <= 8 else PEAK_BF16
         comp = 2.0 * c.active_param_count() * tokens / peak
         return max(mem, comp) + 20e-6  # fixed launch overhead
@@ -131,9 +135,10 @@ class LatencyModel:
         return gamma * retention * self.t_vanilla_token(bits)
 
     def speedup(self, L: float, gamma: int, *, verifier_bits: int,
-                drafter: str = "ngram", retention: float = 1.0) -> float:
-        """Eq. 13 vs the BF16 autoregressive baseline."""
-        t_v = self.t_verify(gamma, verifier_bits)
+                drafter: str = "ngram", retention: float = 1.0,
+                kv_bits: int = 16) -> float:
+        """Eq. 13 vs the BF16 autoregressive baseline (bf16 weights + KV)."""
+        t_v = self.t_verify(gamma, verifier_bits, kv_bits)
         t_d = (self.t_draft_ngram() if drafter == "ngram"
                else self.t_draft_pruned(gamma, retention))
         per_step = t_d + t_v

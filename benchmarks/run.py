@@ -50,6 +50,7 @@ def main() -> None:
 
     from benchmarks import (
         ablation_bits,
+        ablation_kv,
         table1_speedup,
         table2_temperature,
         table3_sensitivity,
@@ -107,6 +108,16 @@ def main() -> None:
     lines.append(("ablation_bits", step_us,
                   f"w4a8_kl={w4['kl_vs_bf16']:.2e};L={w4['L']:.2f};"
                   f"speedup={w4['modeled_speedup']:.2f}x"))
+
+    akv = ablation_kv.rows(quick=args.quick)
+    m_int8 = [r for r in akv["modeled"]
+              if r["kv_cache"] == "int8"][-1]          # longest context
+    d_int8 = [r for r in akv["acceptance"] if r["kv_cache"] == "int8"][0]
+    lines.append(("ablation_kv", step_us,
+                  f"kv_bytes_ratio_{m_int8['context'] // 1024}k="
+                  f"{m_int8['kv_bytes_vs_bf16']:.3f};"
+                  f"L_delta={d_int8['L_delta_vs_bf16']:+.3f};"
+                  f"speedup={m_int8['modeled_speedup']:.2f}x"))
 
     rr = roofline_report.rows(quick=args.quick)
     lines.append(("roofline", step_us,

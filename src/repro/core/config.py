@@ -81,6 +81,16 @@ class ModelConfig:
     # decode-time cache streaming.  Beyond-paper extension (the paper's
     # "ultra-low bit" future-work direction applied to the KV cache).
     kv_cache_dtype: str = "bf16"
+    # attention implementation for the flash-eligible cache-read
+    # decode/verify path (contiguous cache, causal, no sliding window):
+    #   "auto"   — backend policy: compiled Pallas flash-decode kernel on
+    #              TPU, interpret-mode kernel under REPRO_USE_PALLAS=1,
+    #              pure-jnp otherwise (numerically identical);
+    #   "pallas" — force the kernel (interpret mode off-TPU);
+    #   "jnp"    — force the pure-jnp path.
+    # Ineligible calls (ring buffer, cross-attn, train/prefill) always
+    # run jnp; see docs/decoding_api.md "Kernel dispatch".
+    attn_impl: str = "auto"
     source: str = ""                    # citation for the config
 
     def __post_init__(self):

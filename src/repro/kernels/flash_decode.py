@@ -14,17 +14,25 @@ dominated).  Design:
 * causality against the cache: slot index == absolute position
   (contiguous cache layout), masked against the per-(row, t) query
   positions streamed in as an int32 block;
+* **int8 KV cache** (``k_scale``/``v_scale``): K/V blocks stay int8 all
+  the way into VMEM — the HBM cache-read traffic is halved — and the
+  per-(token, head) symmetric scales are streamed as their own (1, bs)
+  f32 blocks.  They are folded into the online softmax exactly as the
+  jnp oracle does: scores are scaled per key *column* before masking,
+  probabilities are scaled before the ``p·v`` product but **after** the
+  running ``l`` sum (the softmax normaliser must see unscaled mass);
 * **token-tree windows** (``tree_mask``/``win_start``): the T window
   tokens occupy cache slots ``[win_start, win_start + T)`` in packed node
   order while ``qpos`` carries ``win_start + depth``.  Inside that slot
   range the template's ancestor-or-self mask replaces position causality.
   The per-column ancestor bit is gathered MXU-style — a (GT, T) mask
   matmul against a (T, block_s) relative-slot one-hot — so the kernel
-  needs no dynamic gathers.
+  needs no dynamic gathers.  Tree windows compose with int8 KV: the
+  quantized verify path is the tree path with scales folded in.
 
 The pure-jnp oracle is the ``attend`` path in models/attention.py (which
-accepts the same ``tree_mask``/``win_start``); tests sweep shapes and
-templates and assert allclose in interpret mode.
+accepts the same ``k_scale``/``v_scale``/``tree_mask``/``win_start``);
+tests sweep shapes and templates and assert allclose in interpret mode.
 """
 from __future__ import annotations
 
@@ -39,7 +47,7 @@ from repro.kernels.pallas_compat import CompilerParams
 MASK_VAL = -1e30
 
 
-def _flash_body(q_ref, k_ref, v_ref, qpos_ref, tm_ref, ws_ref,
+def _flash_body(q_ref, k_ref, v_ref, qpos_ref, ks_ref, vs_ref, tm_ref, ws_ref,
                 o_ref, m_ref, l_ref, acc_ref,
                 *, ns: int, block_s: int, scale: float):
     s_idx = pl.program_id(2)
@@ -51,11 +59,14 @@ def _flash_body(q_ref, k_ref, v_ref, qpos_ref, tm_ref, ws_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0, 0].astype(jnp.float32)           # (GT, dh)
-    k = k_ref[0, 0].astype(jnp.float32)           # (bs, dh)
+    k = k_ref[0, 0].astype(jnp.float32)           # (bs, dh) — int8 upcast in VMEM
     v = v_ref[0, 0].astype(jnp.float32)           # (bs, dh)
     qpos = qpos_ref[0]                            # (GT, 1) int32
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (GT, bs)
+    if ks_ref is not None:
+        # int8 KV: per-(token, head) key scale folded into the score columns
+        s = s * ks_ref[0, 0]                      # (1, bs) broadcast over rows
     kpos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     valid = kpos <= qpos                          # slot==position causality
     if tm_ref is not None:
@@ -77,6 +88,10 @@ def _flash_body(q_ref, k_ref, v_ref, qpos_ref, tm_ref, ws_ref,
     alpha = jnp.exp(m_prev - m_new)
     p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
     l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    if vs_ref is not None:
+        # value scale folds into the probabilities *after* the l sum — the
+        # normaliser must accumulate unscaled probability mass
+        p = p * vs_ref[0, 0]                      # (1, bs)
     acc_new = acc_prev * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
     m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
 
@@ -87,7 +102,7 @@ def _flash_body(q_ref, k_ref, v_ref, qpos_ref, tm_ref, ws_ref,
 
 def _kernel(q_ref, k_ref, v_ref, qpos_ref, o_ref, m_ref, l_ref, acc_ref,
             *, ns: int, block_s: int, scale: float):
-    _flash_body(q_ref, k_ref, v_ref, qpos_ref, None, None,
+    _flash_body(q_ref, k_ref, v_ref, qpos_ref, None, None, None, None,
                 o_ref, m_ref, l_ref, acc_ref,
                 ns=ns, block_s=block_s, scale=scale)
 
@@ -95,7 +110,23 @@ def _kernel(q_ref, k_ref, v_ref, qpos_ref, o_ref, m_ref, l_ref, acc_ref,
 def _kernel_tree(q_ref, k_ref, v_ref, qpos_ref, tm_ref, ws_ref,
                  o_ref, m_ref, l_ref, acc_ref,
                  *, ns: int, block_s: int, scale: float):
-    _flash_body(q_ref, k_ref, v_ref, qpos_ref, tm_ref, ws_ref,
+    _flash_body(q_ref, k_ref, v_ref, qpos_ref, None, None, tm_ref, ws_ref,
+                o_ref, m_ref, l_ref, acc_ref,
+                ns=ns, block_s=block_s, scale=scale)
+
+
+def _kernel_int8(q_ref, k_ref, v_ref, qpos_ref, ks_ref, vs_ref,
+                 o_ref, m_ref, l_ref, acc_ref,
+                 *, ns: int, block_s: int, scale: float):
+    _flash_body(q_ref, k_ref, v_ref, qpos_ref, ks_ref, vs_ref, None, None,
+                o_ref, m_ref, l_ref, acc_ref,
+                ns=ns, block_s=block_s, scale=scale)
+
+
+def _kernel_tree_int8(q_ref, k_ref, v_ref, qpos_ref, ks_ref, vs_ref,
+                      tm_ref, ws_ref, o_ref, m_ref, l_ref, acc_ref,
+                      *, ns: int, block_s: int, scale: float):
+    _flash_body(q_ref, k_ref, v_ref, qpos_ref, ks_ref, vs_ref, tm_ref, ws_ref,
                 o_ref, m_ref, l_ref, acc_ref,
                 ns=ns, block_s=block_s, scale=scale)
 
@@ -103,10 +134,12 @@ def _kernel_tree(q_ref, k_ref, v_ref, qpos_ref, tm_ref, ws_ref,
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def flash_decode(
     q: jax.Array,        # (B, T, Hq, dh) query window
-    k: jax.Array,        # (B, S, Hkv, dh) contiguous KV cache
+    k: jax.Array,        # (B, S, Hkv, dh) contiguous KV cache (bf16/f32 or int8)
     v: jax.Array,        # (B, S, Hkv, dh)
     qpos: jax.Array,     # (B, T) int32 absolute query positions
     *,
+    k_scale: jax.Array | None = None,     # (B, S, Hkv) f32 int8-KV scales
+    v_scale: jax.Array | None = None,     # (B, S, Hkv)
     tree_mask: jax.Array | None = None,   # (T, T) bool ancestor-or-self
     win_start: jax.Array | None = None,   # (B,) int32 first window slot
     block_s: int = 512,
@@ -120,12 +153,18 @@ def flash_decode(
     tree = tree_mask is not None
     if tree and win_start is None:
         raise ValueError("tree_mask requires win_start")
+    int8 = k_scale is not None
+    if int8 != (v_scale is not None):
+        raise ValueError("k_scale and v_scale must be passed together")
 
     bs = min(block_s, S)
     Sp = (-S) % bs + S
     if Sp != S:  # pad slots sit at positions >= S and are masked by qpos
         k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        if int8:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, Sp - S), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, Sp - S), (0, 0)))
     ns = Sp // bs
 
     # (B, Hkv, GT, dh): group the G query heads of each kv head
@@ -142,6 +181,14 @@ def flash_decode(
         pl.BlockSpec((1, GT, 1), lambda b, h, s: (b, 0, 0)),
     ]
     operands = [qg, kk, vv, qp]
+    if int8:
+        # (B, Hkv, 1, Sp): one scale row per cache block, broadcast over
+        # the GT score rows inside the kernel
+        ksc = k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+        vsc = v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+        spec = pl.BlockSpec((1, 1, 1, bs), lambda b, h, s: (b, h, 0, s))
+        in_specs += [spec, spec]
+        operands += [ksc, vsc]
     if tree:
         # ancestor rows repeated per grouped head: GT index = g*T + t
         tm = jnp.tile(tree_mask.astype(jnp.float32), (G, 1))   # (GT, T)
@@ -151,17 +198,18 @@ def flash_decode(
             pl.BlockSpec((1,), lambda b, h, s: (b,),
                          memory_space=pltpu.SMEM))
         operands += [tm[None, None], win_start.astype(jnp.int32)]
-        kernel = functools.partial(_kernel_tree, ns=ns, block_s=bs,
-                                   scale=scale)
+        kernel_fn = _kernel_tree_int8 if int8 else _kernel_tree
     else:
-        kernel = functools.partial(_kernel, ns=ns, block_s=bs, scale=scale)
+        kernel_fn = _kernel_int8 if int8 else _kernel
+    kernel = functools.partial(kernel_fn, ns=ns, block_s=bs, scale=scale)
 
+    out_dtype = q.dtype
     out = pl.pallas_call(
         kernel,
         grid=(B, Hkv, ns),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, GT, dh), lambda b, h, s: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, GT, dh), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, GT, dh), out_dtype),
         scratch_shapes=[
             pltpu.VMEM((GT, 1), jnp.float32),
             pltpu.VMEM((GT, 1), jnp.float32),

@@ -1,12 +1,13 @@
 """Public jit'd wrappers around the Pallas kernels, with an XLA fallback.
 
-Dispatch policy:
+Dispatch policy (shared by :func:`w8a8_matmul` and :func:`flash_attend`):
   * on TPU backends the Pallas kernels run compiled;
   * on CPU (this container) the default is the XLA path, which is
     numerically identical (same int8 quantize semantics, exact int32 GEMM via
-    ``dot_general(..., preferred_element_type=int32)``) and keeps the weight
-    operand int8 in the HLO — so ``cost_analysis()`` sees the halved weight
-    bytes exactly as the TPU kernel would;
+    ``dot_general(..., preferred_element_type=int32)``; same mask/online-
+    softmax semantics for attention) and keeps the quantized operand int8
+    in the HLO — so ``cost_analysis()`` sees the halved weight / KV-cache
+    bytes exactly as the TPU kernels would;
   * ``REPRO_USE_PALLAS=1`` (or ``set_use_pallas(True)``) forces the Pallas
     kernels in ``interpret=True`` mode for validation.
 """
@@ -18,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.smooth_quant import smooth_quant
 
@@ -31,6 +33,53 @@ def set_use_pallas(flag: bool) -> None:
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def attn_backend() -> str:
+    """Resolved flash-attention backend under the module dispatch policy:
+    ``"pallas"`` (TPU, compiled), ``"pallas-interpret"`` (forced
+    validation mode) or ``"jnp"`` (CPU default)."""
+    if _on_tpu():
+        return "pallas"
+    if _FORCE_PALLAS:
+        return "pallas-interpret"
+    return "jnp"
+
+
+def flash_attend(
+    q: jax.Array,        # (B, T, Hq, dh) decode/verify query window
+    k: jax.Array,        # (B, S, Hkv, dh) contiguous KV cache (bf16/f32/int8)
+    v: jax.Array,        # (B, S, Hkv, dh)
+    qpos: jax.Array,     # (B, T) int32 absolute query positions
+    *,
+    k_scale: jax.Array | None = None,     # (B, S, Hkv) int8-KV scales
+    v_scale: jax.Array | None = None,
+    tree_mask: jax.Array | None = None,   # (T, T) ancestor-or-self window mask
+    win_start: jax.Array | None = None,   # (B,) first window slot
+    block_s: int = 512,
+    force: bool = False,
+) -> jax.Array:
+    """Verification attention over a *contiguous* cache (slot == position).
+
+    Same policy as :func:`w8a8_matmul`: on TPU the Pallas ``flash_decode``
+    kernel runs compiled (int8 K/V stream at 1 B/elem with the scales
+    folded in-kernel); ``REPRO_USE_PALLAS=1`` / ``force=True`` runs the
+    kernel in interpret mode for CPU validation; the CPU default is the
+    pure-jnp ``attend`` path, which is numerically identical.
+    """
+    if _on_tpu():
+        return flash_decode(q, k, v, qpos, k_scale=k_scale, v_scale=v_scale,
+                            tree_mask=tree_mask, win_start=win_start,
+                            block_s=block_s)
+    if _FORCE_PALLAS or force:
+        return flash_decode(q, k, v, qpos, k_scale=k_scale, v_scale=v_scale,
+                            tree_mask=tree_mask, win_start=win_start,
+                            block_s=block_s, interpret=True)
+    from repro.models.attention import attend  # lazy: avoids import cycle
+
+    return attend(q, k, v, qpos, jnp.arange(k.shape[1], dtype=jnp.int32),
+                  k_scale=k_scale, v_scale=v_scale,
+                  tree_mask=tree_mask, win_start=win_start, impl="jnp")
 
 
 def w8a8_matmul(

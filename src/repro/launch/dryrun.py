@@ -37,7 +37,12 @@ from repro.core.config import QuantConfig, SpecConfig
 from repro.core.spec_engine import make_decode_step
 from repro.launch import shapes as shp
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import analyze, model_flops_decode, model_flops_train
+from repro.launch.roofline import (
+    analyze,
+    kv_cache_read_bytes,
+    model_flops_decode,
+    model_flops_train,
+)
 from repro.launch.sharding import (
     batch_shardings,
     param_shardings,
@@ -166,7 +171,17 @@ def lower_combo(arch: str, shape_name: str, mesh, verifier: str = "w8a8",
         lowered_loop = fn_l.lower(*args_l)
 
     mem = compiled.memory_analysis()
-    rf = analyze(lowered_loop, compiled, chips, n_groups, mflops)
+    kv_bytes = 0.0
+    if kind == "decode":
+        # cache-read roofline term: the verify window streams the whole
+        # committed context's K/V rows (sliding-window caps it at R slots)
+        s = shp.SHAPES[shape_name]
+        ctx = s["seq_len"]
+        if cfg.sliding_window:
+            ctx = min(ctx, cfg.sliding_window)
+        kv_bytes = kv_cache_read_bytes(cfg, s["global_batch"], ctx)
+    rf = analyze(lowered_loop, compiled, chips, n_groups, mflops,
+                 kv_bytes=kv_bytes)
     row = {
         "arch": arch,
         "shape": shape_name,

@@ -101,6 +101,31 @@ def collective_bytes(hlo_text: str, loop_trips: int = 1) -> Dict[str, float]:
     return out
 
 
+def attn_layer_count(cfg) -> int:
+    """Decoder layers that read a self-attention KV cache at decode time
+    (hybrid archs count their shared-attention applications via the
+    census; recurrent-only layers hold no KV rows)."""
+    n_self, _, _, _, _ = cfg._layer_census()
+    return n_self
+
+
+def kv_cache_read_bytes(cfg, batch: int, context: int,
+                        kv_cache_dtype: str = None) -> float:
+    """Modeled HBM bytes to stream the KV cache once for a decode/verify
+    step at ``context`` committed tokens — the cache-read half of the
+    Eq. 11-12 memory term (the other half is the weight bytes, which at
+    32k context it exceeds).  ``int8`` halves the K/V payload and adds
+    the per-(token, head) f32 ``k_scale``/``v_scale`` rows."""
+    dt = kv_cache_dtype or getattr(cfg, "kv_cache_dtype", "bf16")
+    if dt not in ("bf16", "int8"):
+        raise ValueError(f"unmodeled kv cache dtype {dt!r}")
+    elem = 1.0 if dt == "int8" else 2.0
+    per_token = 2.0 * cfg.kv_dim * elem             # K + V rows, one layer
+    if dt == "int8":
+        per_token += 2.0 * cfg.num_kv_heads * 4.0   # k_scale + v_scale f32
+    return float(batch) * float(context) * attn_layer_count(cfg) * per_token
+
+
 @dataclasses.dataclass
 class Roofline:
     flops: float                 # global HLO flops (loop-layout lowering)
@@ -109,6 +134,8 @@ class Roofline:
     coll_breakdown: Dict[str, float]
     chips: int
     model_flops: float = 0.0     # analytic global 6·N·D (or 2·N·D decode)
+    kv_bytes: float = 0.0        # analytic global KV-cache read bytes
+    #                              (kv_cache_read_bytes; 0 for train/prefill)
 
     @property
     def t_compute(self) -> float:
@@ -117,6 +144,11 @@ class Roofline:
     @property
     def t_memory(self) -> float:
         return self.bytes_accessed / (self.chips * HBM_BW)
+
+    @property
+    def t_kv_memory(self) -> float:
+        """KV-cache share of the memory term — the piece int8 KV halves."""
+        return self.kv_bytes / (self.chips * HBM_BW)
 
     @property
     def t_collective(self) -> float:
@@ -138,7 +170,7 @@ class Roofline:
         return self.model_flops / self.flops if self.flops else 0.0
 
     def row(self) -> dict:
-        return {
+        out = {
             "t_compute_s": self.t_compute,
             "t_memory_s": self.t_memory,
             "t_collective_s": self.t_collective,
@@ -148,10 +180,16 @@ class Roofline:
             "coll_gbytes_per_chip": self.coll_bytes / 1e9,
             "useful_flops_ratio": self.useful_flops_ratio,
         }
+        if self.kv_bytes:
+            out["kv_gbytes"] = self.kv_bytes / 1e9
+            out["t_kv_memory_s"] = self.t_kv_memory
+            out["kv_share_of_memory"] = (self.kv_bytes / self.bytes_accessed
+                                         if self.bytes_accessed else 0.0)
+        return out
 
 
 def analyze(lowered_loop, compiled_scan, chips: int, loop_trips: int,
-            model_flops: float = 0.0) -> Roofline:
+            model_flops: float = 0.0, kv_bytes: float = 0.0) -> Roofline:
     ca = lowered_loop.cost_analysis() if lowered_loop is not None else {}
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
@@ -167,6 +205,7 @@ def analyze(lowered_loop, compiled_scan, chips: int, loop_trips: int,
         coll_breakdown=breakdown,
         chips=chips,
         model_flops=model_flops,
+        kv_bytes=kv_bytes,
     )
 
 

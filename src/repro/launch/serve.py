@@ -36,6 +36,12 @@ def main():
     ap.add_argument("--verifier", default="w8a8",
                     choices=list(available_verifiers()))
     ap.add_argument("--kv-cache", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=["auto", "jnp", "pallas"],
+                    help="decode/verify attention path: auto = Pallas "
+                         "flash-decode kernel on TPU (interpret under "
+                         "REPRO_USE_PALLAS=1) else jnp; pallas/jnp force "
+                         "one side")
     ap.add_argument("--drafter", default=None,
                     choices=list(available_drafters()))
     ap.add_argument("--mode", default=None, choices=list(LEGACY_MODES),
@@ -62,6 +68,8 @@ def main():
         cfg = cfg.reduced()
     if args.kv_cache != "bf16":
         cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv_cache)
+    if args.attn_impl != "auto":
+        cfg = dataclasses.replace(cfg, attn_impl=args.attn_impl)
     model = Model(cfg)
 
     if args.ckpt:
@@ -93,8 +101,11 @@ def main():
     prompts = jnp.asarray(task_prompts(
         args.task, args.batch, args.prompt_len, cfg.vocab_size))
     r = engine.generate(params, prompts, args.new_tokens)
+    from repro.kernels.ops import attn_backend
+    attn_path = cfg.attn_impl if cfg.attn_impl != "auto" else attn_backend()
     print(f"arch={cfg.name} verifier={engine.verifier.name} "
-          f"drafter={engine.drafter.name}")
+          f"drafter={engine.drafter.name} kv_cache={cfg.kv_cache_dtype} "
+          f"attn={attn_path}")
     print(f"generated {r.new_tokens} tokens in {r.wall_s:.2f}s "
           f"({r.tokens_per_s:.1f} tok/s CPU)")
     print(f"verify steps={r.steps}  mean acceptance length L={r.mean_accept_len:.3f}")

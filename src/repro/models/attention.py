@@ -127,9 +127,12 @@ def _attend_direct(q, k, v, valid, k_scale=None, v_scale=None):
 def _attend_chunked(q, k, v, valid, k_scale=None, v_scale=None):
     """Online-softmax (flash-style) over KV chunks via lax.scan.
 
-    Keeps peak live memory at O(B·H·T·C) per step instead of O(B·H·T·S);
-    this is the XLA-level flash attention used for 4k-500k sequences (a
-    Pallas flash kernel is a hillclimb candidate, see EXPERIMENTS §Perf).
+    Keeps peak live memory at O(B·H·T·C) per step instead of O(B·H·T·S).
+    This is the XLA-level flash attention for long sequences on the jnp
+    path — flash-eligible decode/verify reads dispatch to the Pallas
+    ``flash_decode`` kernel instead (see :func:`attend`), so this covers
+    the ineligible shapes (ring buffers, train/prefill) and the CPU
+    default backend.
     """
     B, T, Hq, dh = q.shape
     S, Hkv = k.shape[1], k.shape[2]
@@ -176,11 +179,53 @@ def _attend_chunked(q, k, v, valid, k_scale=None, v_scale=None):
     return o.astype(q.dtype)
 
 
+def _flash_eligible(kpos, window, causal, tree_mask) -> bool:
+    """The Pallas flash-decode kernel covers exactly the cache-read
+    decode/verify shape: causal attention over a contiguous cache whose
+    slot index equals the absolute position (``kpos`` is the 1-D
+    ``arange`` the contiguous-cache path passes).  Ring buffers (2-D
+    ``kpos``), sliding windows, cross-attention and the train/prefill
+    self-window (2-D ``kpos = qpos``) stay on the jnp path."""
+    del tree_mask  # tree windows compose with the kernel — no exclusion
+    return causal and window is None and jnp.ndim(kpos) == 1
+
+
 def attend(q, k, v, qpos, kpos, *, window=None, causal=True,
-           k_scale=None, v_scale=None, tree_mask=None, win_start=None):
+           k_scale=None, v_scale=None, tree_mask=None, win_start=None,
+           impl=None):
+    """Position-masked attention; ``impl`` picks the implementation for
+    flash-eligible calls: ``"auto"`` (default) follows the backend policy
+    (TPU → compiled Pallas kernel, ``REPRO_USE_PALLAS=1`` → interpret
+    validation, CPU default → jnp), ``"pallas"`` forces the kernel
+    (interpret off-TPU), ``"jnp"`` forces the pure-jnp path.  Ineligible
+    calls always run jnp regardless of ``impl``."""
+    mode = impl or "auto"
+    if mode not in ("auto", "jnp", "pallas"):
+        raise ValueError(f"unknown attn impl {mode!r}")
+    if mode != "jnp" and _flash_eligible(kpos, window, causal, tree_mask):
+        from repro.kernels import ops  # lazy: kernels must not pull models
+
+        if mode == "pallas" or ops.attn_backend() != "jnp":
+            return ops.flash_attend(q, k, v, qpos,
+                                    k_scale=k_scale, v_scale=v_scale,
+                                    tree_mask=tree_mask, win_start=win_start,
+                                    force=mode == "pallas")
     valid = _mask(qpos, kpos, window, causal, tree_mask, win_start)
     S = k.shape[1]
-    if S > CHUNK_THRESHOLD and S % KV_CHUNK == 0:
+    if S > CHUNK_THRESHOLD:
+        pad = (-S) % KV_CHUNK
+        if pad:  # keep the O(B·H·T·C) online-softmax path for non-aligned
+            # caches: pad K/V (+ scales) with masked junk columns.  Serving
+            # buffers are pre-aligned by transformer.init_cache, so this
+            # per-call copy only hits direct attend() callers, never the
+            # jitted decode hot loop.
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            valid = jnp.pad(valid, ((0, 0),) * (valid.ndim - 1) + ((0, pad),))
+            if k_scale is not None:
+                k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            if v_scale is not None:
+                v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
         return _attend_chunked(q, k, v, valid, k_scale, v_scale)
     return _attend_direct(q, k, v, valid, k_scale, v_scale)
 
@@ -271,9 +316,11 @@ def self_attention(
         kpos = cache.get("kpos", jnp.arange(keys.shape[1], dtype=jnp.int32))
         o = attend(q, keys, values, qpos, kpos, window=window, causal=causal,
                    k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
-                   tree_mask=tree_mask, win_start=win_start)
+                   tree_mask=tree_mask, win_start=win_start,
+                   impl=getattr(cfg, "attn_impl", None))
     else:
-        o = attend(q, k, v, qpos, qpos, window=window, causal=causal)
+        o = attend(q, k, v, qpos, qpos, window=window, causal=causal,
+                   impl=getattr(cfg, "attn_impl", None))
 
     out = _lin(p["o"], o.reshape(B, T, cfg.q_dim), collect, f"{path}/o")
     return out, cache

@@ -1,0 +1,213 @@
+"""Kernel dispatch for the verification attention hot path.
+
+* ``attend()`` routes exactly the flash-eligible calls (contiguous
+  cache-read decode/verify) to ``ops.flash_attend`` — ring buffers,
+  sliding windows, cross-attn and train/prefill stay jnp;
+* forced-kernel generation (``attn_impl="pallas"``, interpret mode on
+  CPU) is bit-identical to the jnp path end to end, for every
+  drafter × verifier at T=0 and T>0, including the int8 KV cache;
+* the chunk-padding fix: non-KV_CHUNK-aligned long caches take the
+  online-softmax path and still match the direct oracle.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.config import SpecConfig
+from repro.kernels import ops as kops
+from repro.models import Model
+from repro.models import attention as attn_mod
+from repro.models.attention import _attend_direct, _mask, _quant_kv, attend
+from repro.serving.engine import SpecEngine
+
+
+# ---------------------------------------------------------------------------
+# Routing: exactly the eligible calls reach the kernel
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def spy(monkeypatch):
+    calls = []
+    real = kops.flash_decode
+
+    def counted(*a, **kw):
+        calls.append(kw)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(kops, "flash_decode", counted)
+    return calls
+
+
+def _qkv(s=24, t=3, b=2, hkv=2, g=2, dh=8, seed=0):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (b, t, hkv * g, dh))
+    k = jax.random.normal(kk, (b, s, hkv, dh))
+    v = jax.random.normal(kv, (b, s, hkv, dh))
+    qpos = jnp.tile(jnp.arange(s - t, s)[None], (b, 1))
+    return q, k, v, qpos
+
+
+def test_attend_routes_eligible_call_to_kernel(spy):
+    q, k, v, qpos = _qkv()
+    kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    kops.set_use_pallas(True)
+    try:
+        o = attend(q, k, v, qpos, kpos)
+    finally:
+        kops.set_use_pallas(False)
+    assert len(spy) == 1 and spy[0].get("interpret") is True
+    o_ref = attend(q, k, v, qpos, kpos, impl="jnp")
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attend_impl_pallas_forces_kernel_without_env(spy):
+    """attn_impl="pallas" dispatches the kernel even when the backend
+    policy would pick jnp (interpret mode off-TPU)."""
+    assert kops.attn_backend() == "jnp"  # CPU container, env var unset
+    q, k, v, qpos = _qkv()
+    kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    o = attend(q, k, v, qpos, kpos, impl="pallas")
+    assert len(spy) == 1
+    o_ref = attend(q, k, v, qpos, kpos, impl="jnp")
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attend_ineligible_calls_stay_jnp(spy):
+    """Ring buffers (2-D kpos), sliding windows, non-causal cross-attn and
+    the CPU-default auto mode never reach the kernel — even forced."""
+    q, k, v, qpos = _qkv()
+    kpos1 = jnp.arange(k.shape[1], dtype=jnp.int32)
+    kpos2 = jnp.tile(kpos1[None], (q.shape[0], 1))
+    kops.set_use_pallas(True)
+    try:
+        attend(q, k, v, qpos, kpos2)                     # ring layout
+        attend(q, k, v, qpos, kpos1, window=8)           # sliding window
+        attend(q, k, v, qpos, kpos1, causal=False)       # cross-attn
+        attend(q, k, v, qpos, kpos1, impl="jnp")         # forced jnp
+    finally:
+        kops.set_use_pallas(False)
+    attend(q, k, v, qpos, kpos1)                         # auto on CPU
+    assert spy == []
+    attend(q, k, v, qpos, kpos2, impl="pallas")          # forced but ineligible
+    assert spy == []
+
+
+def test_attend_rejects_unknown_impl():
+    q, k, v, qpos = _qkv()
+    with pytest.raises(ValueError, match="attn impl"):
+        attend(q, k, v, qpos, jnp.arange(k.shape[1]), impl="triton")
+
+
+def test_flash_attend_cpu_default_is_jnp_oracle():
+    """Direct flash_attend calls fall back to the numerically identical
+    jnp path on the CPU default backend (w8a8_matmul policy mirror)."""
+    q, k, v, qpos = _qkv(seed=1)
+    o = kops.flash_attend(q, k, v, qpos)
+    o_ref = attend(q, k, v, qpos, jnp.arange(k.shape[1], dtype=jnp.int32),
+                   impl="jnp")
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(o_ref))
+
+
+# ---------------------------------------------------------------------------
+# Chunk padding: non-aligned long caches keep the online-softmax path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("int8", [False, True])
+def test_attend_chunked_padding_non_aligned(monkeypatch, int8):
+    """S > CHUNK_THRESHOLD with S % KV_CHUNK != 0 must take the chunked
+    path (it used to fall back silently to the O(B·H·T·S) direct path)
+    and still match the direct-softmax oracle — bf16 and int8 caches."""
+    calls = []
+    real = attn_mod._attend_chunked
+
+    def counted(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(attn_mod, "_attend_chunked", counted)
+    b, t, s, hkv, dh = 1, 3, 4360, 1, 8
+    assert s > attn_mod.CHUNK_THRESHOLD and s % attn_mod.KV_CHUNK != 0
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(kq, (b, t, hkv, dh))
+    k = jax.random.normal(kk, (b, s, hkv, dh))
+    v = jax.random.normal(kv, (b, s, hkv, dh))
+    ks = vs = None
+    if int8:
+        k, ks = _quant_kv(k)
+        v, vs = _quant_kv(v)
+    qpos = jnp.tile(jnp.arange(s - t, s)[None], (b, 1))
+    kpos = jnp.arange(s, dtype=jnp.int32)
+    o = attend(q, k, v, qpos, kpos, k_scale=ks, v_scale=vs, impl="jnp")
+    assert calls == [1]
+    valid = _mask(qpos, kpos, None, True)
+    o_ref = _attend_direct(q, k, v, valid, ks, vs)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: forced-kernel generation ≡ jnp generation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def base_cfg():
+    return get_config("smollm-135m").reduced()
+
+
+@pytest.fixture(scope="module")
+def base_params(base_cfg):
+    return Model(base_cfg).init_params(jax.random.PRNGKey(0))
+
+
+def _generate(cfg, params, drafter, verifier, temperature, kv="bf16"):
+    cfg = dataclasses.replace(cfg, kv_cache_dtype=kv)
+    scfg = SpecConfig(gamma=3, temperature=temperature, pruned_retention=0.5,
+                      tree_branches=(2, 1, 1) if drafter == "ngram-tree"
+                      else None)
+    rng = np.random.default_rng(13)
+    prompt = jnp.asarray(np.tile(rng.integers(0, cfg.vocab_size, 6), 4)
+                         [None].repeat(2, 0).astype(np.int32))
+    eng = SpecEngine(Model(cfg), scfg, drafter=drafter, verifier=verifier)
+    r = eng.generate(params, prompt, 6, key=jax.random.PRNGKey(42))
+    return prompt.shape[1], r
+
+
+@pytest.mark.parametrize("drafter", ["ngram", "vanilla", "pruned",
+                                     "ngram-tree"])
+@pytest.mark.parametrize("verifier", ["bf16", "w8a8"])
+def test_forced_kernel_generation_bit_identical(base_cfg, base_params,
+                                                drafter, verifier):
+    """attn_impl="pallas" (interpret-mode kernel) generation is
+    bit-identical to the jnp path for every drafter × verifier at T=0
+    and T>0 — the dispatch is a perf decision, never a semantic one."""
+    for temperature in (0.0, 1.0):
+        P, r_jnp = _generate(
+            dataclasses.replace(base_cfg, attn_impl="jnp"), base_params,
+            drafter, verifier, temperature)
+        _, r_pal = _generate(
+            dataclasses.replace(base_cfg, attn_impl="pallas"), base_params,
+            drafter, verifier, temperature)
+        np.testing.assert_array_equal(
+            np.asarray(r_jnp.tokens[:, : P + 6]),
+            np.asarray(r_pal.tokens[:, : P + 6]),
+            err_msg=f"T={temperature}")
+        assert r_jnp.steps == r_pal.steps
+
+
+def test_forced_kernel_generation_bit_identical_int8_kv(base_cfg,
+                                                        base_params):
+    """The quantized cache composes: int8-KV flash verification commits
+    the same stream as the int8-KV jnp path."""
+    P, r_jnp = _generate(dataclasses.replace(base_cfg, attn_impl="jnp"),
+                         base_params, "ngram", "w8a8", 0.0, kv="int8")
+    _, r_pal = _generate(dataclasses.replace(base_cfg, attn_impl="pallas"),
+                         base_params, "ngram", "w8a8", 0.0, kv="int8")
+    np.testing.assert_array_equal(np.asarray(r_jnp.tokens[:, : P + 6]),
+                                  np.asarray(r_pal.tokens[:, : P + 6]))
+    assert r_jnp.steps == r_pal.steps

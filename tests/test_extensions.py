@@ -72,6 +72,150 @@ def test_int8_kv_spec_lossless():
     assert bool(jnp.all(rv.tokens[:, :P + 12] == rs.tokens[:, :P + 12]))
 
 
+def test_degenerate_tree_bit_equals_chain_int8_kv():
+    """Tree speculation composes with the int8 KV cache: any chain drafter
+    through the tree route (depth positions, ancestor mask, path-compacting
+    commit — including the k_scale/v_scale rows) reproduces the chain
+    route bit-for-bit at T=0 and T>0."""
+    from repro.core import ChainTreeAdapter, get_drafter
+    from repro.serving import GenerationRequest
+
+    cfg8 = dataclasses.replace(get_config("smollm-135m").reduced(),
+                               kv_cache_dtype="int8")
+    m8 = Model(cfg8)
+    params = m8.init_params(jax.random.PRNGKey(0))
+    scfg = SpecConfig(gamma=3, temperature=0.0)
+    rng = np.random.default_rng(21)
+    pat = rng.integers(0, cfg8.vocab_size, 6)
+    requests = [
+        GenerationRequest(np.tile(pat, 4), max_new_tokens=8, seed=5),
+        GenerationRequest(np.tile(pat, 5), max_new_tokens=10, seed=6,
+                          temperature=1.0),
+    ]
+    chain_eng = SpecEngine(m8, scfg, drafter="ngram", verifier="w8a8")
+    tree_eng = SpecEngine(
+        m8, scfg, drafter=ChainTreeAdapter(get_drafter("ngram", scfg)),
+        verifier="w8a8")
+    r_chain = chain_eng.generate_requests(params, requests, batch_slots=2)
+    r_tree = tree_eng.generate_requests(params, requests, batch_slots=2)
+    for rc, rt in zip(r_chain, r_tree):
+        np.testing.assert_array_equal(rc.tokens, rt.tokens)
+        assert rc.steps == rt.steps and rc.accept_len == rt.accept_len
+
+
+def test_wide_tree_lossless_greedy_int8_kv():
+    """Whatever a wide template proposes over an int8 cache, T=0
+    verification commits exactly the int8 autoregressive stream."""
+    cfg8 = dataclasses.replace(get_config("smollm-135m").reduced(),
+                               kv_cache_dtype="int8")
+    m8 = Model(cfg8)
+    params = m8.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompt = jnp.asarray(np.tile(rng.integers(0, cfg8.vocab_size, 6), 5)
+                         [None].repeat(2, 0).astype(np.int32))
+    P = prompt.shape[1]
+    van = SpecEngine(m8, SpecConfig(gamma=0, temperature=0.0),
+                     drafter="vanilla", verifier="bf16").generate(
+        params, prompt, 10)
+    tree = SpecEngine(m8, SpecConfig(temperature=0.0,
+                                     tree_branches=(2, 2)),
+                      drafter="ngram-tree", verifier="bf16").generate(
+        params, prompt, 10)
+    assert bool(jnp.all(van.tokens[:, : P + 10] == tree.tokens[:, : P + 10]))
+
+
+def test_tree_commit_compacts_scale_rows_int8():
+    """commit_cache_tree must move the accepted path's k_scale/v_scale
+    rows together with their int8 K/V rows (and leave rejected-depth
+    rows untouched)."""
+    from repro.models.transformer import _compact_attn_rows
+
+    B, S, H, dh, D = 2, 16, 2, 4, 3
+    rng = np.random.default_rng(0)
+    lcache = {
+        "k": jnp.asarray(rng.integers(-127, 127, (B, S, H, dh)), jnp.int8),
+        "v": jnp.asarray(rng.integers(-127, 127, (B, S, H, dh)), jnp.int8),
+        "k_scale": jnp.asarray(rng.random((B, S, H)), jnp.float32),
+        "v_scale": jnp.asarray(rng.random((B, S, H)), jnp.float32),
+    }
+    # accepted path: root=0, then packed node ordinals per depth
+    path_nodes = jnp.asarray([[0, 2, 5, 6], [0, 1, 3, 7]], jnp.int32)
+    start = jnp.asarray([3, 8], jnp.int32)
+    n_accept = jnp.asarray([2, 3], jnp.int32)
+    new = _compact_attn_rows(lcache, start, path_nodes, n_accept)
+    old = {k: np.asarray(v) for k, v in lcache.items()}
+    for b in range(B):
+        for d in range(1, D + 1):
+            dst = int(start[b]) + d
+            src = int(start[b]) + int(path_nodes[b, d])
+            for name in ("k", "v", "k_scale", "v_scale"):
+                expect = old[name][b, src] if d <= int(n_accept[b]) \
+                    else old[name][b, dst]
+                np.testing.assert_array_equal(
+                    np.asarray(new[name])[b, dst], expect,
+                    err_msg=f"{name} b={b} d={d}")
+
+
+def test_int8_ring_buffer_matches_masked_recompute():
+    """Sliding-window decode through the int8 ring buffer (wrapping it
+    several times) ≡ a from-scratch masked recompute over the same
+    quantized K/V rows."""
+    from repro.models.attention import (
+        RING_PAD, attend, init_attn_cache, write_cache)
+
+    class _Cfg:
+        num_kv_heads = 2
+        head_dim = 8
+        kv_cache_dtype = "int8"
+        dtype = jnp.float32
+
+    B, W, Hq = 2, 8, 4
+    T_total = W + RING_PAD + 32   # > ring size W + RING_PAD ⇒ wraps
+    cfg = _Cfg()
+    cache = init_attn_cache(cfg, B, max_len=64, window=W)
+    R = cache["k"].shape[1]
+    assert T_total > R  # the ring must actually wrap
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    qs = jax.random.normal(kq, (B, T_total, Hq, cfg.head_dim))
+    ks = jax.random.normal(kk, (B, T_total, cfg.num_kv_heads, cfg.head_dim))
+    vs = jax.random.normal(kv, (B, T_total, cfg.num_kv_heads, cfg.head_dim))
+    from repro.models.attention import _quant_kv
+    k8f, ksf = _quant_kv(ks)
+    v8f, vsf = _quant_kv(vs)
+
+    for t in range(T_total):
+        qpos = jnp.full((B, 1), t, jnp.int32)
+        cache = write_cache(cache, ks[:, t:t + 1], vs[:, t:t + 1], qpos, W)
+        o = attend(qs[:, t:t + 1], cache["k"], cache["v"], qpos,
+                   cache["kpos"], window=W,
+                   k_scale=cache["k_scale"], v_scale=cache["v_scale"])
+        if t % 17 != 0 and t != T_total - 1:
+            continue  # spot-check (full check at every wrap boundary cost)
+        o_ref = attend(qs[:, t:t + 1], k8f[:, :t + 1], v8f[:, :t + 1],
+                       qpos, jnp.arange(t + 1, dtype=jnp.int32), window=W,
+                       k_scale=ksf[:, :t + 1], v_scale=vsf[:, :t + 1])
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   rtol=1e-5, atol=1e-5, err_msg=f"t={t}")
+
+
+def test_int8_kv_sliding_window_spec_lossless():
+    """Speculative serving over an int8 ring buffer commits exactly the
+    int8 autoregressive stream (model-level end-to-end)."""
+    cfg8 = dataclasses.replace(get_config("smollm-135m").reduced(),
+                               kv_cache_dtype="int8", sliding_window=16)
+    m8 = Model(cfg8)
+    params = m8.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = jnp.array(np.tile(rng.integers(0, cfg8.vocab_size, 6), 5)
+                       [None].repeat(2, 0).astype(np.int32))
+    scfg = SpecConfig(gamma=4)
+    rv = SpecEngine(m8, scfg, mode="vanilla").generate(params, prompt, 12)
+    rs = SpecEngine(m8, scfg, mode="spec").generate(params, prompt, 12)
+    P = prompt.shape[1]
+    assert bool(jnp.all(rv.tokens[:, :P + 12] == rs.tokens[:, :P + 12]))
+
+
 def test_shard_map_moe_matches_gspmd():
     """shard_map expert-parallel path == auto-partitioned path (2×2 mesh,
     subprocess for device-count isolation)."""

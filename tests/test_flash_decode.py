@@ -1,11 +1,15 @@
-"""Flash-decode Pallas kernel vs the attend() oracle, swept with hypothesis."""
+"""Flash-decode Pallas kernel vs the attend() oracle, swept with hypothesis
+— bf16/f32 and int8-KV (per-(token, head) scales folded in-kernel), chain
+and tree-masked windows."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, st  # hypothesis optional
 
+from repro.core.tree import TreeTemplate
 from repro.kernels.flash_decode import flash_decode
-from repro.models.attention import attend
+from repro.models.attention import _quant_kv, attend
 
 
 @settings(max_examples=12, deadline=None)
@@ -28,9 +32,118 @@ def test_flash_decode_matches_attend(b, t, s, hkv, g, dh, seed):
     start = jax.random.randint(kp, (b,), 0, s - t + 1)
     qpos = start[:, None] + jnp.arange(t)[None, :]
     o_flash = flash_decode(q, k, v, qpos, block_s=32, interpret=True)
-    o_ref = attend(q, k, v, qpos, jnp.arange(s, dtype=jnp.int32))
+    # impl="jnp" pins the oracle: under REPRO_USE_PALLAS=1 (CI parity
+    # step) auto mode would dispatch the oracle to the kernel itself
+    o_ref = attend(q, k, v, qpos, jnp.arange(s, dtype=jnp.int32),
+                   impl="jnp")
     np.testing.assert_allclose(np.asarray(o_flash), np.asarray(o_ref),
                                rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    t=st.integers(1, 6),
+    s=st.integers(8, 160),
+    hkv=st.sampled_from([1, 2, 3]),
+    g=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_decode_int8_matches_attend(b, t, s, hkv, g, dh, seed):
+    """int8 K/V + streamed scales ≡ the jnp int8 oracle (f32 accumulation),
+    across a shape sweep including non-block-multiple S (block_s=32)."""
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    hq = hkv * g
+    q = jax.random.normal(kq, (b, t, hq, dh))
+    k8, ks = _quant_kv(jax.random.normal(kk, (b, s, hkv, dh)))
+    v8, vs = _quant_kv(jax.random.normal(kv, (b, s, hkv, dh)))
+    start = jax.random.randint(kp, (b,), 0, s - t + 1)
+    qpos = start[:, None] + jnp.arange(t)[None, :]
+    o_flash = flash_decode(q, k8, v8, qpos, k_scale=ks, v_scale=vs,
+                           block_s=32, interpret=True)
+    o_ref = attend(q, k8, v8, qpos, jnp.arange(s, dtype=jnp.int32),
+                   k_scale=ks, v_scale=vs, impl="jnp")
+    np.testing.assert_allclose(np.asarray(o_flash), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("branches", [(1, 1, 1), (2, 2), (3, 1), (2, 1, 2)])
+def test_flash_decode_int8_tree_matches_attend(branches):
+    """int8 KV composes with the tree-mask route: quantized tree-masked
+    flash_decode ≡ the jnp oracle at a non-block-multiple cache length."""
+    tpl = TreeTemplate(branches)
+    t = tpl.num_nodes
+    b, s, hkv, g, dh = 2, 53, 2, 2, 8
+    key = jax.random.PRNGKey(sum(branches))
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (b, t, hkv * g, dh))
+    k8, ks = _quant_kv(jax.random.normal(kk, (b, s, hkv, dh)))
+    v8, vs = _quant_kv(jax.random.normal(kv, (b, s, hkv, dh)))
+    start = jax.random.randint(kp, (b,), 0, s - t + 1)
+    qpos = start[:, None] + tpl.depths_dev[None, :]
+    o_flash = flash_decode(q, k8, v8, qpos, k_scale=ks, v_scale=vs,
+                           tree_mask=tpl.mask_dev, win_start=start,
+                           block_s=16, interpret=True)
+    o_ref = attend(q, k8, v8, qpos, jnp.arange(s, dtype=jnp.int32),
+                   k_scale=ks, v_scale=vs, tree_mask=tpl.mask_dev,
+                   win_start=start, impl="jnp")
+    np.testing.assert_allclose(np.asarray(o_flash), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [
+    # (b, t, s, hkv, g, dh, block_s) — s spans non-block-multiples
+    (2, 4, 50, 2, 2, 8, 16),
+    (1, 6, 33, 1, 4, 16, 32),
+    (3, 1, 128, 3, 1, 8, 32),
+    (2, 3, 97, 2, 2, 16, 64),
+])
+def test_flash_decode_int8_shape_sweep(shape):
+    """Deterministic int8 sweep (runs with or without hypothesis),
+    including cache lengths that are not block-size multiples."""
+    b, t, s, hkv, g, dh, bs = shape
+    key = jax.random.PRNGKey(s)
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (b, t, hkv * g, dh))
+    k8, ks = _quant_kv(jax.random.normal(kk, (b, s, hkv, dh)))
+    v8, vs = _quant_kv(jax.random.normal(kv, (b, s, hkv, dh)))
+    start = jax.random.randint(kp, (b,), 0, s - t + 1)
+    qpos = start[:, None] + jnp.arange(t)[None, :]
+    o_flash = flash_decode(q, k8, v8, qpos, k_scale=ks, v_scale=vs,
+                           block_s=bs, interpret=True)
+    o_ref = attend(q, k8, v8, qpos, jnp.arange(s, dtype=jnp.int32),
+                   k_scale=ks, v_scale=vs, impl="jnp")
+    np.testing.assert_allclose(np.asarray(o_flash), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_int8_vs_dequantized_reference():
+    """The in-kernel scale fold must equal explicit dequantization."""
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    b, t, s, hkv, g, dh = 2, 4, 40, 2, 2, 16
+    q = jax.random.normal(kq, (b, t, hkv * g, dh))
+    k8, ks = _quant_kv(jax.random.normal(kk, (b, s, hkv, dh)))
+    v8, vs = _quant_kv(jax.random.normal(kv, (b, s, hkv, dh)))
+    qpos = jnp.tile(jnp.arange(20, 20 + t)[None], (b, 1))
+    o = flash_decode(q, k8, v8, qpos, k_scale=ks, v_scale=vs,
+                     block_s=16, interpret=True)
+    o_deq = attend(q, k8.astype(jnp.float32) * ks[..., None],
+                   v8.astype(jnp.float32) * vs[..., None], qpos,
+                   jnp.arange(s, dtype=jnp.int32), impl="jnp")
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_deq),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_scale_args_must_pair():
+    q = jnp.zeros((1, 1, 1, 8))
+    k = jnp.zeros((1, 8, 1, 8), jnp.int8)
+    ks = jnp.ones((1, 8, 1))
+    with pytest.raises(ValueError, match="together"):
+        flash_decode(q, k, k, jnp.zeros((1, 1), jnp.int32),
+                     k_scale=ks, interpret=True)
 
 
 def test_flash_decode_bf16():
@@ -41,7 +154,8 @@ def test_flash_decode_bf16():
     v = jax.random.normal(kv, (2, 256, 4, 32), jnp.bfloat16)
     qpos = jnp.tile(jnp.arange(100, 104)[None], (2, 1))
     o = flash_decode(q, k, v, qpos, block_s=128, interpret=True)
-    o_ref = attend(q, k, v, qpos, jnp.arange(256, dtype=jnp.int32))
+    o_ref = attend(q, k, v, qpos, jnp.arange(256, dtype=jnp.int32),
+                   impl="jnp")
     np.testing.assert_allclose(np.asarray(o, np.float32),
                                np.asarray(o_ref, np.float32),
                                rtol=2e-2, atol=2e-2)

@@ -244,7 +244,8 @@ def test_attend_tree_mask_matches_bruteforce():
     start = np.array([3, 10])
     qpos = jnp.asarray(start)[:, None] + tpl.depths_dev[None, :]
     o = attend(q, k, v, qpos, jnp.arange(S, dtype=jnp.int32),
-               tree_mask=tpl.mask_dev, win_start=jnp.asarray(start))
+               tree_mask=tpl.mask_dev, win_start=jnp.asarray(start),
+               impl="jnp")  # this test validates the jnp oracle itself
     mask = _tree_mask_oracle(tpl, start, B, T, S)
     qn, kn, vn = map(np.asarray, (q, k, v))
     for bb in range(B):
@@ -285,8 +286,10 @@ def test_flash_decode_tree_matches_attend(tidx, b, s, hkv, g, dh, seed):
     qpos = start[:, None] + tpl.depths_dev[None, :]
     o_flash = flash_decode(q, k, v, qpos, tree_mask=tpl.mask_dev,
                            win_start=start, block_s=32, interpret=True)
+    # impl="jnp" pins the oracle: under REPRO_USE_PALLAS=1 (CI parity
+    # step) auto mode would dispatch the oracle to the kernel itself
     o_ref = attend(q, k, v, qpos, jnp.arange(s, dtype=jnp.int32),
-                   tree_mask=tpl.mask_dev, win_start=start)
+                   tree_mask=tpl.mask_dev, win_start=start, impl="jnp")
     np.testing.assert_allclose(np.asarray(o_flash), np.asarray(o_ref),
                                rtol=2e-5, atol=2e-5)
 
@@ -309,7 +312,7 @@ def test_flash_decode_tree_template_sweep(branches):
     o_flash = flash_decode(q, k, v, qpos, tree_mask=tpl.mask_dev,
                            win_start=start, block_s=16, interpret=True)
     o_ref = attend(q, k, v, qpos, jnp.arange(s, dtype=jnp.int32),
-                   tree_mask=tpl.mask_dev, win_start=start)
+                   tree_mask=tpl.mask_dev, win_start=start, impl="jnp")
     np.testing.assert_allclose(np.asarray(o_flash), np.asarray(o_ref),
                                rtol=2e-5, atol=2e-5)
 
@@ -323,7 +326,8 @@ def test_flash_decode_chain_unchanged():
     v = jax.random.normal(kv, (2, 64, 2, 16))
     qpos = jnp.tile(jnp.arange(30, 34)[None], (2, 1))
     o = flash_decode(q, k, v, qpos, block_s=32, interpret=True)
-    o_ref = attend(q, k, v, qpos, jnp.arange(64, dtype=jnp.int32))
+    o_ref = attend(q, k, v, qpos, jnp.arange(64, dtype=jnp.int32),
+                   impl="jnp")
     np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
                                rtol=2e-5, atol=2e-5)
 
