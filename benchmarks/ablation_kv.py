@@ -15,7 +15,13 @@ to the KV cache:
 * **measured step time** — CPU wall time of ``attend`` over long caches
   at a KV_CHUNK-aligned and a non-aligned S: both must take the chunked
   online-softmax path (the non-aligned case used to fall back silently
-  to the O(B·H·T·S) direct path — the padding fix keeps it chunked).
+  to the O(B·H·T·S) direct path — the padding fix keeps it chunked);
+* **paged layout** — the *capacity* half of the bandwidth argument
+  (``kv_layout="paged"``, ``core/paged_cache.py``): a mixed-length
+  request workload modeled at paper scale (contiguous worst-case slots
+  vs block-granular demand) plus a measured CPU run of the scheduler
+  under both layouts — actual cache-pytree bytes, throughput, and the
+  bit-equality of the served tokens.
 
 Results land in ``benchmarks/results/ablation_kv.json``.
 """
@@ -26,17 +32,24 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.core.config import SpecConfig
-from repro.launch.roofline import kv_cache_read_bytes
+from repro.launch.roofline import kv_cache_capacity_bytes, kv_cache_read_bytes
 from repro.models import Model
 from repro.models.attention import CHUNK_THRESHOLD, KV_CHUNK, _quant_kv, attend
+from repro.serving import GenerationRequest, SpecEngine
 
 from benchmarks.common import LatencyModel, get_trained, run_engine, save_json
 
 CONTEXTS = [2048, 8192, 32768]
 GAMMA = 5
+
+# mixed-length serving workload (tokens incl. budget): a long-tail mix —
+# mostly chat-sized requests, one 8k and one near-32k outlier, the shape
+# that makes worst-case contiguous slot sizing pay 32k rows for everyone
+MIXED_DEMANDS = [224, 480, 1310, 2100, 310, 640, 8200, 31900]
 
 
 def _measured_L(quick: bool):
@@ -79,6 +92,58 @@ def _time_attend(S: int, kv: str, *, iters: int = 8):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _paged_rows(quick: bool):
+    """Paged-vs-contiguous KV footprint + throughput at mixed lengths."""
+    # -- modeled at paper scale: 8 concurrent requests, 32k-capable group
+    cfg = get_config("quasar-paper-7b")
+    max_len = 32768
+    out = {"workload_tokens": MIXED_DEMANDS}
+    for kv in ("bf16", "int8"):
+        cont = kv_cache_capacity_bytes(cfg, MIXED_DEMANDS, max_len, kv,
+                                       layout="contiguous")
+        paged = kv_cache_capacity_bytes(cfg, MIXED_DEMANDS, max_len, kv,
+                                        layout="paged")
+        out[f"modeled_{kv}"] = {
+            "contiguous_gbytes": round(cont / 1e9, 3),
+            "paged_gbytes": round(paged / 1e9, 3),
+            "paged_vs_contiguous": round(paged / cont, 4),
+        }
+
+    # -- measured on the CPU stand-in: same scheduler run, both layouts
+    model, params, _ = get_trained("qwen3-sub")
+    rng = np.random.default_rng(5)
+    pat = rng.integers(0, model.cfg.vocab_size, 8)
+    # heterogeneous prompts/budgets: one long request pins the group buf
+    spec = [(24, 8), (4, 6), (6, 10), (3, 4), (5, 8), (2, 5)] if not quick \
+        else [(24, 8), (4, 6), (3, 4)]
+    reqs = [GenerationRequest(np.tile(pat, k), max_new_tokens=n, seed=i)
+            for i, (k, n) in enumerate(spec)]
+    scfg = SpecConfig(gamma=GAMMA, temperature=0.0)
+    measured = {}
+    tokens = {}
+    for layout in ("contiguous", "paged"):
+        sc = dataclasses.replace(scfg, kv_layout=layout, kv_block_size=32)
+        eng = SpecEngine(model, sc, drafter="ngram", verifier="bf16")
+        eng.generate_requests(params, reqs, batch_slots=3)    # compile
+        t0 = time.perf_counter()
+        res = eng.generate_requests(params, reqs, batch_slots=3)
+        wall = time.perf_counter() - t0
+        tokens[layout] = [r.tokens.tolist() for r in res]
+        new_tokens = sum(r.new_tokens for r in res)
+        # the cache bytes the engine ACTUALLY allocated for this group
+        # (engine.group_stats — no re-derived sizing that could drift)
+        measured[layout] = {
+            "cache_bytes": sum(g["cache_bytes"] for g in eng.group_stats),
+            "cpu_tok_s": round(new_tokens / max(wall, 1e-9), 1),
+        }
+    measured["paged_vs_contiguous_bytes"] = round(
+        measured["paged"]["cache_bytes"]
+        / measured["contiguous"]["cache_bytes"], 4)
+    measured["tokens_bit_identical"] = tokens["paged"] == tokens["contiguous"]
+    out["measured_cpu"] = measured
+    return out
+
+
 def rows(quick: bool = False):
     cfg = get_config("quasar-paper-7b")
     contexts = CONTEXTS[:1] + CONTEXTS[-1:] if quick else CONTEXTS
@@ -118,7 +183,7 @@ def rows(quick: bool = False):
                 for S in (s_aligned, s_odd) for kv in ("bf16", "int8")]
 
     out = {"modeled": modeled, "acceptance": acceptance,
-           "cpu_step": cpu_step}
+           "cpu_step": cpu_step, "paged": _paged_rows(quick)}
     save_json("ablation_kv.json", out)
     return out
 
@@ -127,8 +192,12 @@ def main():
     out = rows()
     for section, rs in out.items():
         print(f"-- {section}")
-        for r in rs:
-            print(r)
+        if isinstance(rs, dict):
+            for k, v in rs.items():
+                print(f"{k}: {v}")
+        else:
+            for r in rs:
+                print(r)
 
 
 if __name__ == "__main__":

@@ -118,6 +118,13 @@ def main() -> None:
                   f"{m_int8['kv_bytes_vs_bf16']:.3f};"
                   f"L_delta={d_int8['L_delta_vs_bf16']:+.3f};"
                   f"speedup={m_int8['modeled_speedup']:.2f}x"))
+    pg = akv["paged"]
+    lines.append(("paged_kv", step_us,
+                  f"footprint_vs_contig="
+                  f"{pg['modeled_bf16']['paged_vs_contiguous']:.3f};"
+                  f"measured_bytes_ratio="
+                  f"{pg['measured_cpu']['paged_vs_contiguous_bytes']:.3f};"
+                  f"lossless={pg['measured_cpu']['tokens_bit_identical']}"))
 
     rr = roofline_report.rows(quick=args.quick)
     lines.append(("roofline", step_us,

@@ -1,6 +1,13 @@
 """The paper's primary contribution: quantized self-speculative decoding."""
 from repro.core import prng  # noqa: F401
 from repro.core.config import ModelConfig, QuantConfig, SpecConfig  # noqa: F401
+from repro.core.paged_cache import (  # noqa: F401
+    BlockPool,
+    blocks_for_tokens,
+    gather_block_rows,
+    init_paged_cache,
+    request_demand_tokens,
+)
 from repro.core.drafting import draft_tokens, draft_tree_tokens  # noqa: F401
 from repro.core.tree import TreeTemplate  # noqa: F401
 from repro.core.verification import (  # noqa: F401

@@ -252,3 +252,21 @@ class SpecConfig:
     # the degenerate (1,)*gamma chain template.  E.g. (3, 2, 1, 1) = 3
     # root continuations, each forked once at depth 2, chains below.
     tree_branches: Optional[Tuple[int, ...]] = None
+    # KV-cache layout on the continuous-batching serving path
+    # (``SpecEngine.generate_requests``):
+    #   "contiguous" — one max-length K/V row per scheduler slot (the
+    #                  default; also the only layout for solo ``generate``);
+    #   "paged"      — block-granular pools + per-slot block tables
+    #                  (``repro.core.paged_cache``): admission reserves a
+    #                  request's worst-case block demand instead of a
+    #                  max-length row, blocks are appended as the row
+    #                  commits and released at harvest.  Bit-identical to
+    #                  contiguous per drafter × verifier (asserted in
+    #                  tests/test_paged_cache.py).  Attention-family
+    #                  (dense/moe, full-causal) archs only.
+    kv_layout: str = "contiguous"
+    kv_block_size: int = 128            # tokens per paged block
+    # physical pool size in blocks (incl. the scratch block); None ⇒ the
+    # engine sizes it to the batch-slot count's worst-case demand, which
+    # makes paged admission never stricter than contiguous admission
+    kv_pool_blocks: Optional[int] = None

@@ -1,0 +1,347 @@
+"""Paged (block-granular) KV cache: the scheduler's serving-path layout.
+
+The contiguous cache layout allocates one ``(S_max, Hkv, dh)`` K/V row
+per scheduler slot, so a 32k-capable serving group pays 32k rows of HBM
+for every 200-token request and ``batch_slots`` is pinned to worst-case
+memory.  The paged layout (vLLM-style, cf. S3D / Zhong & Bharadwaj 2024)
+breaks that coupling:
+
+* one **physical pool** per attention layer — ``(num_blocks, block_size,
+  Hkv, dh)`` K and V buffers shared by every slot (int8 KV adds the
+  per-(token, head) scale pools, same block granularity);
+* one **block table** — ``(batch_slots, max_blocks)`` int32 mapping each
+  slot's *logical* block ``s // block_size`` to a physical block id.
+  Entry 0 is the reserved **scratch block**: unallocated table entries
+  point at it, so out-of-range writes land harmlessly in a block no
+  request owns and out-of-range reads return junk that position masking
+  discards (exactly like the unwritten tail of a contiguous row);
+* a host-side :class:`BlockPool` free-list allocator driving the
+  admission → append → release lifecycle:
+
+  - **admission** *reserves* the request's worst-case block demand
+    (:func:`request_demand_tokens`) — the scheduler admits only when the
+    reservation fits, which is what makes ``batch_slots`` a throughput
+    knob instead of a memory bound — and *allocates* the prompt's
+    blocks, scattering the single-row contiguous prefill into them;
+  - **append-on-commit**: as a row's committed length grows, the engine
+    tops up its blocks between decode steps (host-side ``.at[].set`` on
+    the block table — the jitted step never retraces);
+  - **release-on-harvest** returns every block (and the reservation) to
+    the free list.
+
+Correctness story: the decode step only ever *reads* logical slots that
+are either committed content or freshly written by the current verify
+window, so block-granular allocation (and the junk in just-appended or
+scratch blocks) is invisible to the logits — paged serving is asserted
+**bit-identical** to contiguous serving per drafter × verifier in
+``tests/test_paged_cache.py``, the same losslessness bar PRs 2-4 set
+for scheduling, trees and kernel dispatch.
+
+Device-side layout helpers (:func:`gather_block_rows`,
+:func:`physical_slots`) are shared by the jnp read/write path in
+``models/attention.py``, the Pallas ``flash_decode_paged`` kernel's
+oracle, and the reconstruction property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_BLOCK_SIZE = 128    # tokens per block; 128 keeps pools lane-aligned
+SCRATCH_BLOCK = 0           # physical block 0: never allocated, absorbs
+#                             writes from idle rows / unallocated slots
+
+
+def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` cache rows (ceil division)."""
+    return -(-int(n_tokens) // int(block_size))
+
+
+def request_demand_tokens(prompt_len: int, max_new_tokens: int,
+                          gamma: int) -> int:
+    """Worst-case cache rows one request ever writes.
+
+    The last verify window starts at ``length - 1`` with ``length`` at
+    most ``prompt_len + max_new_tokens`` and spans ``gamma + 1`` slots,
+    so the highest written row is ``P + max_new + gamma - 1``; +1 slack
+    mirrors the contiguous buffer sizing.
+    """
+    return int(prompt_len) + int(max_new_tokens) + int(gamma) + 1
+
+
+class BlockPool:
+    """Host-side free-list allocator for the physical block pool.
+
+    Tracks three disjoint quantities over ``num_blocks - 1`` allocatable
+    blocks (block 0 is scratch):
+
+    * **free** — on the free list, owned by nobody;
+    * **allocated** — owned by exactly one request id;
+    * **reserved** — admission-time worst-case demand per request;
+      ``alloc`` may only draw up to the reservation, which guarantees
+      mid-flight appends never fail once a request is admitted.
+
+    Invariants (asserted by the property tests in
+    ``tests/test_paged_cache.py``):
+
+    * a block id is owned by at most one request (no double-allocation);
+    * ``free + sum(allocated) == num_blocks - 1`` at all times (no leak);
+    * ``sum(reserved) <= num_blocks - 1`` (admission control is sound).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int = DEFAULT_BLOCK_SIZE):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (1 scratch + 1 usable), "
+                             f"got {num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        # LIFO free list: recently released blocks are re-used first
+        self._free: List[int] = list(range(self.num_blocks - 1, 0, -1))
+        self._owned: Dict[int, List[int]] = {}      # rid -> block ids
+        self._reserved: Dict[int, int] = {}         # rid -> total blocks
+
+    # -- capacity ------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (excludes the scratch block)."""
+        return self.num_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def reserved_blocks(self) -> int:
+        return sum(self._reserved.values())
+
+    @property
+    def allocated_blocks(self) -> int:
+        return sum(len(b) for b in self._owned.values())
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return blocks_for_tokens(n_tokens, self.block_size)
+
+    # -- lifecycle -----------------------------------------------------
+    def can_reserve(self, n_blocks: int) -> bool:
+        """Admission check: does a further ``n_blocks`` reservation fit?"""
+        return self.reserved_blocks + int(n_blocks) <= self.capacity
+
+    def reserve(self, rid: int, n_blocks: int) -> None:
+        """Reserve worst-case demand for request ``rid`` at admission."""
+        if rid in self._reserved:
+            raise ValueError(f"request {rid} already reserved")
+        if not self.can_reserve(n_blocks):
+            raise ValueError(
+                f"pool over-committed: reserve({n_blocks}) with "
+                f"{self.capacity - self.reserved_blocks} unreserved")
+        self._reserved[rid] = int(n_blocks)
+        self._owned.setdefault(rid, [])
+
+    def owned(self, rid: int) -> List[int]:
+        return list(self._owned.get(rid, []))
+
+    def alloc(self, rid: int, n_blocks: int) -> List[int]:
+        """Draw ``n_blocks`` from the free list for ``rid`` (<= its
+        reservation; admission control makes this infallible)."""
+        if rid not in self._reserved:
+            raise ValueError(f"request {rid} has no reservation")
+        have = len(self._owned[rid])
+        if have + n_blocks > self._reserved[rid]:
+            raise ValueError(
+                f"request {rid} alloc beyond reservation: "
+                f"{have}+{n_blocks} > {self._reserved[rid]}")
+        if n_blocks > len(self._free):
+            raise RuntimeError(      # unreachable if reservations are honoured
+                f"free list exhausted: want {n_blocks}, have "
+                f"{len(self._free)} (reservation accounting broken)")
+        ids = [self._free.pop() for _ in range(int(n_blocks))]
+        self._owned[rid].extend(ids)
+        return ids
+
+    def release(self, rid: int) -> List[int]:
+        """Free every block owned by ``rid`` and drop its reservation."""
+        ids = self._owned.pop(rid, [])
+        self._reserved.pop(rid, None)
+        self._free.extend(reversed(ids))
+        return ids
+
+    def check_invariants(self) -> None:
+        """Raise if conservation or exclusivity is violated."""
+        owned_all = [b for ids in self._owned.values() for b in ids]
+        assert len(owned_all) == len(set(owned_all)), "block double-allocated"
+        assert SCRATCH_BLOCK not in owned_all, "scratch block allocated"
+        assert SCRATCH_BLOCK not in self._free, "scratch block on free list"
+        assert len(self._free) + len(owned_all) == self.capacity, (
+            f"pool not conserved: {len(self._free)} free + "
+            f"{len(owned_all)} owned != {self.capacity}")
+        assert self.reserved_blocks <= self.capacity
+        for rid, ids in self._owned.items():
+            assert len(ids) <= self._reserved.get(rid, 0), (
+                f"request {rid} owns beyond reservation")
+
+
+# ---------------------------------------------------------------------------
+# Device-side layout helpers
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg, batch_slots: int, max_blocks: int,
+                     num_blocks: int, block_size: int = DEFAULT_BLOCK_SIZE,
+                     num_layers: Optional[int] = None) -> dict:
+    """Allocate the paged serving-cache pytree.
+
+    Returns ``{"layers": [per-layer pools], "bt": (B, max_blocks) int32}``
+    where each layer pool is ``{"k", "v": (num_blocks, block_size, Hkv,
+    dh)}`` (+ ``k_scale``/``v_scale`` ``(num_blocks, block_size, Hkv)``
+    f32 when ``cfg.kv_cache_dtype == "int8"``).  The block table starts
+    all-scratch (0).  Attention-family (dense/moe) decoder stacks only —
+    the engine gates other families off before building one.
+    """
+    int8 = getattr(cfg, "kv_cache_dtype", "bf16") == "int8"
+    dt = jnp.int8 if int8 else cfg.dtype
+    n_layers = num_layers or cfg.num_layers
+    layers = []
+    for _ in range(n_layers):
+        pool = {
+            "k": jnp.zeros((num_blocks, block_size, cfg.num_kv_heads,
+                            cfg.head_dim), dt),
+            "v": jnp.zeros((num_blocks, block_size, cfg.num_kv_heads,
+                            cfg.head_dim), dt),
+        }
+        if int8:
+            pool["k_scale"] = jnp.zeros(
+                (num_blocks, block_size, cfg.num_kv_heads), jnp.float32)
+            pool["v_scale"] = jnp.zeros(
+                (num_blocks, block_size, cfg.num_kv_heads), jnp.float32)
+        layers.append(pool)
+    return {
+        "layers": layers,
+        "bt": jnp.zeros((batch_slots, max_blocks), jnp.int32),
+    }
+
+
+def physical_slots(bt: jnp.ndarray, slots: jnp.ndarray,
+                   block_size: int) -> jnp.ndarray:
+    """Map logical cache slots to physical pool rows.
+
+    ``bt`` is ``(B, max_blocks)`` int32, ``slots`` is ``(B, T)`` logical
+    slot indices; returns ``(B, T)`` int32 rows into the pool viewed as
+    ``(num_blocks * block_size, ...)``.  Out-of-range logical blocks
+    clip onto the scratch block's final row — junk that position masking
+    already discards.
+    """
+    nb = bt.shape[1]
+    blk_idx = jnp.clip(slots // block_size, 0, nb - 1)
+    blk = jnp.take_along_axis(bt, blk_idx, axis=1)
+    in_range = (slots // block_size) < nb
+    blk = jnp.where(in_range, blk, SCRATCH_BLOCK)
+    return blk * block_size + slots % block_size
+
+
+def gather_block_rows(pool_buf: jnp.ndarray, bt: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct the logical contiguous view of one pool buffer.
+
+    ``pool_buf`` is ``(num_blocks, block_size, ...)``; returns
+    ``(B, max_blocks * block_size, ...)`` where logical slot ``s`` of
+    row ``b`` holds ``pool_buf[bt[b, s // bs], s % bs]``.  This is the
+    jnp read path's gather and the oracle for the paged Pallas kernel.
+    """
+    B, nb = bt.shape
+    bs = pool_buf.shape[1]
+    g = jnp.take(pool_buf, bt.reshape(-1), axis=0)          # (B*nb, bs, ...)
+    return g.reshape((B, nb * bs) + pool_buf.shape[2:])
+
+
+def scatter_prefill_rows(pool: dict, block_ids: Sequence[int],
+                         row_cache: dict, block_size: int) -> dict:
+    """Scatter a single-row *contiguous* prefill cache into pool blocks.
+
+    ``row_cache`` leaves are ``(1, S_row, ...)``; the first
+    ``len(block_ids) * block_size`` rows (zero-padded if the contiguous
+    row is shorter) land in the listed physical blocks.  Writing the
+    fresh-init-plus-prefill content into *every* allocated block is what
+    keeps admission retrace-free and slot-recycling leak-free, exactly
+    like the contiguous ``prefill_into_slot`` row reset.
+    """
+    n = len(block_ids)
+    if n == 0:
+        return pool
+    idx = jnp.asarray(np.asarray(block_ids, np.int32))
+    new = dict(pool)
+    for name, buf in pool.items():
+        row = row_cache[name][0]                             # (S_row, ...)
+        need = n * block_size
+        if row.shape[0] < need:
+            pad = [(0, need - row.shape[0])] + [(0, 0)] * (row.ndim - 1)
+            row = jnp.pad(row, pad)
+        vals = row[:need].reshape((n, block_size) + row.shape[1:])
+        new[name] = buf.at[idx].set(vals.astype(buf.dtype))
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Modeled footprint (used by launch/roofline.py and benchmarks/ablation_kv.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedPlan:
+    """Static sizing decisions for one paged serving group."""
+
+    block_size: int
+    max_blocks: int          # block-table width (= ceil(buf / block_size))
+    num_blocks: int          # physical pool size, incl. the scratch block
+    slots: int               # decode rows (dynamic batch_slots)
+    demands: tuple           # per-request block demand, request order
+
+
+def plan_group(prompt_lens: Sequence[int], budgets: Sequence[int],
+               gamma: int, buf: int, *, block_size: int,
+               pool_blocks: Optional[int] = None,
+               batch_slots: Optional[int] = None,
+               default_slots: int = 8, max_slots: int = 64) -> PagedPlan:
+    """Size the pool and pick the slot count for one serving group.
+
+    * per-request demand = worst-case rows / ``block_size`` (ceil);
+    * ``pool_blocks`` defaults to scratch + the ``min(len, default_slots)``
+      *largest* demands — capacity comparable to the contiguous layout's
+      default slot count, so paged never regresses admission;
+    * ``slots`` (when not forced via ``batch_slots``) is **occupancy-
+      derived**: the largest number of queued requests whose demands
+      can actually be co-reserved (greedy, cheapest-first) — short-
+      request mixes get more concurrent rows out of the same HBM than
+      the contiguous layout's fixed worst-case sizing (the ROADMAP's
+      admission-aware slot sizing), capped at ``max_slots``, and never
+      inflated by rows the admission control could never co-house.
+    """
+    demands = tuple(
+        blocks_for_tokens(request_demand_tokens(p, b, gamma), block_size)
+        for p, b in zip(prompt_lens, budgets))
+    n = len(demands)
+    if pool_blocks is None:
+        cap = default_slots if batch_slots is None else batch_slots
+        top = sorted(demands, reverse=True)[: min(n, cap)]
+        pool_blocks = 1 + sum(top)
+    if max(demands) > pool_blocks - 1:
+        raise ValueError(
+            f"request demand {max(demands)} blocks exceeds pool capacity "
+            f"{pool_blocks - 1}; raise kv_pool_blocks or shrink the request")
+    if batch_slots is not None:
+        slots = min(n, batch_slots)
+    else:
+        # greedy cheapest-first fill: how many queued requests could the
+        # pool co-reserve at once?  (an upper bound on live rows — using
+        # min-demand alone would allocate decode rows that admission
+        # control can never co-house)
+        fit, room = 0, pool_blocks - 1
+        for d in sorted(demands):
+            if d > room:
+                break
+            fit, room = fit + 1, room - d
+        slots = min(n, max_slots, max(1, fit))
+    return PagedPlan(block_size=block_size,
+                     max_blocks=blocks_for_tokens(buf, block_size),
+                     num_blocks=pool_blocks, slots=slots, demands=demands)

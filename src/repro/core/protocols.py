@@ -119,33 +119,88 @@ class Drafter:
     # -- lifecycle ------------------------------------------------------
     def init_state(self, model, params, prompts, buf_len: int, *,
                    aux_embeds=None, draft_params=None) -> Any:
-        """Per-generation drafter state pytree (outside jit)."""
+        """Build the per-generation drafter-state pytree (outside jit,
+        once per generation).
+
+        Args:
+          prompts      ``(B, P)`` int32 — the *unpadded* prompts;
+          buf_len      token-buffer length (draft-side caches size to it);
+          aux_embeds   ``(B, Sa, D)`` modality embeddings or ``None``;
+          draft_params separate draft-model weights or ``None``.
+
+        Returns: an opaque pytree stored in the engine state's
+        ``drafter_state`` slot (``{}`` for stateless drafters; a pruned-
+        model KV cache for ``pruned``).  May run forward passes (e.g. a
+        draft-cache prefill).
+        """
         return {}
 
     def propose(self, model, params, tokens, length, dstate, key):
-        """(B,S) buffer + (B,) lengths → (DraftProposal, dstate, key)."""
+        """Draft ``gamma`` tokens per row (traced inside jit, every step).
+
+        Args:
+          tokens  ``(B, S_buf)`` int32 — committed token buffer;
+          length  ``(B,)`` int32       — committed counts per row;
+          dstate  the drafter-state pytree;
+          key     PRNGKey ``(2,)`` or per-row ``(B, 2)`` streams
+                  (dispatch with ``repro.core.prng``; return unchanged
+                  if unused).
+
+        Returns ``(DraftProposal, dstate, key)``.  ``proposal.tokens``
+        must be ``(B, gamma)`` int32 with ``gamma`` static;
+        ``proposal.probs`` is ``None`` (deterministic ⇒ one-hot q in
+        Eq. 2) or ``(B, gamma, V)`` f32.  Tree drafters also attach the
+        template's ``parents (N,)`` / ``tree_mask (N, N)`` constants.
+        """
         raise NotImplementedError
 
     def advance(self, model, dstate, proposal: DraftProposal, n_accept):
-        """Reconcile drafter state with the accepted prefix (inside jit)."""
+        """Reconcile drafter state with the accepted prefix (traced,
+        after verification).
+
+        Args:
+          proposal  the step's :class:`DraftProposal`;
+          n_accept  ``(B,)`` int32 — accepted draft tokens per row.
+
+        Returns the updated drafter-state pytree (default: identity —
+        correct for stateless drafters).
+        """
         return dstate
 
     # -- continuous batching (slot-level lifecycle, outside jit) --------
     def alloc_state(self, model, params, batch: int, buf_len: int, *,
                     draft_params=None) -> Any:
-        """Allocate an empty ``batch``-row drafter-state pytree for a
-        scheduler loop; rows are filled by :meth:`prefill_row` on
-        admission.  Default: ``{}`` (stateless drafters)."""
+        """Allocate an **empty** ``batch``-row drafter-state pytree for a
+        scheduler loop (outside jit, once per serving group); rows are
+        filled by :meth:`prefill_row` on admission.
+
+        Every leaf must be batch-leading so per-row scatters work.
+        Returns ``{}`` by default (stateless drafters); stateful
+        drafters allocate zeroed buffers (never prefilled — recycled
+        rows must not inherit anything).
+        """
         return {}
 
     def prefill_row(self, model, params, dstate, row: int, prompt,
                     buf_len: int, *, aux_embeds=None, draft_params=None):
-        """Reset slot ``row`` of ``dstate`` for a newly admitted request.
+        """Reset slot ``row`` of ``dstate`` for a newly admitted request
+        (outside jit, once per admission).
 
-        ``prompt`` is ``(1, P)``.  The default builds a fresh single-row
-        state via :meth:`init_state` and scatters it into the batch
-        pytree, so the recycled slot cannot leak draft-side state from
-        its previous occupant.  Stateless drafters are a no-op.
+        Args:
+          dstate   the live batch drafter-state pytree;
+          row      the slot index being recycled;
+          prompt   ``(1, P)`` int32 — the **unpadded** prompt (draft-side
+                   caches may have never-rewritten slots where pad junk
+                   would be live state; solo runs have zeros there, and
+                   bit-identity demands admitted rows do too);
+          buf_len  the group's token-buffer length.
+
+        Returns ``dstate`` with slot ``row`` reset.  The default builds
+        a fresh single-row state via :meth:`init_state` and scatters it
+        into the batch pytree (``.at[row].set`` per leaf — shape-stable,
+        so the jitted decode step never retraces), guaranteeing a
+        recycled slot leaks nothing from its previous occupant.
+        Stateless drafters are a no-op.
         """
         fresh = self.init_state(model, params, prompt, buf_len,
                                 aux_embeds=aux_embeds,
@@ -167,22 +222,61 @@ class Verifier:
         return cls()
 
     def prepare(self, model, params, act_stats=None):
-        """Offline weight preparation (identity for BF16).  Idempotent."""
+        """Offline weight preparation (outside jit, once per weight set).
+
+        Args:
+          params     the BF16 parameter pytree;
+          act_stats  SmoothQuant calibration statistics or ``None``
+                     (quantizing verifiers fall back to weight-only
+                     smoothing).
+
+        Returns the params the jitted step will stream — identity for
+        BF16, SmoothQuant + INT8 for ``w8a8``, packed int4 for ``w4a8``.
+        **Must be idempotent** (prepared params pass through unchanged).
+        """
         return params
 
     def verify(self, logits, proposal: DraftProposal, temperature: float,
                key) -> VerifyResult:
+        """Lossless accept/reject over a chain window (traced).
+
+        Args:
+          logits       ``(B, gamma+1, V)`` f32 — the target model's
+                       logits over ``[last_committed, draft_1..gamma]``;
+          proposal     the drafter's :class:`DraftProposal`;
+          temperature  sampling temperature (0 ⇒ greedy exact-match);
+          key          PRNGKey ``(2,)`` or per-row ``(B, 2)`` streams.
+
+        Returns a ``VerifyResult`` with ``n_accept (B,)`` accepted draft
+        tokens, the corrective/bonus ``next_token (B,)`` (sampled from
+        the Eq. 3 residual on rejection) and ``n_commit = n_accept + 1``.
+        The base rule covers deterministic (``probs=None`` ⇒ one-hot q)
+        and stochastic drafters (full Eq. 2 ratio); override only for
+        different acceptance semantics (e.g. typical acceptance).
+        """
         return verify(logits, proposal.tokens, temperature, key,
                       draft_probs=proposal.probs)
 
     def verify_tree(self, logits, proposal: DraftProposal, template,
                     temperature: float, key) -> TreeVerifyResult:
         """Tree-scoring override: lossless rejection sampling *down* the
-        token tree (SpecInfer-style sibling round-robin with residual
-        updates), committing the longest accepted root-to-leaf path.
-        Every registered verifier inherits this, so tree drafting
-        composes with any weight preparation (BF16 / W8A8 / W4A8) —
-        the paper's orthogonality claim extended to tree topology.
+        token tree (SpecInfer-style sibling round-robin with Eq. 3
+        residual updates), committing the longest accepted root-to-leaf
+        path (traced).
+
+        Args:
+          logits    ``(B, N, V)`` f32 over the packed N-node window;
+          proposal  tree proposal (``tokens (B, N-1)`` in packed BFS
+                    order, plus the template constants);
+          template  the drafter's :class:`~repro.core.tree.TreeTemplate`.
+
+        Returns a ``TreeVerifyResult``: ``n_accept (B,)`` accepted
+        *depth*, ``path_nodes (B, depth+1)`` the committed node ids,
+        ``path_tokens`` the accepted tokens in chain order, and the
+        corrective ``next_token (B,)``.  Every registered verifier
+        inherits this, so tree drafting composes with any weight
+        preparation (BF16 / W8A8 / W4A8) — the paper's orthogonality
+        claim extended to tree topology.
         """
         return verify_tree(logits, proposal.tokens, template, temperature,
                            key, draft_probs=proposal.probs)

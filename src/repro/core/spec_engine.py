@@ -24,7 +24,13 @@ the production mesh).  Engine state is a pytree dict:
                                     exceeds it — early-exit for finished
                                     requests in a heterogeneous batch)
   cache          pytree             verifier KV/SSM cache (covers
-                                    [0, length-1))
+                                    [0, length-1)); contiguous per-row
+                                    buffers by default, or block-pool
+                                    paged (``repro.core.paged_cache``:
+                                    per-layer pools + a ``"bt"`` block
+                                    table) on the paged serving path —
+                                    the step body is layout-agnostic,
+                                    attention dispatches on ``"bt"``
   drafter_state  pytree             opaque drafter-owned state ({} for
                                     stateless drafters, a pruned-model KV
                                     cache for ``pruned``, …)
@@ -50,14 +56,24 @@ from repro.core import prng
 
 def init_state(model, batch: int, buf_len: int, key,
                num_layers: Optional[int] = None,
-               drafter_state=None, target=None, scan: bool = False) -> dict:
+               drafter_state=None, target=None, scan: bool = False,
+               cache=None) -> dict:
     """Canonical engine-state pytree — the single source of truth for the
     decode-step schema (``launch/shapes.py`` eval_shapes this for the
-    production mesh specs)."""
+    production mesh specs).
+
+    ``cache`` overrides the default contiguous allocation — the paged
+    serving path passes a block-pool cache
+    (``repro.core.paged_cache.init_paged_cache``: per-layer physical
+    pools + a ``"bt"`` block table) so the worst-case contiguous buffers
+    are never materialised.  Every other slot keeps the same schema
+    either way.
+    """
     state = {
         "tokens": jnp.zeros((batch, buf_len), jnp.int32),
         "length": jnp.zeros((batch,), jnp.int32),
-        "cache": model.init_cache(batch, buf_len, num_layers, scan=scan),
+        "cache": cache if cache is not None
+        else model.init_cache(batch, buf_len, num_layers, scan=scan),
         "drafter_state": drafter_state if drafter_state is not None else {},
         "key": key,
         "stats": {

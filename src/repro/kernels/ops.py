@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode import flash_decode, flash_decode_paged
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.smooth_quant import smooth_quant
 
@@ -80,6 +80,46 @@ def flash_attend(
     return attend(q, k, v, qpos, jnp.arange(k.shape[1], dtype=jnp.int32),
                   k_scale=k_scale, v_scale=v_scale,
                   tree_mask=tree_mask, win_start=win_start, impl="jnp")
+
+
+def flash_attend_paged(
+    q: jax.Array,        # (B, T, Hq, dh) decode/verify query window
+    k: jax.Array,        # (N, bs, Hkv, dh) physical K block pool
+    v: jax.Array,        # (N, bs, Hkv, dh) physical V block pool
+    bt: jax.Array,       # (B, nb) int32 block table (logical → physical)
+    qpos: jax.Array,     # (B, T) int32 absolute query positions
+    *,
+    k_scale: jax.Array | None = None,     # (N, bs, Hkv) int8-KV scales
+    v_scale: jax.Array | None = None,
+    tree_mask: jax.Array | None = None,   # (T, T) ancestor-or-self mask
+    win_start: jax.Array | None = None,   # (B,) first window slot
+    force: bool = False,
+) -> jax.Array:
+    """Verification attention over a **paged** cache (block-table
+    addressed; see ``repro.core.paged_cache``).
+
+    Same dispatch policy as :func:`flash_attend`: TPU runs the Pallas
+    ``flash_decode_paged`` kernel compiled (blocks stream from their
+    pool homes via scalar-prefetched table lookups — no gather
+    materialisation); ``REPRO_USE_PALLAS=1`` / ``force=True`` runs it in
+    interpret mode; the CPU default gathers the logical view and runs
+    the numerically identical jnp ``attend``.
+    """
+    if _on_tpu() or _FORCE_PALLAS or force:
+        return flash_decode_paged(q, k, v, bt, qpos,
+                                  k_scale=k_scale, v_scale=v_scale,
+                                  tree_mask=tree_mask, win_start=win_start,
+                                  interpret=not _on_tpu())
+    from repro.models.attention import attend_paged  # lazy: avoids cycle
+
+    # forced jnp: attend_paged's gather-the-logical-view oracle — the
+    # single implementation of the paged fallback (no second copy that
+    # could drift from the bit-equality guarantee)
+    cache = {"k": k, "v": v}
+    if k_scale is not None:
+        cache["k_scale"], cache["v_scale"] = k_scale, v_scale
+    return attend_paged(q, cache, bt, qpos, tree_mask=tree_mask,
+                        win_start=win_start, impl="jnp")
 
 
 def w8a8_matmul(

@@ -39,6 +39,7 @@ from repro.launch import shapes as shp
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (
     analyze,
+    kv_cache_capacity_bytes,
     kv_cache_read_bytes,
     model_flops_decode,
     model_flops_train,
@@ -172,6 +173,7 @@ def lower_combo(arch: str, shape_name: str, mesh, verifier: str = "w8a8",
 
     mem = compiled.memory_analysis()
     kv_bytes = 0.0
+    kv_capacity = {}
     if kind == "decode":
         # cache-read roofline term: the verify window streams the whole
         # committed context's K/V rows (sliding-window caps it at R slots)
@@ -180,6 +182,17 @@ def lower_combo(arch: str, shape_name: str, mesh, verifier: str = "w8a8",
         if cfg.sliding_window:
             ctx = min(ctx, cfg.sliding_window)
         kv_bytes = kv_cache_read_bytes(cfg, s["global_batch"], ctx)
+        # footprint term: contiguous worst-case rows vs block-granular
+        # paged at the same context (the mixed-length win is swept in
+        # benchmarks/ablation_kv.py; here paged shows the block-rounding
+        # overhead is noise even at homogeneous full context)
+        demands = [ctx] * s["global_batch"]
+        kv_capacity = {
+            "kv_capacity_gbytes": round(kv_cache_capacity_bytes(
+                cfg, demands, ctx, layout="contiguous") / 1e9, 6),
+            "kv_capacity_paged_gbytes": round(kv_cache_capacity_bytes(
+                cfg, demands, ctx, layout="paged") / 1e9, 6),
+        }
     rf = analyze(lowered_loop, compiled, chips, n_groups, mflops,
                  kv_bytes=kv_bytes)
     row = {
@@ -196,6 +209,7 @@ def lower_combo(arch: str, shape_name: str, mesh, verifier: str = "w8a8",
         "out_bytes_per_dev": int(mem.output_size_in_bytes),
         **{k: (round(v, 6) if isinstance(v, float) else v)
            for k, v in rf.row().items()},
+        **kv_capacity,
         "coll_breakdown_gb": {k: round(v / 1e9, 3)
                               for k, v in rf.coll_breakdown.items()},
     }

@@ -117,13 +117,52 @@ def kv_cache_read_bytes(cfg, batch: int, context: int,
     32k context it exceeds).  ``int8`` halves the K/V payload and adds
     the per-(token, head) f32 ``k_scale``/``v_scale`` rows."""
     dt = kv_cache_dtype or getattr(cfg, "kv_cache_dtype", "bf16")
+    per_token = kv_bytes_per_token(cfg, dt)
+    return float(batch) * float(context) * attn_layer_count(cfg) * per_token
+
+
+def kv_bytes_per_token(cfg, kv_cache_dtype: str = None) -> float:
+    """HBM bytes one committed token's K+V rows occupy in **one** layer
+    (int8 halves the payload and adds the per-(token, head) f32 scales)."""
+    dt = kv_cache_dtype or getattr(cfg, "kv_cache_dtype", "bf16")
     if dt not in ("bf16", "int8"):
         raise ValueError(f"unmodeled kv cache dtype {dt!r}")
     elem = 1.0 if dt == "int8" else 2.0
     per_token = 2.0 * cfg.kv_dim * elem             # K + V rows, one layer
     if dt == "int8":
         per_token += 2.0 * cfg.num_kv_heads * 4.0   # k_scale + v_scale f32
-    return float(batch) * float(context) * attn_layer_count(cfg) * per_token
+    return per_token
+
+
+def kv_cache_capacity_bytes(cfg, request_tokens, max_len: int,
+                            kv_cache_dtype: str = None,
+                            layout: str = "contiguous",
+                            block_size: int = None) -> float:
+    """Modeled HBM *footprint* of the serving-group KV cache — the term
+    the paged layout shrinks (where :func:`kv_cache_read_bytes` is the
+    per-step *streaming* term int8 halves).
+
+    ``request_tokens`` is the per-request worst-case row count, one
+    entry per concurrently-resident request.  ``layout="contiguous"``
+    charges every slot the group's ``max_len`` buffer (worst-case
+    sizing: ``slots × max_len``); ``layout="paged"`` charges each
+    request its own demand rounded up to ``block_size`` plus one
+    scratch block and the int32 block tables — block-granular
+    fragmentation instead of max-length fragmentation.
+    """
+    from repro.core.paged_cache import DEFAULT_BLOCK_SIZE, blocks_for_tokens
+
+    per_token = kv_bytes_per_token(cfg, kv_cache_dtype)
+    layers = attn_layer_count(cfg)
+    n = len(request_tokens)
+    if layout == "contiguous":
+        return float(n) * float(max_len) * layers * per_token
+    if layout != "paged":
+        raise ValueError(f"unknown kv layout {layout!r}")
+    bs = DEFAULT_BLOCK_SIZE if block_size is None else block_size
+    blocks = sum(blocks_for_tokens(t, bs) for t in request_tokens) + 1
+    table = n * blocks_for_tokens(max_len, bs) * 4.0     # int32 entries
+    return float(blocks) * bs * layers * per_token + table
 
 
 @dataclasses.dataclass

@@ -16,6 +16,7 @@ alone serves quantized verification from a BF16 checkpoint.
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +37,15 @@ def main():
     ap.add_argument("--verifier", default="w8a8",
                     choices=list(available_verifiers()))
     ap.add_argument("--kv-cache", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="serving-path cache layout; 'paged' routes the "
+                         "batch through the continuous-batching scheduler "
+                         "with block-granular KV allocation "
+                         "(core/paged_cache.py); solo generate stays "
+                         "contiguous")
+    ap.add_argument("--kv-block-size", type=int, default=128,
+                    help="tokens per paged KV block (--kv-layout paged)")
     ap.add_argument("--attn-impl", default="auto",
                     choices=["auto", "jnp", "pallas"],
                     help="decode/verify attention path: auto = Pallas "
@@ -95,17 +105,37 @@ def main():
     scfg = SpecConfig(gamma=args.gamma if args.gamma is not None else 5,
                       temperature=args.temperature,
                       k_min=1, k_max=4, drafter=drafter,
-                      verifier=args.verifier, tree_branches=branches)
+                      verifier=args.verifier, tree_branches=branches,
+                      kv_layout=args.kv_layout,
+                      kv_block_size=args.kv_block_size)
     # the engine's verifier quantizes internally when scfg.verifier demands it
     engine = SpecEngine(model, scfg)
     prompts = jnp.asarray(task_prompts(
         args.task, args.batch, args.prompt_len, cfg.vocab_size))
-    r = engine.generate(params, prompts, args.new_tokens)
     from repro.kernels.ops import attn_backend
     attn_path = cfg.attn_impl if cfg.attn_impl != "auto" else attn_backend()
     print(f"arch={cfg.name} verifier={engine.verifier.name} "
           f"drafter={engine.drafter.name} kv_cache={cfg.kv_cache_dtype} "
-          f"attn={attn_path}")
+          f"kv_layout={args.kv_layout} attn={attn_path}")
+    if args.kv_layout == "paged":
+        # paged is a serving-path layout: route the batch through the
+        # continuous-batching scheduler as per-request generations
+        import numpy as np
+
+        from repro.serving import GenerationRequest
+        reqs = [GenerationRequest(np.asarray(p), args.new_tokens, seed=i)
+                for i, p in enumerate(np.asarray(prompts))]
+        t0 = time.perf_counter()
+        out = engine.generate_requests(params, reqs)
+        wall = time.perf_counter() - t0
+        new_tokens = sum(r.new_tokens for r in out)
+        L = sum(r.accept_len for r in out) / len(out)
+        steps = max(r.steps for r in out)
+        print(f"generated {new_tokens} tokens in {wall:.2f}s "
+              f"({new_tokens / max(wall, 1e-9):.1f} tok/s CPU)")
+        print(f"verify steps={steps}  mean acceptance length L={L:.3f}")
+        return
+    r = engine.generate(params, prompts, args.new_tokens)
     print(f"generated {r.new_tokens} tokens in {r.wall_s:.2f}s "
           f"({r.tokens_per_s:.1f} tok/s CPU)")
     print(f"verify steps={r.steps}  mean acceptance length L={r.mean_accept_len:.3f}")

@@ -20,6 +20,16 @@ Cache layouts (per layer):
   ``"kpos": (B, R)`` int32 buffer holding each slot's absolute position
   (init ``-2^30`` = invalid).  PAD > γ_max guarantees a speculative window
   never evicts keys that could still be needed after a partial rollback.
+  paged (serving path): physical block pools ``{"k","v":
+  (num_blocks, block_size, Hkv, dh)}`` shared by every batch row, plus a
+  ``(B, max_blocks)`` int32 block table mapping logical block
+  ``slot // block_size`` to its physical home (``repro.core.paged_cache``;
+  ``self_attention(block_tables=...)`` selects it).  Logical semantics are
+  identical to contiguous — reads gather (or kernel-stream) through the
+  table, so paged attention is bit-identical to contiguous attention.
+
+``kv_cache_dtype="int8"`` stores any layout's K/V int8 with
+per-(token, head) f32 scales folded into scores/probs exactly.
 """
 from __future__ import annotations
 
@@ -179,6 +189,45 @@ def _attend_chunked(q, k, v, valid, k_scale=None, v_scale=None):
     return o.astype(q.dtype)
 
 
+def attend_paged(q, cache, bt, qpos, *, tree_mask=None, win_start=None,
+                 impl=None):
+    """Position-masked attention over a **paged** cache layer.
+
+    ``cache`` holds per-layer physical pools ``k``/``v`` of shape
+    ``(num_blocks, block_size, Hkv, dh)`` (+ int8 ``k_scale``/``v_scale``
+    pools) and ``bt`` is the ``(B, max_blocks)`` block table (see
+    ``repro.core.paged_cache``).  Dispatch mirrors :func:`attend`: the
+    flash-eligible shape (causal decode/verify, optional tree window)
+    routes to the Pallas ``flash_decode_paged`` kernel, which streams
+    physical blocks via the block table without materialising the
+    logical view; the jnp path gathers the logical ``(B, S_log, ...)``
+    cache and runs the exact contiguous ``attend`` math — paged reads
+    are bit-identical to contiguous reads by construction.
+    """
+    mode = impl or "auto"
+    if mode not in ("auto", "jnp", "pallas"):
+        raise ValueError(f"unknown attn impl {mode!r}")
+    k_scale, v_scale = cache.get("k_scale"), cache.get("v_scale")
+    if mode != "jnp":
+        from repro.kernels import ops  # lazy: kernels must not pull models
+
+        if mode == "pallas" or ops.attn_backend() != "jnp":
+            return ops.flash_attend_paged(
+                q, cache["k"], cache["v"], bt, qpos,
+                k_scale=k_scale, v_scale=v_scale,
+                tree_mask=tree_mask, win_start=win_start,
+                force=mode == "pallas")
+    from repro.core.paged_cache import gather_block_rows
+
+    k = gather_block_rows(cache["k"], bt)
+    v = gather_block_rows(cache["v"], bt)
+    ks = gather_block_rows(k_scale, bt) if k_scale is not None else None
+    vs = gather_block_rows(v_scale, bt) if v_scale is not None else None
+    kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    return attend(q, k, v, qpos, kpos, k_scale=ks, v_scale=vs,
+                  tree_mask=tree_mask, win_start=win_start, impl="jnp")
+
+
 def _flash_eligible(kpos, window, causal, tree_mask) -> bool:
     """The Pallas flash-decode kernel covers exactly the cache-read
     decode/verify shape: causal attention over a contiguous cache whose
@@ -242,6 +291,41 @@ def _quant_kv(x):
     return q.astype(jnp.int8), scale
 
 
+def write_cache_paged(cache: dict, k, v, qpos, bt) -> dict:
+    """Scatter T new K/V rows into a *paged* layer pool through the block
+    table.
+
+    ``qpos`` are logical slots; ``repro.core.paged_cache.physical_slots``
+    maps them through ``bt`` onto rows of the pool viewed as
+    ``(num_blocks * block_size, Hkv, dh)``.  Live requests own disjoint
+    blocks, so cross-row scatters never collide; idle rows (and logical
+    slots past a row's allocation) land in the scratch block, whose
+    content is never validly read.
+    """
+    from repro.core.paged_cache import physical_slots
+
+    block_size = cache["k"].shape[1]
+    int8 = cache["k"].dtype == jnp.int8
+    if int8:
+        k, ks = _quant_kv(k)
+        v, vs = _quant_kv(v)
+    phys = physical_slots(bt, qpos, block_size).reshape(-1)      # (B*T,)
+    new = dict(cache)
+    for name, vals in (("k", k), ("v", v)):
+        buf = cache[name]
+        flat = buf.reshape((-1,) + buf.shape[2:])
+        flat = flat.at[phys].set(
+            vals.reshape((-1,) + vals.shape[2:]).astype(buf.dtype))
+        new[name] = flat.reshape(buf.shape)
+    if int8:
+        for name, vals in (("k_scale", ks), ("v_scale", vs)):
+            buf = cache[name]
+            flat = buf.reshape((-1,) + buf.shape[2:])
+            new[name] = flat.at[phys].set(
+                vals.reshape((-1,) + vals.shape[2:])).reshape(buf.shape)
+    return new
+
+
 def write_cache(cache: dict, k, v, qpos, window=None) -> dict:
     """Scatter T new K/V rows into the cache at per-row absolute positions."""
     B, T = qpos.shape
@@ -292,13 +376,19 @@ def self_attention(
     #                       qpos carries start + depth)
     tree_mask=None,       # (T, T) ancestor-or-self mask over the window
     win_start=None,       # (B,) first window slot (= start)
+    block_tables=None,    # (B, max_blocks) int32 — paged cache layout:
+    #                       ``cache`` holds physical pools, logical slots
+    #                       map through this table (core/paged_cache.py)
 ):
     """Returns (out (B,T,D), updated cache or None).
 
     ``read_cache=False`` (prefill): K/V are still written into the cache,
     but attention runs over the chunk's own keys — equivalent when the
     cache is empty, and it avoids scatter-ordering hazards when a long
-    prompt wraps a ring buffer multiple times.
+    prompt wraps a ring buffer multiple times.  ``block_tables`` switches
+    the cache write/read onto the paged layout (decode/verify only —
+    paged prefill is handled by admission-time scatter, see
+    ``SpecEngine.prefill_into_slot``).
     """
     B, T, _ = x.shape
     q = _lin(p["q"], x, collect, f"{path}/q").reshape(B, T, cfg.num_heads, cfg.head_dim)
@@ -309,9 +399,18 @@ def self_attention(
         k = apply_rope(k, qpos, cfg.rope_theta)
 
     if cache is not None:
-        cache = write_cache(cache, k, v,
-                            slots if slots is not None else qpos, window)
-    if cache is not None and read_cache:
+        if block_tables is not None:
+            cache = write_cache_paged(cache, k, v,
+                                      slots if slots is not None else qpos,
+                                      block_tables)
+        else:
+            cache = write_cache(cache, k, v,
+                                slots if slots is not None else qpos, window)
+    if cache is not None and read_cache and block_tables is not None:
+        o = attend_paged(q, cache, block_tables, qpos,
+                         tree_mask=tree_mask, win_start=win_start,
+                         impl=getattr(cfg, "attn_impl", None))
+    elif cache is not None and read_cache:
         keys, values = cache["k"], cache["v"]
         kpos = cache.get("kpos", jnp.arange(keys.shape[1], dtype=jnp.int32))
         o = attend(q, keys, values, qpos, kpos, window=window, causal=causal,

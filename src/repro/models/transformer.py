@@ -180,6 +180,7 @@ def _apply_block(
     slots=None,
     tree_mask=None,
     win_start=None,
+    block_tables=None,
 ):
     """One decoder block of any kind.  Returns (x, new_cache, aux)."""
     w = cfg.sliding_window
@@ -225,6 +226,7 @@ def _apply_block(
             cache=lcache, read_cache=read_cache, window=w,
             collect=collect, path=f"{path}/attn",
             slots=slots, tree_mask=tree_mask, win_start=win_start,
+            block_tables=block_tables,
         )
         x = x + h
         xn = apply_norm(cfg, blk["ffn_norm"], x)
@@ -269,6 +271,14 @@ def forward(
 ):
     """Returns (logits (B,T,V) or None, new_cache, aux_loss)."""
     B, T = tokens.shape
+    # paged serving cache: per-layer physical pools + a shared block table
+    # (repro.core.paged_cache).  Decode/verify only — paged prefill is an
+    # admission-time scatter, never a forward pass.
+    block_tables = cache.get("bt") if cache is not None else None
+    if block_tables is not None and not read_cache:
+        raise NotImplementedError(
+            "paged caches do not support forward-pass prefill; admission "
+            "prefills a contiguous row and scatters it into the pool")
     if tree_depths is not None:
         # token-tree verify window: positions follow node *depth* while
         # cache slots follow packed node order (start + arange)
@@ -305,6 +315,7 @@ def forward(
             read_cache=read_cache, collect_states=collect_states,
             enc_out=enc_out, collect=collect, path=f"{path}layers/{i}",
             slots=slots, tree_mask=tree_mask, win_start=win_start,
+            block_tables=block_tables,
         )
         aux_total = aux_total + aux
         new_layers.append(lcache)
@@ -335,6 +346,8 @@ def forward(
         new_cache = {"layers": new_layers}
         if "shared" in cache:
             new_cache["shared"] = new_shared
+        if block_tables is not None:
+            new_cache["bt"] = block_tables   # table is host-managed state
     return logits, new_cache, aux_total
 
 
@@ -375,6 +388,8 @@ def commit_cache(cfg, cache: dict, n_last: jax.Array, num_layers: Optional[int] 
     out = {"layers": layers}
     if "shared" in cache:
         out["shared"] = cache["shared"]
+    if "bt" in cache:
+        out["bt"] = cache["bt"]
     return out
 
 
@@ -412,6 +427,44 @@ def _compact_attn_rows(lcache: dict, start, path_nodes, n_accept) -> dict:
     return new
 
 
+def _compact_attn_rows_paged(lcache: dict, bt, start, path_nodes,
+                             n_accept) -> dict:
+    """Paged-layout tree commit: the same accepted-path row moves as
+    :func:`_compact_attn_rows`, with logical slots translated to pool
+    rows through the block table.  Live rows move rows only inside their
+    own blocks (``start + node <= start + gamma`` stays within the
+    request's reservation); idle rows compact inside the scratch block,
+    whose content is never validly read."""
+    from repro.core.paged_cache import physical_slots
+
+    B, D1 = path_nodes.shape
+    D = D1 - 1
+    if D == 0:
+        return lcache
+    block_size = lcache["k"].shape[1]
+    S = bt.shape[1] * block_size
+    depth = jnp.arange(1, D + 1, dtype=jnp.int32)[None, :]           # (1, D)
+    src = jnp.clip(start[:, None] + path_nodes[:, 1:], 0, S - 1)     # (B, D)
+    dst = jnp.clip(start[:, None] + depth, 0, S - 1)
+    keep = depth <= n_accept[:, None]                                # (B, D)
+    phys_src = physical_slots(bt, src, block_size)
+    phys_dst = physical_slots(bt, dst, block_size)
+    new = dict(lcache)
+    for name in ("k", "v", "k_scale", "v_scale"):
+        if name not in lcache:
+            continue
+        buf = lcache[name]
+        flat = buf.reshape((-1,) + buf.shape[2:])
+        moved = flat[phys_src]                                       # (B, D, ...)
+        stay = flat[phys_dst]
+        tail = (1,) * (moved.ndim - 2)
+        vals = jnp.where(keep.reshape(keep.shape + tail), moved, stay)
+        flat = flat.at[phys_dst.reshape(-1)].set(
+            vals.reshape((-1,) + vals.shape[2:]))
+        new[name] = flat.reshape(buf.shape)
+    return new
+
+
 def commit_cache_tree(cfg, cache: dict, start, path_nodes, n_accept,
                       num_layers: Optional[int] = None) -> dict:
     """Resolve tree-verify candidate caches: compact the accepted
@@ -419,6 +472,7 @@ def commit_cache_tree(cfg, cache: dict, start, path_nodes, n_accept,
     layers only — recurrent (ssm/hybrid) caches are gated off by the
     decode-step builder."""
     kinds = layer_kinds(cfg)[: num_layers or cfg.num_layers]
+    bt = cache.get("bt")
     layers = []
     for kind, lcache in zip(kinds, cache["layers"]):
         if kind == "ssm":
@@ -429,6 +483,9 @@ def commit_cache_tree(cfg, cache: dict, start, path_nodes, n_accept,
         elif kind == "audio":
             layers.append({**lcache, "self": _compact_attn_rows(
                 lcache["self"], start, path_nodes, n_accept)})
+        elif bt is not None:
+            layers.append(_compact_attn_rows_paged(lcache, bt, start,
+                                                   path_nodes, n_accept))
         else:
             layers.append(_compact_attn_rows(lcache, start, path_nodes,
                                              n_accept))
@@ -436,4 +493,6 @@ def commit_cache_tree(cfg, cache: dict, start, path_nodes, n_accept,
     if "shared" in cache:
         raise NotImplementedError(
             "tree speculation does not support shared-attention caches")
+    if bt is not None:
+        out["bt"] = bt
     return out

@@ -46,8 +46,18 @@ from typing import List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core import prng
 from repro.core.config import SpecConfig
+from repro.core.paged_cache import (
+    SCRATCH_BLOCK,
+    BlockPool,
+    init_paged_cache,
+    plan_group,
+    request_demand_tokens,
+    scatter_prefill_rows,
+)
 from repro.core.protocols import get_drafter, get_verifier
 from repro.core.spec_engine import init_state, make_decode_step
 from repro.serving.request import GenerationRequest, RequestResult, pad_prompt
@@ -83,6 +93,9 @@ class SpecEngine:
         self.model = model
         self.scfg = scfg
         self.mode = mode
+        if scfg.kv_layout not in ("contiguous", "paged"):
+            raise ValueError(f"unknown kv_layout {scfg.kv_layout!r}; "
+                             "expected 'contiguous' or 'paged'")
         if mode is not None:                       # deprecated shim
             if mode not in LEGACY_MODES:
                 raise ValueError(mode)
@@ -96,6 +109,8 @@ class SpecEngine:
         # decode-step (re)compilations across all temperature variants —
         # the continuous-batching tests assert admission never bumps this
         self.step_traces = 0
+        # per-group sizing of the last generate_requests call
+        self.group_stats = []
         self._step = self._jit_counted(
             make_decode_step(model, self.drafter, self.verifier, scfg))
         self._steps_by_temp = {}                   # temperature overrides
@@ -226,6 +241,10 @@ class SpecEngine:
         drafter=None,
         aux_embeds=None,               # (1, Sa, D) — this request's slice
         draft_params=None,
+        pool: Optional[BlockPool] = None,   # paged layout: the group's
+        #                                     block allocator
+        rid: Optional[int] = None,          # paged layout: allocator id
+        #                                     (must be reserved already)
     ) -> dict:
         """Admit ``request`` into slot ``row`` of a live decode state.
 
@@ -236,6 +255,17 @@ class SpecEngine:
         (``Drafter.prefill_row``).  Pure host-side scatters on the state
         pytree: all shapes are unchanged, so the jitted decode step serves
         the updated state without retracing.
+
+        With a **paged** cache (``"bt"`` in ``state["cache"]``) the cache
+        reset becomes: allocate the prompt's blocks from ``pool`` under
+        ``rid``'s admission-time reservation, reset the slot's
+        block-table row to scratch, point its leading entries at the new
+        blocks, and scatter the single-row contiguous prefill into them
+        (``repro.core.paged_cache.scatter_prefill_rows``) — the prefill
+        math itself is the contiguous code path, which is one of the two
+        pillars of the paged-vs-contiguous bit-equality guarantee (the
+        other being the position-masked read, see
+        ``models/attention.attend_paged``).
 
         ``pmax`` fixes the padded prompt length (the serving group's
         maximum) so admission prefill compiles once per group; ``params``
@@ -269,9 +299,23 @@ class SpecEngine:
         row_cache = self.model.init_cache(1, buf)
         row_cache = self.model.prefill(
             params, row_cache, prompt[:, :-1], aux_embeds=aux_embeds)
-        state["cache"] = jax.tree.map(
-            lambda full, one: full.at[row].set(one[0]),
-            state["cache"], row_cache)
+        if "bt" in state["cache"]:       # paged: blocks instead of a row
+            if pool is None or rid is None:
+                raise ValueError("paged admission needs pool= and rid=")
+            ids = pool.alloc(rid, pool.blocks_for(P))
+            bt = state["cache"]["bt"].at[row].set(SCRATCH_BLOCK)
+            bt = bt.at[row, : len(ids)].set(jnp.asarray(ids, jnp.int32))
+            cache = dict(state["cache"])
+            cache["layers"] = [
+                scatter_prefill_rows(pool_l, ids, row_l, pool.block_size)
+                for pool_l, row_l in zip(cache["layers"],
+                                         row_cache["layers"])]
+            cache["bt"] = bt
+            state["cache"] = cache
+        else:
+            state["cache"] = jax.tree.map(
+                lambda full, one: full.at[row].set(one[0]),
+                state["cache"], row_cache)
         # the drafter gets the UNPADDED prompt: draft-side caches may have
         # slots the drafter never rewrites (e.g. the pruned drafter skips
         # the last draft position on a full accept), so pad junk there
@@ -281,6 +325,53 @@ class SpecEngine:
             self.model, params, state["drafter_state"], row,
             jnp.asarray(request.prompt, jnp.int32)[None], buf,
             aux_embeds=aux_embeds, draft_params=draft_params)
+        return state
+
+    def _check_paged_supported(self):
+        """Paged KV needs attention-family, full-causal, contiguous-slot
+        caches: recurrent state cannot be paged, ring buffers already
+        bound their footprint, and cross-attention caches are per-request
+        constants (paging them is a ROADMAP follow-up)."""
+        cfg = self.model.cfg
+        if cfg.arch_type in ("ssm", "hybrid"):
+            raise ValueError(
+                f"kv_layout='paged' needs attention KV caches; "
+                f"{cfg.arch_type!r} caches are recurrent")
+        if cfg.sliding_window:
+            raise ValueError(
+                "kv_layout='paged' does not compose with sliding-window "
+                "(ring) caches — the ring already bounds the footprint")
+        if cfg.cross_attn_every or cfg.encoder_layers \
+                or cfg.arch_type == "audio":
+            raise ValueError(
+                "kv_layout='paged' supports dense/moe self-attention "
+                "stacks only (cross-attention caches are unpaged)")
+
+    def _append_paged_blocks(self, state: dict, pool: BlockPool,
+                             live: dict, gamma: int) -> dict:
+        """Append-on-commit: before each decode step, top every live
+        row's blocks up to its next verify window's reach
+        (``length + gamma + 1`` rows, capped at the request's demand).
+        Draws against the admission-time reservation, so it cannot fail;
+        host-side ``.at[].set`` on the block table only — the jitted
+        step never retraces."""
+        if not live:
+            return state
+        lengths = np.asarray(state["length"])
+        bt = state["cache"]["bt"]
+        changed = False
+        for slot, (rid, demand_tokens) in live.items():
+            need = pool.blocks_for(
+                min(int(lengths[slot]) + gamma + 1, demand_tokens))
+            have = len(pool.owned(rid))
+            if need > have:
+                ids = pool.alloc(rid, need - have)
+                bt = bt.at[slot, have:need].set(jnp.asarray(ids, jnp.int32))
+                changed = True
+        if changed:
+            state = dict(state)
+            state["cache"] = dict(state["cache"])
+            state["cache"]["bt"] = bt
         return state
 
     def generate_requests(
@@ -303,6 +394,19 @@ class SpecEngine:
         request's tokens are bit-identical to serving it solo (per-row
         PRNG streams + full per-row state reset at admission).
 
+        With ``SpecConfig(kv_layout="paged")`` the serving cache is the
+        block-granular pool (``repro.core.paged_cache``): admission
+        *reserves* each request's worst-case block demand instead of a
+        group-max contiguous row (requests wait when the pool is full —
+        head-of-line, priority order preserved), blocks are appended as
+        rows commit and released at harvest, and — when ``batch_slots``
+        is not forced — the slot count is sized from pool occupancy
+        (the largest queued-request subset whose demands co-fit the
+        pool, greedy cheapest-first), so short-request mixes get more
+        concurrent rows out of the same HBM.  Token streams stay
+        bit-identical to the contiguous layout (and therefore to solo
+        serving) for every drafter × verifier.
+
         Heterogeneous *prompt lengths* require attention-family caches
         (right-padding is masked positionally); recurrent-state archs
         (ssm/hybrid) must batch equal-length prompts.
@@ -311,6 +415,10 @@ class SpecEngine:
             return []
         t_arrival = time.perf_counter()    # queue_s counts from call time,
         #                                    across sequential temp groups
+        # per-temperature-group sizing record (what was ACTUALLY
+        # allocated) — benchmarks read this instead of re-deriving the
+        # sizing formulas (benchmarks/ablation_kv.py paged section)
+        self.group_stats = []
         params = self._prepare_cached(params)
         results: List[Optional[RequestResult]] = [None] * len(requests)
 
@@ -321,6 +429,9 @@ class SpecEngine:
                  else float(r.temperature))
             groups.setdefault(t, []).append(i)
 
+        paged = self.scfg.kv_layout == "paged"
+        if paged:
+            self._check_paged_supported()
         for t, idxs in groups.items():
             step, drafter = self._step_for_temperature(t)
             batch = [requests[i] for i in idxs]
@@ -331,11 +442,28 @@ class SpecEngine:
                     f"{self.model.cfg.arch_type} caches are recurrent: "
                     "heterogeneous prompt lengths cannot be right-padded; "
                     "batch equal-length prompts")
-            slots = min(DEFAULT_BATCH_SLOTS if batch_slots is None
-                        else batch_slots, len(batch))
             pmax = max(lengths)
             buf = max(r.prompt.size + r.max_new_tokens for r in batch) \
                 + drafter.gamma + 2
+
+            plan = pool = None
+            cache = None
+            if paged:
+                plan = plan_group(
+                    lengths, [r.max_new_tokens for r in batch],
+                    drafter.gamma, buf,
+                    block_size=self.scfg.kv_block_size,
+                    pool_blocks=self.scfg.kv_pool_blocks,
+                    batch_slots=batch_slots,
+                    default_slots=DEFAULT_BATCH_SLOTS)
+                slots = plan.slots
+                pool = BlockPool(plan.num_blocks, plan.block_size)
+                cache = init_paged_cache(self.model.cfg, slots,
+                                         plan.max_blocks, plan.num_blocks,
+                                         plan.block_size)
+            else:
+                slots = min(DEFAULT_BATCH_SLOTS if batch_slots is None
+                            else batch_slots, len(batch))
 
             # all slots idle (length == target == 0); the scheduler admits
             keys0 = jnp.zeros((slots, 2), jnp.uint32)   # per-row streams
@@ -344,20 +472,62 @@ class SpecEngine:
                 drafter_state=drafter.alloc_state(
                     self.model, params, slots, buf,
                     draft_params=draft_params),
-                target=jnp.zeros((slots,), jnp.int32))
+                target=jnp.zeros((slots,), jnp.int32),
+                cache=cache)
 
-            def admit(st, slot, j, _idxs=idxs, _drafter=drafter, _pmax=pmax):
+            self.group_stats.append({
+                "temperature": t,
+                "slots": slots,
+                "buf": buf,
+                "kv_layout": "paged" if paged else "contiguous",
+                "cache_bytes": int(sum(
+                    x.nbytes for x in jax.tree.leaves(state["cache"]))),
+                **({"pool_blocks": plan.num_blocks,
+                    "block_size": plan.block_size} if paged else {}),
+            })
+
+            live = {}          # slot -> (rid, demand tokens); paged only
+
+            def admit(st, slot, j, _idxs=idxs, _drafter=drafter, _pmax=pmax,
+                      _batch=batch, _plan=plan, _pool=pool, _live=live):
                 i = _idxs[j]
                 aux = aux_embeds[i: i + 1] if aux_embeds is not None else None
+                if _pool is not None:
+                    _pool.reserve(j, _plan.demands[j])
+                    _live[slot] = (j, request_demand_tokens(
+                        _batch[j].prompt.size, _batch[j].max_new_tokens,
+                        _drafter.gamma))
                 return self.prefill_into_slot(
                     params, st, slot, requests[i], pmax=_pmax,
                     drafter=_drafter, aux_embeds=aux,
-                    draft_params=draft_params)
+                    draft_params=draft_params, pool=_pool, rid=j)
+
+            can_admit = release = None
+            if paged:
+                def can_admit(j, _plan=plan, _pool=pool):
+                    return _pool.can_reserve(_plan.demands[j])
+
+                def release(st, slot, j, _pool=pool, _live=live):
+                    _pool.release(j)
+                    _live.pop(slot, None)
+                    st = dict(st)
+                    st["cache"] = dict(st["cache"])
+                    st["cache"]["bt"] = \
+                        st["cache"]["bt"].at[slot].set(SCRATCH_BLOCK)
+                    return st
+
+                def step_fn(st, _s=step, _pool=pool, _live=live,
+                            _g=drafter.gamma):
+                    st = self._append_paged_blocks(st, _pool, _live, _g)
+                    return _s(params, st)
+            else:
+                def step_fn(st, _s=step):
+                    return _s(params, st)
 
             sched = Scheduler(batch, slots)
             _, group_results = sched.run(
-                state, admit=admit, step=lambda st, _s=step: _s(params, st),
-                t0=t_arrival)
+                state, admit=admit, step=step_fn, t0=t_arrival,
+                can_admit=can_admit, release=release)
             for j, i in enumerate(idxs):
                 results[i] = group_results[j]
         return results

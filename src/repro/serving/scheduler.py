@@ -93,16 +93,44 @@ class Scheduler:
         admit: Callable[[dict, int, int], dict],
         step: Callable[[dict], dict],
         t0: Optional[float] = None,
+        can_admit: Optional[Callable[[int], bool]] = None,
+        release: Optional[Callable[[dict, int, int], dict]] = None,
     ) -> tuple:
         """Drive the loop until the queue drains.
 
-        ``admit(state, slot, request_index)`` must return the state with
-        that slot prefilled for the request; ``step(state)`` advances the
-        whole batch one verify step.  ``t0`` is the arrival timestamp the
-        requests' ``queue_s`` is measured from (``time.perf_counter``
-        clock) — callers serving several scheduler loops sequentially
-        pass the call-level start so later loops report the full wait.
-        Returns ``(state, results)`` with ``results`` in request order.
+        Lifecycle hooks (all host-side callables):
+
+        * ``admit(state, slot, request_index) -> state`` — **required**.
+          Must return the state with ``slot`` prefilled for the request
+          (every per-row slice reset; see
+          ``SpecEngine.prefill_into_slot``).  Called whenever a slot is
+          free and the pending queue is non-empty.
+        * ``step(state) -> state`` — **required**.  Advances the whole
+          batch one verify step (typically the jitted decode step, plus
+          any host-side bookkeeping such as paged block appends).
+        * ``can_admit(request_index) -> bool`` — optional admission
+          gate, consulted for the *head* of the priority queue before
+          each admission.  A ``False`` stops this wave's admissions
+          (head-of-line blocking — a denied high-priority request is
+          never overtaken by a cheaper one, so priority order and
+          token-stream invariance are preserved).  The paged KV engine
+          uses this to admit only requests whose worst-case block
+          demand fits the pool.
+        * ``release(state, slot, request_index) -> state`` — optional
+          harvest hook, called after a finished request's result is
+          recorded and before the slot is marked free.  The paged KV
+          engine returns the request's cache blocks to the pool here
+          **and resets the slot's block-table row to scratch** — an idle
+          row keeps stepping, and its (discarded) window writes must not
+          land in blocks the free list may hand to the next admission.
+
+        ``t0`` is the arrival timestamp the requests' ``queue_s`` is
+        measured from (``time.perf_counter`` clock) — callers serving
+        several scheduler loops sequentially pass the call-level start so
+        later loops report the full wait.  Raises ``RuntimeError`` if
+        ``can_admit`` permanently rejects the queue head while every
+        slot is idle (a request that can never be served).  Returns
+        ``(state, results)`` with ``results`` in request order.
         """
         results: List[Optional[RequestResult]] = [None] * len(self.requests)
         t0 = time.perf_counter() if t0 is None else t0
@@ -115,6 +143,11 @@ class Scheduler:
         while self.busy:
             for slot in range(self.batch_slots):
                 if self._slots[slot] is None and self._pending:
+                    # head-of-line gate: a denied head blocks the wave so
+                    # admission order (and queue_s) stays priority-exact
+                    if can_admit is not None \
+                            and not can_admit(self._pending[0][1]):
+                        break
                     _, i = heapq.heappop(self._pending)
                     # stamp before admit(): prefill cost is service, not
                     # queueing
@@ -124,6 +157,13 @@ class Scheduler:
                                    admit_step=self.steps)
                     self._slots[slot] = ev
                     self.events.append(ev)
+
+            if self._pending and all(ev is None for ev in self._slots):
+                # every slot idle yet the head was denied: it can never
+                # be admitted (e.g. demand larger than the whole pool)
+                raise RuntimeError(
+                    f"request {self._pending[0][1]} rejected by can_admit "
+                    "with every slot idle — it can never be served")
 
             state = step(state)
             self.steps += 1
@@ -153,6 +193,8 @@ class Scheduler:
                         queue_s=admit_t[s] - t0,
                         service_s=now - admit_t[s],
                     )
+                    if release is not None:
+                        state = release(state, s, ev.request_index)
                     self._slots[s] = None
 
             if self.steps > max_steps:

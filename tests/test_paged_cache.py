@@ -1,0 +1,362 @@
+"""Paged KV-cache subsystem: pool invariants, layout reconstruction,
+kernel parity, and the serving-level losslessness bar.
+
+Three layers of guarantees:
+
+1. **BlockPool invariants** (model-free, property-based): arbitrary
+   admit / append / release sequences never double-allocate a block,
+   never touch the scratch block, and conserve the pool exactly.
+2. **Layout reconstruction**: writes through the block table followed by
+   the logical gather reproduce the contiguous cache contents exactly —
+   the write/read pair is a bijection on the written region.
+3. **Serving losslessness**: paged scheduler generation is
+   **bit-identical** to contiguous scheduler generation (and therefore,
+   by ``tests/test_continuous_batching.py``, to solo serving) for every
+   drafter × verifier at T=0 and T>0, including int8 KV — the same bar
+   PRs 2-4 set for scheduling, trees and kernel dispatch.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.core import SpecConfig
+from repro.core.paged_cache import (
+    SCRATCH_BLOCK,
+    BlockPool,
+    blocks_for_tokens,
+    gather_block_rows,
+    init_paged_cache,
+    physical_slots,
+    plan_group,
+    request_demand_tokens,
+)
+from repro.core.tree import TreeTemplate
+from repro.kernels.flash_decode import flash_decode_paged
+from repro.models import Model
+from repro.models.attention import _quant_kv, attend, write_cache, write_cache_paged
+from repro.serving import GenerationRequest, SpecEngine
+
+
+@pytest.fixture(scope="module")
+def model():
+    return Model(get_config("smollm-135m").reduced())
+
+
+@pytest.fixture(scope="module")
+def model_int8(model):
+    return Model(dataclasses.replace(model.cfg, kv_cache_dtype="int8"))
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+def _requests(cfg, *, temps=(None,), spec=((5, 6, 11), (4, 8, 22),
+                                           (3, 7, 33), (2, 5, 44))):
+    rng = np.random.default_rng(3)
+    pat = rng.integers(0, cfg.vocab_size, 6)
+    return [GenerationRequest(np.tile(pat, k), max_new_tokens=n, seed=s,
+                              temperature=temps[i % len(temps)])
+            for i, (k, n, s) in enumerate(spec)]
+
+
+# ---------------------------------------------------------------------------
+# 1. BlockPool invariants
+# ---------------------------------------------------------------------------
+
+def test_block_pool_lifecycle_and_errors():
+    pool = BlockPool(num_blocks=9, block_size=4)      # 8 allocatable
+    assert pool.capacity == 8 and pool.free_blocks == 8
+    pool.reserve(0, 3)
+    a = pool.alloc(0, 2)
+    assert len(a) == 2 and SCRATCH_BLOCK not in a
+    pool.check_invariants()
+    # alloc beyond the reservation is a bug, not an OOM
+    with pytest.raises(ValueError, match="beyond reservation"):
+        pool.alloc(0, 2)
+    # alloc without a reservation is a bug
+    with pytest.raises(ValueError, match="no reservation"):
+        pool.alloc(7, 1)
+    # over-committing reservations is refused
+    pool.reserve(1, 5)
+    assert not pool.can_reserve(1)
+    with pytest.raises(ValueError, match="over-committed"):
+        pool.reserve(2, 1)
+    # release returns everything
+    freed = pool.release(0)
+    assert sorted(freed) == sorted(a)
+    assert pool.can_reserve(3)
+    pool.check_invariants()
+
+
+@given(ops=st.lists(st.tuples(st.integers(0, 2),       # 0=admit 1=append 2=release
+                              st.integers(0, 7),       # request id
+                              st.integers(1, 6)),      # blocks
+                    min_size=1, max_size=60),
+       num_blocks=st.integers(4, 24))
+@settings(max_examples=60, deadline=None)
+def test_block_pool_conservation_property(ops, num_blocks):
+    """Property: under ANY admit/append/release sequence (invalid steps
+    skipped the way the engine's admission control skips them), no block
+    is double-allocated, the scratch block is never handed out, and
+    free + allocated == capacity after every step."""
+    pool = BlockPool(num_blocks=num_blocks, block_size=4)
+    reserved = {}
+    for kind, rid, n in ops:
+        if kind == 0 and rid not in reserved and pool.can_reserve(n):
+            pool.reserve(rid, n)
+            reserved[rid] = n
+        elif kind == 1 and rid in reserved:
+            room = reserved[rid] - len(pool.owned(rid))
+            if room:
+                pool.alloc(rid, min(n, room))
+        elif kind == 2 and rid in reserved:
+            pool.release(rid)
+            del reserved[rid]
+        pool.check_invariants()
+    for rid in list(reserved):
+        pool.release(rid)
+    pool.check_invariants()
+    assert pool.free_blocks == pool.capacity
+
+
+# ---------------------------------------------------------------------------
+# 2. Layout reconstruction: block-table writes == contiguous writes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("int8", [False, True])
+def test_paged_write_reconstructs_contiguous(int8):
+    """Random windows scattered through random (disjoint) block tables,
+    then gathered back, must equal the same windows written into a
+    contiguous cache — the paged write/read pair is exact."""
+    B, T, Hkv, dh, bs, nb = 3, 4, 2, 8, 8, 5
+    S = nb * bs
+    rng = np.random.default_rng(0)
+    # disjoint per-row tables out of a shared pool (+ scratch)
+    perm = rng.permutation(np.arange(1, 1 + B * nb))
+    bt = jnp.asarray(perm.reshape(B, nb), jnp.int32)
+    N = 1 + B * nb
+    dt = jnp.int8 if int8 else jnp.float32
+    paged = {"k": jnp.zeros((N, bs, Hkv, dh), dt),
+             "v": jnp.zeros((N, bs, Hkv, dh), dt)}
+    cont = {"k": jnp.zeros((B, S, Hkv, dh), dt),
+            "v": jnp.zeros((B, S, Hkv, dh), dt)}
+    if int8:
+        for c in (paged, cont):
+            shp = (N, bs, Hkv) if c is paged else (B, S, Hkv)
+            c["k_scale"] = jnp.zeros(shp, jnp.float32)
+            c["v_scale"] = jnp.zeros(shp, jnp.float32)
+    key = jax.random.PRNGKey(1)
+    written = np.zeros((B, S), bool)
+    for step in range(6):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        k = jax.random.normal(k1, (B, T, Hkv, dh), jnp.float32)
+        v = jax.random.normal(k2, (B, T, Hkv, dh), jnp.float32)
+        starts = jax.random.randint(k3, (B,), 0, S - T)
+        slots = starts[:, None] + jnp.arange(T)[None, :]
+        paged = write_cache_paged(paged, k, v, slots, bt)
+        cont = write_cache(cont, k, v, slots)
+        written[np.arange(B)[:, None], np.asarray(slots)] = True
+    for name in paged:
+        logical = np.asarray(gather_block_rows(paged[name], bt))
+        expect = np.asarray(cont[name])
+        np.testing.assert_array_equal(logical[written], expect[written])
+    # physical_slots clips out-of-range logical slots onto scratch
+    far = jnp.full((B, T), S + 17, jnp.int32)
+    phys = np.asarray(physical_slots(bt, far, bs))
+    assert (phys // bs == SCRATCH_BLOCK).all()
+
+
+# ---------------------------------------------------------------------------
+# 3. Paged Pallas kernel: interpret-mode parity vs the gathered oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("int8,tree", [(False, False), (True, False),
+                                       (False, True), (True, True)])
+def test_flash_decode_paged_matches_oracle(int8, tree):
+    B, T, Hkv, G, dh = 2, 4, 2, 2, 32
+    bs, nb, N = 16, 8, 12
+    kq, kk, kv, kb = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(kq, (B, T, Hkv * G, dh), jnp.float32)
+    pool_k = jax.random.normal(kk, (N, bs, Hkv, dh), jnp.float32)
+    pool_v = jax.random.normal(kv, (N, bs, Hkv, dh), jnp.float32)
+    bt = jax.random.randint(kb, (B, nb), 0, N)
+    start = jnp.array([40, 17], jnp.int32)
+    ks = vs = tm = ws = None
+    if int8:
+        pool_k, ks = _quant_kv(pool_k)
+        pool_v, vs = _quant_kv(pool_v)
+    if tree:
+        tpl = TreeTemplate((3,))                      # 4 nodes == T
+        tm, ws = tpl.mask_dev, start
+        qpos = start[:, None] + tpl.depths_dev[None, :]
+    else:
+        qpos = start[:, None] + jnp.arange(T)[None, :]
+    kg, vg = gather_block_rows(pool_k, bt), gather_block_rows(pool_v, bt)
+    ref = attend(q, kg, vg, qpos, jnp.arange(nb * bs, dtype=jnp.int32),
+                 k_scale=gather_block_rows(ks, bt) if int8 else None,
+                 v_scale=gather_block_rows(vs, bt) if int8 else None,
+                 tree_mask=tm, win_start=ws, impl="jnp")
+    out = flash_decode_paged(q, pool_k, pool_v, bt, qpos,
+                             k_scale=ks, v_scale=vs,
+                             tree_mask=tm, win_start=ws, interpret=True)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 4. Serving losslessness: paged == contiguous per drafter x verifier
+# ---------------------------------------------------------------------------
+
+def _serve_both_layouts(model, params, drafter, verifier, scfg, reqs,
+                        batch_slots=2, block_size=8):
+    base = SpecEngine(model, scfg, drafter=drafter, verifier=verifier)
+    r0 = base.generate_requests(params, reqs, batch_slots=batch_slots)
+    scp = dataclasses.replace(scfg, kv_layout="paged",
+                              kv_block_size=block_size)
+    eng = SpecEngine(model, scp, drafter=drafter, verifier=verifier)
+    assert eng.step_traces == 0
+    r1 = eng.generate_requests(params, reqs, batch_slots=batch_slots)
+    # paged admission + block appends must never retrace the decode step
+    # (one compile per temperature group)
+    temps = {scfg.temperature if r.temperature is None else r.temperature
+             for r in reqs}
+    assert eng.step_traces == len(temps)
+    return r0, r1
+
+
+@pytest.mark.parametrize("drafter,verifier", [
+    ("ngram", "bf16"), ("ngram", "w8a8"),
+    ("vanilla", "bf16"), ("vanilla", "w8a8"),
+    ("pruned", "bf16"), ("pruned", "w8a8"),
+    ("ngram-tree", "bf16"), ("ngram-tree", "w8a8"),
+])
+def test_paged_matches_contiguous_all_combos(model, params, drafter,
+                                             verifier):
+    """The acceptance bar: paged scheduler serving is bit-identical to
+    contiguous scheduler serving for every registered drafter × verifier
+    at T=0 AND T>0 (mixed-temperature request set exercises both jitted
+    steps in one call), through 2 slots at 2x oversubscription with a
+    non-power-of-two block size."""
+    scfg = SpecConfig(temperature=0.0, gamma=3, pruned_retention=0.5,
+                      tree_branches=(2, 1, 1))
+    reqs = _requests(model.cfg, temps=(0.0, 0.8))
+    r0, r1 = _serve_both_layouts(model, params, drafter, verifier, scfg,
+                                 reqs, block_size=8)
+    for req, a, b in zip(reqs, r0, r1):
+        assert b.new_tokens == req.max_new_tokens
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+@pytest.mark.parametrize("drafter,verifier", [
+    ("ngram", "w8a8"), ("ngram-tree", "bf16"),
+])
+def test_paged_matches_contiguous_int8_kv(model_int8, params, drafter,
+                                          verifier):
+    """Paged × int8-KV: the scale pools ride the same block layout and
+    the composition stays bit-identical (chain and tree routes)."""
+    scfg = SpecConfig(temperature=0.0, gamma=3, tree_branches=(2, 1, 1))
+    reqs = _requests(model_int8.cfg, temps=(0.0, 0.8))
+    r0, r1 = _serve_both_layouts(model_int8, params, drafter, verifier,
+                                 scfg, reqs, block_size=8)
+    for a, b in zip(r0, r1):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_paged_small_pool_serializes_but_stays_exact(model, params):
+    """A pool too small for two concurrent requests degrades to
+    sequential serving (admission waits on block reservations) without
+    changing a single token."""
+    scfg = SpecConfig(temperature=0.0, gamma=3)
+    reqs = _requests(model.cfg)
+    demand = max(blocks_for_tokens(
+        request_demand_tokens(r.prompt.size, r.max_new_tokens, 3), 8)
+        for r in reqs)
+    scp = dataclasses.replace(scfg, kv_layout="paged", kv_block_size=8,
+                              kv_pool_blocks=demand + 1)   # fits ONE at a time
+    eng = SpecEngine(model, scp, verifier="bf16")
+    r1 = eng.generate_requests(params, reqs, batch_slots=2)
+    base = SpecEngine(model, scfg, verifier="bf16")
+    r0 = base.generate_requests(params, reqs, batch_slots=2)
+    for a, b in zip(r0, r1):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_paged_request_larger_than_pool_raises(model, params):
+    scfg = SpecConfig(temperature=0.0, gamma=3, kv_layout="paged",
+                      kv_block_size=8, kv_pool_blocks=3)
+    eng = SpecEngine(model, scfg, verifier="bf16")
+    with pytest.raises(ValueError, match="exceeds pool capacity"):
+        eng.generate_requests(params, _requests(model.cfg), batch_slots=2)
+
+
+# ---------------------------------------------------------------------------
+# 5. Admission-aware slot sizing (dynamic batch_slots)
+# ---------------------------------------------------------------------------
+
+def test_plan_group_dynamic_slots():
+    """Pool occupancy drives the slot count: short-request mixes get more
+    concurrent rows than the contiguous default out of the same
+    capacity; a forced batch_slots is respected; oversized requests are
+    rejected up front."""
+    lens, buds = [16] * 12, [8] * 12
+    plan = plan_group(lens, buds, gamma=3, buf=32, block_size=8,
+                      default_slots=2)
+    # default pool = 2 worst-case demands => dynamic slots still 2
+    assert plan.slots == 2
+    # triple the pool: occupancy-derived slots grow past the default
+    big = plan_group(lens, buds, gamma=3, buf=32, block_size=8,
+                     pool_blocks=3 * (plan.num_blocks - 1) + 1,
+                     default_slots=2)
+    assert big.slots == 6
+    forced = plan_group(lens, buds, gamma=3, buf=32, block_size=8,
+                        pool_blocks=big.num_blocks, batch_slots=3)
+    assert forced.slots == 3
+    with pytest.raises(ValueError, match="exceeds pool capacity"):
+        plan_group([400], [100], gamma=3, buf=512, block_size=8,
+                   pool_blocks=4)
+
+
+def test_paged_dynamic_slots_served_in_parallel(model, params):
+    """With no forced batch_slots, a short-request mix is served on
+    occupancy-derived slots (> the request count here, so one wave) and
+    stays solo-exact."""
+    reqs = _requests(model.cfg)
+    scfg = SpecConfig(temperature=0.0, gamma=3, kv_layout="paged",
+                      kv_block_size=8)
+    eng = SpecEngine(model, scfg, verifier="bf16")
+    r1 = eng.generate_requests(params, reqs)    # dynamic slots
+    base = SpecEngine(model, SpecConfig(temperature=0.0, gamma=3),
+                      verifier="bf16")
+    for req, res in zip(reqs, r1):
+        solo = base.generate_requests(params, [
+            GenerationRequest(req.prompt, req.max_new_tokens,
+                              seed=req.seed)], batch_slots=1)[0]
+        np.testing.assert_array_equal(res.tokens, solo.tokens)
+
+
+# ---------------------------------------------------------------------------
+# 6. Gating: the layouts that cannot page
+# ---------------------------------------------------------------------------
+
+def test_paged_rejects_recurrent_and_ring():
+    scfg = SpecConfig(temperature=0.0, gamma=2, kv_layout="paged")
+    req = [GenerationRequest(np.arange(2, 8), max_new_tokens=2, seed=0)]
+    ssm = Model(get_config("mamba2-370m").reduced())
+    with pytest.raises(ValueError, match="recurrent"):
+        SpecEngine(ssm, scfg, verifier="bf16").generate_requests(
+            ssm.init_params(jax.random.PRNGKey(0)), req)
+    ring_cfg = dataclasses.replace(
+        get_config("smollm-135m").reduced(), sliding_window=32)
+    ring = Model(ring_cfg)
+    with pytest.raises(ValueError, match="sliding-window"):
+        SpecEngine(ring, scfg, verifier="bf16").generate_requests(
+            ring.init_params(jax.random.PRNGKey(0)), req)
+    with pytest.raises(ValueError, match="kv_layout"):
+        SpecEngine(ssm, dataclasses.replace(scfg, kv_layout="ringed"))

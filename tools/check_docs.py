@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Docs link/path checker — the ``docs-check`` CI gate.
+
+Verifies, for ``README.md`` and every ``docs/*.md``:
+
+1. every **relative markdown link** ``[text](target)`` resolves to an
+   existing file (anchors stripped; http(s)/mailto links skipped);
+2. every **inline-code file reference** that looks like a repo path
+   (``src/repro/core/tree.py``, ``benchmarks/run.py``, …) resolves —
+   either verbatim from the repo root, relative to the doc's directory,
+   or under the conventional prefixes (``src/repro/``, ``tests/``,
+   ``docs/``) that prose tends to elide.  Tokens with globs/braces or
+   dotted module paths are out of scope.
+
+Run from anywhere: ``python tools/check_docs.py``.  Exit code 1 with a
+per-file report when anything dangles, so docs cannot rot silently.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+INLINE_CODE = re.compile(r"`([^`\n]+)`")
+# a path-looking token: has a separator, sane chars, known text suffix
+PATHY = re.compile(r"^[\w./-]+/[\w./-]+\.(py|md|json|yml|yaml|toml)$")
+# prefixes docs conventionally elide ("models/attention.py" etc.)
+PREFIXES = ("", "src/repro/", "src/", "tests/", "docs/", "benchmarks/")
+
+
+def _resolve(target: str, base_dir: str, prefixes=("",)) -> bool:
+    if any(c in target for c in "*{}<>$"):
+        return True                          # glob / template — not a path
+    cands = [os.path.join(base_dir, target)]
+    cands += [os.path.join(ROOT, p, target) for p in prefixes]
+    return any(os.path.exists(c) for c in cands)
+
+
+def check_file(path: str) -> list:
+    base_dir = os.path.dirname(os.path.abspath(path))
+    text = open(path, encoding="utf-8").read()
+    # fenced code blocks hold shell lines, not doc links — drop them
+    prose = re.sub(r"```.*?```", "", text, flags=re.S)
+    errors = []
+    for m in MD_LINK.finditer(prose):
+        target = m.group(1).split("#")[0]
+        if not target or target.startswith(("http://", "https://",
+                                            "mailto:")):
+            continue
+        # links must resolve where a renderer would look: relative to the
+        # doc itself (or the repo root) — no prose-prefix leniency here
+        if not _resolve(target, base_dir):
+            errors.append(f"broken link: ({m.group(1)})")
+    for m in INLINE_CODE.finditer(prose):
+        parts = m.group(0).strip("`").split()      # `path --flags` → path
+        if not parts or not PATHY.match(parts[0]):
+            continue
+        if not _resolve(parts[0], base_dir, prefixes=PREFIXES):
+            errors.append(f"dangling path reference: `{parts[0]}`")
+    return errors
+
+
+def main() -> int:
+    files = [os.path.join(ROOT, "README.md")] + sorted(
+        glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    failed = False
+    for path in files:
+        errs = check_file(path)
+        rel = os.path.relpath(path, ROOT)
+        if errs:
+            failed = True
+            print(f"FAIL {rel}")
+            for e in errs:
+                print(f"  - {e}")
+        else:
+            print(f"ok   {rel}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
