@@ -131,6 +131,13 @@ def main() -> None:
                   f"dryrun_rows={len(rr['roofline'])};"
                   f"eq12_ratio={rr['eq11_12'][0]['ratio']:.2f}"))
 
+    from benchmarks import serve_load
+    sl = serve_load.rows(quick=args.quick)["headline"]
+    lines.append(("serve_load", step_us,
+                  f"fifo_hit={sl['fifo_hit_rate']:.3f};"
+                  f"edf_shed_hit={sl['edf_shed_hit_rate']:.3f};"
+                  f"edf_ttft_p99={sl['edf_shed_ttft_p99']:.2f}s"))
+
     print("name,us_per_call,derived")
     for name, us, derived in lines:
         print(f"{name},{us:.1f},{derived}")

@@ -69,6 +69,23 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--task", default="gsm8k")
     ap.add_argument("--ckpt", default=None, help="checkpoint (.npz) to serve")
+    ap.add_argument("--serve", action="store_true",
+                    help="async front-end demo: run a StreamingServer on "
+                         "the wall clock, submit a Poisson arrival stream, "
+                         "stream tokens per request, print the metrics "
+                         "summary (repro.serving.server)")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of requests in the --serve arrival stream")
+    ap.add_argument("--arrival-rate", type=float, default=4.0,
+                    help="--serve Poisson arrival rate (requests/s)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="--serve per-request SLO deadline in seconds "
+                         "(default: no deadline)")
+    ap.add_argument("--admission", default="edf", choices=["fifo", "edf"],
+                    help="--serve admission policy within priority class")
+    ap.add_argument("--no-shed", action="store_true",
+                    help="--serve: keep past-deadline queued work instead "
+                         "of shedding it")
     args = ap.parse_args()
 
     import dataclasses
@@ -117,6 +134,54 @@ def main():
     print(f"arch={cfg.name} verifier={engine.verifier.name} "
           f"drafter={engine.drafter.name} kv_cache={cfg.kv_cache_dtype} "
           f"kv_layout={args.kv_layout} attn={attn_path}")
+    if args.serve:
+        if args.kv_layout == "paged":
+            ap.error("--serve currently requires --kv-layout contiguous")
+        import numpy as np
+
+        from repro.serving import GenerationRequest, ServerConfig, \
+            StreamingServer
+        cfg_srv = ServerConfig(
+            batch_slots=args.batch,
+            max_prompt_len=args.prompt_len,
+            max_new_tokens=args.new_tokens,
+            admission=args.admission,
+            shed_late=not args.no_shed,
+        )
+        rng = np.random.default_rng(0)
+        gaps = rng.exponential(1.0 / max(args.arrival_rate, 1e-9),
+                               size=args.requests)
+        pool = np.asarray(prompts)
+        t0 = time.perf_counter()
+        with StreamingServer(engine, params, cfg_srv) as srv:
+            handles = []
+            for i in range(args.requests):
+                time.sleep(gaps[i])
+                h = srv.submit(GenerationRequest(
+                    pool[i % len(pool)], args.new_tokens, seed=i,
+                    deadline_s=args.deadline))
+                handles.append(h)
+            for h in handles:
+                toks = list(h.tokens())       # blocking per-token stream
+                res = h.result(timeout=60.0)
+                tag = h.status
+                print(f"req {h.rid}: {tag}, {len(toks)} chunks, "
+                      f"{res.new_tokens if res else 0} tokens")
+            summary = srv.loop.metrics.summary()
+        wall = time.perf_counter() - t0
+        srv.loop.metrics.check_conservation()
+        c = summary["counters"]
+        lat = summary["latency"]
+        print(f"served {c['completed']}/{c['submitted']} "
+              f"(shed {c['shed']}) in {wall:.2f}s wall")
+        ttft, itl = lat["ttft_s"], lat["itl_s"]
+        if ttft.get("n"):
+            print(f"ttft p50={ttft['p50']:.3f}s p99={ttft['p99']:.3f}s  "
+                  f"itl p50={itl.get('p50', float('nan')):.4f}s")
+        if summary["deadlines"]["with_deadline"]:
+            print(f"deadline hit-rate: "
+                  f"{summary['deadlines']['hit_rate']:.3f}")
+        return
     if args.kv_layout == "paged":
         # paged is a serving-path layout: route the batch through the
         # continuous-batching scheduler as per-request generations

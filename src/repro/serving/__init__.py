@@ -3,10 +3,21 @@ from repro.serving.engine import (  # noqa: F401
     GenResult,
     SpecEngine,
 )
+from repro.serving.metrics import (  # noqa: F401
+    RequestTimeline,
+    ServerMetrics,
+)
 from repro.serving.request import (  # noqa: F401
     GenerationRequest,
     RequestResult,
     pack_prompts,
     pad_prompt,
+    safe_rate,
 )
 from repro.serving.scheduler import Scheduler, SlotEvent  # noqa: F401
+from repro.serving.server import (  # noqa: F401
+    ServerConfig,
+    ServingLoop,
+    StreamHandle,
+    StreamingServer,
+)

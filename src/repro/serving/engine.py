@@ -60,7 +60,12 @@ from repro.core.paged_cache import (
 )
 from repro.core.protocols import get_drafter, get_verifier
 from repro.core.spec_engine import init_state, make_decode_step
-from repro.serving.request import GenerationRequest, RequestResult, pad_prompt
+from repro.serving.request import (
+    GenerationRequest,
+    RequestResult,
+    pad_prompt,
+    safe_rate,
+)
 from repro.serving.scheduler import Scheduler
 
 # deprecated mode-string → drafter-registry-name mapping (public: the serve
@@ -81,7 +86,9 @@ class GenResult:
 
     @property
     def tokens_per_s(self) -> float:
-        return self.new_tokens / max(self.wall_s, 1e-9)
+        # 0.0 (not a divide-by-zero spike) when a fast CPU run records
+        # zero wall time
+        return safe_rate(self.new_tokens, self.wall_s)
 
 
 class SpecEngine:
@@ -382,9 +389,24 @@ class SpecEngine:
         batch_slots: Optional[int] = None,
         aux_embeds=None,               # (len(requests), Sa, D), request order
         draft_params=None,
+        admission: str = "fifo",       # "fifo" | "edf" (deadline-aware)
+        on_tokens=None,                # per-request streaming callback
     ) -> List[RequestResult]:
         """Serve requests with heterogeneous prompt lengths, budgets,
         seeds and temperatures; returns results in request order.
+
+        ``admission="edf"`` orders pending admissions earliest-deadline-
+        first within each priority class (``GenerationRequest.deadline_s``;
+        requests without one sort last) — like ``priority`` it shifts
+        ``queue_s`` only, never the tokens.  The batch API never sheds:
+        every request is served even past its deadline (SLO-aware
+        shedding lives in the open-loop front-end,
+        ``repro.serving.server``).
+
+        ``on_tokens(request_index, tokens)`` streams each request's
+        newly-committed tokens after every decode step (``np.int32``
+        deltas, indices into ``requests``); the concatenated deltas are
+        bit-identical to the returned ``RequestResult.tokens``.
 
         Requests flow through the continuous-batching scheduler:
         ``batch_slots`` rows (default ``min(len(group), 8)``) step in one
@@ -524,10 +546,16 @@ class SpecEngine:
                 def step_fn(st, _s=step):
                     return _s(params, st)
 
-            sched = Scheduler(batch, slots)
+            group_on_tokens = None
+            if on_tokens is not None:
+                def group_on_tokens(j, toks, _idxs=idxs):
+                    on_tokens(_idxs[j], toks)     # group -> request index
+
+            sched = Scheduler(batch, slots, policy=admission)
             _, group_results = sched.run(
                 state, admit=admit, step=step_fn, t0=t_arrival,
-                can_admit=can_admit, release=release)
+                can_admit=can_admit, release=release,
+                on_tokens=group_on_tokens)
             for j, i in enumerate(idxs):
                 results[i] = group_results[j]
         return results

@@ -1,0 +1,262 @@
+"""Serving observability: the SlotEvent audit trail as a metrics surface.
+
+The scheduler's ``SlotEvent`` list started life as a test artifact (the
+conservation property tests assert on it).  A long-lived server needs the
+same information as *aggregates with bounded memory*: counters
+(submitted / admitted / completed / shed), an occupancy gauge, and
+per-request latency timelines — time-to-first-token (TTFT) and
+inter-token latency (ITL), the two numbers an interactive SLO is written
+against (the deployment-side framing of the SD survey, arXiv:2401.07851).
+
+:class:`ServerMetrics` is a sink of host-side hooks the serving
+front-end (``repro.serving.server``) calls as requests flow through:
+
+    on_submit → on_admit → on_tokens* → on_finish      (served)
+    on_submit → on_shed                                (deadline shed)
+
+plus ``on_step`` (per scheduler tick: the occupancy gauge) and
+``on_slot_event`` (the drain target for ``Scheduler.on_event`` — every
+completed occupancy is counted here even when the scheduler's retained
+``events`` list is capped).  All timestamps come from the caller's clock
+(wall or virtual), so load-replay benchmarks produce deterministic
+latency distributions.
+
+``summary()`` returns the JSON-ready schema (documented in
+``docs/decoding_api.md``); ``save()`` writes it.  Per-request timelines
+are kept in full by default — pass ``keep_timelines=False`` for a
+months-lived process where only the aggregates should stay resident.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+def percentile(values, q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) without numpy: metrics
+    must stay importable in the scheduler's framework-agnostic layer."""
+    if not values:
+        return float("nan")
+    v = sorted(values)
+    k = max(0, min(len(v) - 1, round(q / 100.0 * (len(v) - 1))))
+    return float(v[int(k)])
+
+
+def _dist(values) -> dict:
+    """p50/p99/mean/max summary of a latency sample list."""
+    if not values:
+        return {"n": 0}
+    return {
+        "n": len(values),
+        "mean": sum(values) / len(values),
+        "p50": percentile(values, 50),
+        "p99": percentile(values, 99),
+        "max": max(values),
+    }
+
+
+@dataclass
+class RequestTimeline:
+    """Per-request latency timeline (all timestamps on the server clock).
+
+    ``emits`` records every streaming delta as ``(t, n_tokens)``; TTFT
+    and ITL derive from it.  A delta carries several tokens when a
+    verify step accepts a multi-token draft — its gap is attributed
+    evenly across the tokens it committed, so ITL reflects what a
+    streaming client observes per token.
+    """
+
+    rid: int
+    arrival_t: float
+    deadline_t: Optional[float] = None     # absolute; None = no SLO
+    admit_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    status: str = "queued"                 # queued|running|done|shed
+    degraded: bool = False                 # served by the degraded lane
+    emits: List[Tuple[float, int]] = field(default_factory=list)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Arrival → first streamed token."""
+        return self.emits[0][0] - self.arrival_t if self.emits else None
+
+    @property
+    def itl(self) -> List[float]:
+        """Per-token inter-token gaps after the first delta."""
+        gaps: List[float] = []
+        if len(self.emits) < 2:
+            return gaps
+        prev = self.emits[0][0]
+        for t, n in self.emits[1:]:
+            gaps.extend([(t - prev) / max(n, 1)] * n)
+            prev = t
+        return gaps
+
+    @property
+    def deadline_hit(self) -> Optional[bool]:
+        """None when the request has no deadline; shed counts as a miss."""
+        if self.deadline_t is None:
+            return None
+        if self.status == "shed" or self.finish_t is None:
+            return False
+        return self.finish_t <= self.deadline_t
+
+    def to_dict(self) -> dict:
+        return {
+            "rid": self.rid,
+            "status": self.status,
+            "degraded": self.degraded,
+            "arrival_t": self.arrival_t,
+            "admit_t": self.admit_t,
+            "finish_t": self.finish_t,
+            "deadline_t": self.deadline_t,
+            "deadline_hit": self.deadline_hit,
+            "ttft": self.ttft,
+            "n_tokens": sum(n for _, n in self.emits),
+            "emits": [[t, n] for t, n in self.emits],
+        }
+
+
+class ServerMetrics:
+    """Aggregating sink for the serving front-end's lifecycle hooks."""
+
+    def __init__(self, *, keep_timelines: bool = True):
+        self.counters: Dict[str, int] = {
+            "submitted": 0, "admitted": 0, "completed": 0, "shed": 0,
+            "degraded": 0, "slot_events": 0, "stream_tokens": 0,
+        }
+        self.keep_timelines = keep_timelines
+        self.timelines: Dict[int, RequestTimeline] = {}
+        # occupancy gauge: running aggregate, O(1) memory
+        self._occ_samples = 0
+        self._occ_sum = 0
+        self._occ_max = 0
+        self._slots_total = 0
+        # latency aggregates survive even with keep_timelines=False
+        self._ttft: List[float] = []
+        self._itl: List[float] = []
+        self._queue: List[float] = []
+        self._service: List[float] = []
+        self._deadline_total = 0
+        self._deadline_hits = 0
+
+    # -- lifecycle hooks ------------------------------------------------
+    def on_submit(self, rid: int, t: float,
+                  deadline_t: Optional[float] = None,
+                  degraded: bool = False) -> None:
+        self.counters["submitted"] += 1
+        if degraded:
+            self.counters["degraded"] += 1
+        self.timelines[rid] = RequestTimeline(
+            rid=rid, arrival_t=t, deadline_t=deadline_t, degraded=degraded)
+
+    def on_admit(self, rid: int, t: float) -> None:
+        self.counters["admitted"] += 1
+        tl = self.timelines.get(rid)
+        if tl is not None:
+            tl.admit_t = t
+            tl.status = "running"
+
+    def on_tokens(self, rid: int, t: float, n: int) -> None:
+        self.counters["stream_tokens"] += int(n)
+        tl = self.timelines.get(rid)
+        if tl is not None:
+            tl.emits.append((t, int(n)))
+
+    def on_finish(self, rid: int, t: float) -> None:
+        self.counters["completed"] += 1
+        tl = self.timelines.pop(rid) if not self.keep_timelines \
+            else self.timelines.get(rid)
+        if tl is None:
+            return
+        tl.finish_t = t
+        tl.status = "done"
+        self._fold(tl)
+
+    def on_shed(self, rid: int, t: float) -> None:
+        self.counters["shed"] += 1
+        tl = self.timelines.pop(rid) if not self.keep_timelines \
+            else self.timelines.get(rid)
+        if tl is None:
+            return
+        tl.finish_t = t
+        tl.status = "shed"
+        self._fold(tl)
+
+    def on_step(self, t: float, busy_slots: int, total_slots: int) -> None:
+        """Occupancy gauge sample: one scheduler tick."""
+        self._occ_samples += 1
+        self._occ_sum += int(busy_slots)
+        self._occ_max = max(self._occ_max, int(busy_slots))
+        self._slots_total = max(self._slots_total, int(total_slots))
+
+    def on_slot_event(self, ev) -> None:
+        """Drain target for ``Scheduler.on_event``: counts completed slot
+        occupancies so the audit trail survives in aggregate even when
+        the scheduler's retained ``events`` list is capped."""
+        self.counters["slot_events"] += 1
+
+    # -- aggregation ----------------------------------------------------
+    def _fold(self, tl: RequestTimeline) -> None:
+        if tl.deadline_t is not None:
+            self._deadline_total += 1
+            if tl.deadline_hit:
+                self._deadline_hits += 1
+        if tl.status != "done":
+            return
+        if tl.ttft is not None:
+            self._ttft.append(tl.ttft)
+        self._itl.extend(tl.itl)
+        if tl.admit_t is not None:
+            self._queue.append(tl.admit_t - tl.arrival_t)
+            if tl.finish_t is not None:
+                self._service.append(tl.finish_t - tl.admit_t)
+
+    @property
+    def deadline_hit_rate(self) -> Optional[float]:
+        if self._deadline_total == 0:
+            return None
+        return self._deadline_hits / self._deadline_total
+
+    def check_conservation(self) -> None:
+        """No request silently lost: completed + shed == submitted."""
+        c = self.counters
+        if c["completed"] + c["shed"] != c["submitted"]:
+            raise AssertionError(
+                f"conservation violated: completed={c['completed']} + "
+                f"shed={c['shed']} != submitted={c['submitted']}")
+
+    def summary(self, *, include_requests: bool = False) -> dict:
+        """JSON-ready metrics snapshot (schema: docs/decoding_api.md)."""
+        out = {
+            "counters": dict(self.counters),
+            "occupancy": {
+                "samples": self._occ_samples,
+                "mean": (self._occ_sum / self._occ_samples
+                         if self._occ_samples else 0.0),
+                "max": self._occ_max,
+                "slots": self._slots_total,
+            },
+            "latency": {
+                "ttft_s": _dist(self._ttft),
+                "itl_s": _dist(self._itl),
+                "queue_s": _dist(self._queue),
+                "service_s": _dist(self._service),
+            },
+            "deadlines": {
+                "with_deadline": self._deadline_total,
+                "hits": self._deadline_hits,
+                "hit_rate": self.deadline_hit_rate,
+            },
+        }
+        if include_requests and self.keep_timelines:
+            out["requests"] = [self.timelines[r].to_dict()
+                               for r in sorted(self.timelines)]
+        return out
+
+    def save(self, path: str, *, include_requests: bool = False) -> str:
+        with open(path, "w") as f:
+            json.dump(self.summary(include_requests=include_requests), f,
+                      indent=1)
+        return path

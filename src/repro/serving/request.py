@@ -28,6 +28,16 @@ from typing import Optional
 import numpy as np
 
 
+def safe_rate(count: int, seconds: float) -> float:
+    """``count / seconds`` guarded against zero/negative time.
+
+    Fast CPU runs (and synthetic test loops) can legitimately record a
+    0.0 wall/service time; a rate of 0.0 is the honest answer there —
+    not a division crash, and not the absurd ``count / 1e-9`` spike.
+    """
+    return float(count) / seconds if seconds > 0.0 else 0.0
+
+
 @dataclass
 class GenerationRequest:
     """One decode request.
@@ -38,6 +48,13 @@ class GenerationRequest:
     other requests happened to share the batch.
     ``priority`` orders *admission* (lower = more urgent; FIFO within a
     priority class) — it shifts ``queue_s``, never the generated tokens.
+    ``deadline_s`` is the request's SLO: seconds from *submission* by
+    which the full generation should complete.  Under ``admission="edf"``
+    pending requests are ordered earliest-deadline-first within their
+    priority class, and the serving front-end
+    (``repro.serving.server``) may shed a request whose deadline passed
+    while it was still queued.  Like ``priority`` it only reorders
+    admission — never the generated tokens.
     """
 
     prompt: np.ndarray                  # (P,) int32 token ids, P >= 2
@@ -45,6 +62,7 @@ class GenerationRequest:
     temperature: Optional[float] = None
     seed: int = 0
     priority: int = 0
+    deadline_s: Optional[float] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -52,6 +70,8 @@ class GenerationRequest:
             raise ValueError("prompt must have >= 2 tokens")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.deadline_s is not None and not self.deadline_s > 0.0:
+            raise ValueError("deadline_s must be positive (or None)")
 
 
 @dataclass
@@ -77,6 +97,12 @@ class RequestResult:
     @property
     def new_tokens(self) -> int:
         return int(self.tokens.size)
+
+    @property
+    def tokens_per_s(self) -> float:
+        """Decode throughput while the request held a slot (0.0 when the
+        recorded service time is zero — see :func:`safe_rate`)."""
+        return safe_rate(self.new_tokens, self.service_s)
 
     @property
     def sequence(self) -> np.ndarray:

@@ -21,6 +21,31 @@ request solo — scheduling is an invisible throughput optimisation, never
 a semantic one (the losslessness framing of Draft & Verify, arXiv:
 2309.08168, extended to the serving loop).
 
+Two driving modes share the same machinery:
+
+* **batch** — :meth:`Scheduler.run` drains a fixed request list and
+  returns results in request order (``SpecEngine.generate_requests``);
+* **open-loop** — the serving front-end (``repro.serving.server``)
+  :meth:`submit`\\ s requests as they arrive and calls :meth:`tick`
+  once per decode step, interleaving arrival ingestion, deadline
+  shedding (:meth:`shed_pending`) and harvesting forever.
+
+Admission order is a policy: ``"fifo"`` pops pending requests by
+``(priority, arrival)``; ``"edf"`` pops by ``(priority, deadline,
+arrival)`` — earliest-deadline-first within a priority class, which is
+the optimal single-machine policy for deadline hit-rate under overload.
+Both only reorder *admission*: per-request seed streams keep the
+generated tokens invariant to scheduling (asserted per drafter ×
+verifier in tests/test_serving_frontend.py).
+
+Per-request **streaming** rides the harvest machinery: pass
+``on_tokens`` to :meth:`run`/:meth:`tick` and after every step each
+occupied row's newly-committed tokens are forwarded as
+``on_tokens(request_index, np.ndarray)``.  The concatenation of a
+request's deltas is bit-identical to its final ``RequestResult.tokens``
+(committed positions are never rewritten — the same invariant the
+verify-window cache writes rely on).
+
 The scheduler is deliberately array-framework-agnostic: it orchestrates
 via two callables (``admit``, ``step``) and reads the canonical engine
 state schema (``repro.core.spec_engine.init_state``) with
@@ -30,9 +55,10 @@ by any engine that honours the state schema.
 from __future__ import annotations
 
 import heapq
+import math
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -47,6 +73,7 @@ class SlotEvent:
     slot: int
     admit_step: int            # scheduler step count at admission
     harvest_step: int = -1     # step count when the row was harvested
+    streamed: int = 0          # new tokens already forwarded via on_tokens
 
 
 @dataclass
@@ -58,27 +85,59 @@ class Scheduler:
     ``(request.priority, arrival index)`` — lower priority value first,
     FIFO within a class — so an urgent late arrival jumps the queue the
     moment a slot frees, while the all-default case is plain FIFO.
-    Priority only reorders *admission* (it shifts ``queue_s``); per-row
-    seed streams keep every request's tokens independent of when it was
-    admitted.  The ``events`` audit trail records every (request, slot)
-    occupancy with admit/harvest step counts — the property tests assert
-    the scheduler's conservation laws on it (every request served exactly
-    once, no slot double-booked).
+    With ``policy="edf"`` the key becomes ``(priority, deadline,
+    arrival)``: earliest absolute deadline first inside each priority
+    class (requests without a deadline sort last).  Priority and policy
+    only reorder *admission* (they shift ``queue_s``); per-row seed
+    streams keep every request's tokens independent of when it was
+    admitted.
+
+    The ``events`` audit trail records every (request, slot) occupancy
+    with admit/harvest step counts — the property tests assert the
+    scheduler's conservation laws on it (every request served exactly
+    once, no slot double-booked).  A long-lived server bounds its
+    growth: ``max_events`` caps the retained list (oldest dropped
+    first), and ``on_event`` streams each *completed* event (harvest
+    time, so admit/harvest steps are both final) to an observability
+    sink before any trimming — set both and the full trail survives in
+    aggregate form while the in-memory list stays O(cap).  Both default
+    off, keeping test-mode behaviour byte-identical.
+
+    Conservation counters for the open-loop mode: ``submitted`` (all
+    requests ever accepted), ``results`` (request index → result) and
+    ``shed_indices`` (requests dropped by :meth:`shed_pending` before
+    ever holding a slot).  ``completed + shed == submitted`` once idle —
+    no request is silently lost (property-tested).
     """
 
     requests: Sequence[GenerationRequest]
     batch_slots: int
+    policy: str = "fifo"                       # "fifo" | "edf"
+    max_events: Optional[int] = None           # retained-events cap
+    on_event: Optional[Callable[[SlotEvent], None]] = None
     events: List[SlotEvent] = field(default_factory=list)
     steps: int = 0             # decode steps taken by the loop
 
     def __post_init__(self):
         if self.batch_slots < 1:
             raise ValueError("batch_slots must be >= 1")
-        self.requests = list(self.requests)
-        self._pending = [(int(getattr(r, "priority", 0)), i)
-                         for i, r in enumerate(self.requests)]
-        heapq.heapify(self._pending)
+        if self.policy not in ("fifo", "edf"):
+            raise ValueError(f"unknown admission policy {self.policy!r}; "
+                             "expected 'fifo' or 'edf'")
+        if self.max_events is not None and self.max_events < 0:
+            raise ValueError("max_events must be >= 0 (or None)")
+        initial = list(self.requests)
+        self.requests = []
+        self.results: Dict[int, RequestResult] = {}
+        self.shed_indices: List[int] = []
+        self._deadlines: List[float] = []      # absolute, math.inf = none
+        self._arrival_t: List[float] = []
+        self._pending: List[tuple] = []
         self._slots: List[Optional[SlotEvent]] = [None] * self.batch_slots
+        self._admit_t = [0.0] * self.batch_slots
+        now = time.perf_counter()
+        for r in initial:
+            self.submit(r, arrival_t=now)
 
     # ------------------------------------------------------------------
     @property
@@ -86,6 +145,189 @@ class Scheduler:
         return bool(self._pending) or any(
             ev is not None for ev in self._slots)
 
+    @property
+    def submitted(self) -> int:
+        return len(self.requests)
+
+    @property
+    def completed(self) -> int:
+        return len(self.results)
+
+    @property
+    def shed(self) -> int:
+        return len(self.shed_indices)
+
+    def _key(self, i: int) -> tuple:
+        pr = int(getattr(self.requests[i], "priority", 0))
+        if self.policy == "edf":
+            return (pr, self._deadlines[i], i)
+        return (pr, i)
+
+    # ------------------------------------------------------------------
+    def submit(self, request: GenerationRequest, *,
+               arrival_t: Optional[float] = None,
+               deadline: Optional[float] = None) -> int:
+        """Enqueue ``request``; returns its request index.
+
+        ``arrival_t`` stamps when the request arrived (``perf_counter``
+        clock, or the caller's injected clock) — ``queue_s`` is measured
+        from it.  ``deadline`` is the *absolute* deadline on the same
+        clock; when omitted it is derived as ``arrival_t +
+        request.deadline_s`` (``inf`` if the request has no deadline).
+        Safe to call mid-loop between :meth:`tick`\\ s — this is the
+        open-loop ingestion path.
+        """
+        i = len(self.requests)
+        self.requests.append(request)
+        arrival = time.perf_counter() if arrival_t is None else arrival_t
+        if deadline is None:
+            dl = getattr(request, "deadline_s", None)
+            deadline = math.inf if dl is None else arrival + float(dl)
+        self._arrival_t.append(arrival)
+        self._deadlines.append(float(deadline))
+        heapq.heappush(self._pending, self._key(i))
+        return i
+
+    def deadline(self, i: int) -> float:
+        """Absolute deadline of request ``i`` (``inf`` if none)."""
+        return self._deadlines[i]
+
+    def shed_pending(self, now: float, *, slack: float = 0.0) -> List[int]:
+        """Drop still-queued requests whose deadline has (effectively)
+        passed: ``deadline <= now + slack``.
+
+        ``slack`` pre-sheds requests that would miss even if admitted
+        right now (e.g. an estimated minimum service time).  Only
+        *pending* requests are shed — a request already holding a slot
+        runs to completion (its tokens are already partially committed).
+        Returns the shed request indices; they are recorded in
+        ``shed_indices`` so ``completed + shed == submitted`` stays an
+        invariant.  Never called by the batch :meth:`run` path —
+        ``generate_requests`` serves every request.
+        """
+        cut = now + slack
+        keep, out = [], []
+        for key in self._pending:
+            i = key[-1]
+            (out if self._deadlines[i] <= cut else keep).append(key)
+        if out:
+            heapq.heapify(keep)
+            self._pending = keep
+            self.shed_indices.extend(key[-1] for key in out)
+        return [key[-1] for key in out]
+
+    # ------------------------------------------------------------------
+    def _record_admit(self, ev: SlotEvent) -> None:
+        self.events.append(ev)
+        if self.max_events is not None and len(self.events) > self.max_events:
+            del self.events[: len(self.events) - self.max_events]
+
+    def tick(
+        self,
+        state: dict,
+        *,
+        admit: Callable[[dict, int, int], dict],
+        step: Callable[[dict], dict],
+        can_admit: Optional[Callable[[int], bool]] = None,
+        release: Optional[Callable[[dict, int, int], dict]] = None,
+        on_tokens: Optional[Callable[[int, np.ndarray], None]] = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ) -> tuple:
+        """One admission wave + one batch step + harvest.
+
+        The open-loop building block :meth:`run` iterates (hook
+        contracts are documented there).  Additionally:
+
+        * ``on_tokens(request_index, tokens)`` — per-request streaming:
+          called after the step for every occupied row that committed
+          new tokens, with the newly-committed ``np.int32`` slice
+          (clipped to the request's budget).  Deltas concatenate
+          bit-identically to the final ``RequestResult.tokens``.
+        * ``clock`` — timestamp source for queue/service accounting
+          (injectable so load-replay benchmarks can run on a virtual
+          clock).
+
+        Returns ``(state, harvested request indices)``; results land in
+        ``self.results``.
+        """
+        for slot in range(self.batch_slots):
+            if self._slots[slot] is None and self._pending:
+                # head-of-line gate: a denied head blocks the wave so
+                # admission order (and queue_s) stays priority-exact
+                if can_admit is not None \
+                        and not can_admit(self._pending[0][-1]):
+                    break
+                i = heapq.heappop(self._pending)[-1]
+                # stamp before admit(): prefill cost is service, not
+                # queueing
+                self._admit_t[slot] = clock()
+                state = admit(state, slot, i)
+                ev = SlotEvent(request_index=i, slot=slot,
+                               admit_step=self.steps)
+                self._slots[slot] = ev
+                self._record_admit(ev)
+
+        if self._pending and all(ev is None for ev in self._slots):
+            # every slot idle yet the head was denied: it can never
+            # be admitted (e.g. demand larger than the whole pool)
+            raise RuntimeError(
+                f"request {self._pending[0][-1]} rejected by can_admit "
+                "with every slot idle — it can never be served")
+
+        state = step(state)
+        self.steps += 1
+
+        lengths = np.asarray(state["length"])
+        targets = np.asarray(state["target"])
+        occupied = [s for s in range(self.batch_slots)
+                    if self._slots[s] is not None]
+        tokens_np = None                       # fetched lazily, once
+        if on_tokens is not None:
+            for s in occupied:
+                ev = self._slots[s]
+                P = self.requests[ev.request_index].prompt.size
+                committed = int(min(lengths[s], targets[s])) - P
+                if committed > ev.streamed:
+                    if tokens_np is None:
+                        tokens_np = np.asarray(state["tokens"])
+                    on_tokens(ev.request_index,
+                              tokens_np[s, P + ev.streamed:
+                                        P + committed].copy())
+                    ev.streamed = committed
+
+        done = [s for s in occupied if lengths[s] >= targets[s]]
+        harvested: List[int] = []
+        if done:
+            now = clock()
+            if tokens_np is None:
+                tokens_np = np.asarray(state["tokens"])
+            commits = np.asarray(state["stats"]["commits"])
+            row_steps = np.asarray(state["stats"]["row_steps"])
+            for s in done:
+                ev = self._slots[s]
+                ev.harvest_step = self.steps
+                i = ev.request_index
+                r = self.requests[i]
+                P = r.prompt.size
+                self.results[i] = RequestResult(
+                    request=r,
+                    tokens=tokens_np[s, P: P + r.max_new_tokens].copy(),
+                    prompt_len=P,
+                    accept_len=float(commits[s])
+                    / max(int(row_steps[s]), 1),
+                    steps=int(row_steps[s]),
+                    queue_s=self._admit_t[s] - self._arrival_t[i],
+                    service_s=now - self._admit_t[s],
+                )
+                harvested.append(i)
+                if self.on_event is not None:
+                    self.on_event(ev)
+                if release is not None:
+                    state = release(state, s, i)
+                self._slots[s] = None
+        return state, harvested
+
+    # ------------------------------------------------------------------
     def run(
         self,
         state: dict,
@@ -95,6 +337,7 @@ class Scheduler:
         t0: Optional[float] = None,
         can_admit: Optional[Callable[[int], bool]] = None,
         release: Optional[Callable[[dict, int, int], dict]] = None,
+        on_tokens: Optional[Callable[[int, np.ndarray], None]] = None,
     ) -> tuple:
         """Drive the loop until the queue drains.
 
@@ -123,6 +366,8 @@ class Scheduler:
           **and resets the slot's block-table row to scratch** — an idle
           row keeps stepping, and its (discarded) window writes must not
           land in blocks the free list may hand to the next admission.
+        * ``on_tokens(request_index, tokens)`` — optional per-request
+          streaming callback (see :meth:`tick`).
 
         ``t0`` is the arrival timestamp the requests' ``queue_s`` is
         measured from (``time.perf_counter`` clock) — callers serving
@@ -132,71 +377,17 @@ class Scheduler:
         slot is idle (a request that can never be served).  Returns
         ``(state, results)`` with ``results`` in request order.
         """
-        results: List[Optional[RequestResult]] = [None] * len(self.requests)
         t0 = time.perf_counter() if t0 is None else t0
-        admit_t = [time.perf_counter()] * self.batch_slots
+        self._arrival_t = [t0] * len(self.requests)
         # hard safety: every active row commits >= 1 token per step, so
         # the loop is bounded by the total token budget (+ slack per wave)
         max_steps = sum(r.max_new_tokens for r in self.requests) \
             + 8 * (len(self.requests) + self.batch_slots) + 8
 
         while self.busy:
-            for slot in range(self.batch_slots):
-                if self._slots[slot] is None and self._pending:
-                    # head-of-line gate: a denied head blocks the wave so
-                    # admission order (and queue_s) stays priority-exact
-                    if can_admit is not None \
-                            and not can_admit(self._pending[0][1]):
-                        break
-                    _, i = heapq.heappop(self._pending)
-                    # stamp before admit(): prefill cost is service, not
-                    # queueing
-                    admit_t[slot] = time.perf_counter()
-                    state = admit(state, slot, i)
-                    ev = SlotEvent(request_index=i, slot=slot,
-                                   admit_step=self.steps)
-                    self._slots[slot] = ev
-                    self.events.append(ev)
-
-            if self._pending and all(ev is None for ev in self._slots):
-                # every slot idle yet the head was denied: it can never
-                # be admitted (e.g. demand larger than the whole pool)
-                raise RuntimeError(
-                    f"request {self._pending[0][1]} rejected by can_admit "
-                    "with every slot idle — it can never be served")
-
-            state = step(state)
-            self.steps += 1
-
-            lengths = np.asarray(state["length"])
-            targets = np.asarray(state["target"])
-            done = [s for s in range(self.batch_slots)
-                    if self._slots[s] is not None
-                    and lengths[s] >= targets[s]]
-            if done:
-                now = time.perf_counter()
-                tokens = np.asarray(state["tokens"])
-                commits = np.asarray(state["stats"]["commits"])
-                row_steps = np.asarray(state["stats"]["row_steps"])
-                for s in done:
-                    ev = self._slots[s]
-                    ev.harvest_step = self.steps
-                    r = self.requests[ev.request_index]
-                    P = r.prompt.size
-                    results[ev.request_index] = RequestResult(
-                        request=r,
-                        tokens=tokens[s, P: P + r.max_new_tokens].copy(),
-                        prompt_len=P,
-                        accept_len=float(commits[s])
-                        / max(int(row_steps[s]), 1),
-                        steps=int(row_steps[s]),
-                        queue_s=admit_t[s] - t0,
-                        service_s=now - admit_t[s],
-                    )
-                    if release is not None:
-                        state = release(state, s, ev.request_index)
-                    self._slots[s] = None
-
+            state, _ = self.tick(
+                state, admit=admit, step=step, can_admit=can_admit,
+                release=release, on_tokens=on_tokens)
             if self.steps > max_steps:
                 stuck = [ev.request_index for ev in self._slots
                          if ev is not None]
@@ -204,4 +395,5 @@ class Scheduler:
                     f"scheduler failed to drain: {len(self._pending)} "
                     f"pending, slots stuck on requests {stuck} after "
                     f"{self.steps} steps")
-        return state, results
+        return state, [self.results.get(i)
+                       for i in range(len(self.requests))]

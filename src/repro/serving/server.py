@@ -1,0 +1,432 @@
+"""Async streaming serving front-end: SLO-aware admission over the
+continuous-batching scheduler.
+
+The engine below this layer is batch-synchronous: ``generate_requests``
+blocks until a fixed request list drains.  A server faces an *open* loop
+— requests arrive continuously, each with its own latency SLO — and the
+SD survey's (arXiv:2401.07851) deployment lesson applies: realized
+speedup is decided by the serving loop, not the kernel.  This module
+adds that loop as a layer **above** the engine, reusing the scheduler's
+admit → step → harvest machinery unchanged:
+
+* :class:`ServingLoop` — the single-threaded core.  An ingestion queue
+  feeds per-(temperature, lane) :class:`Scheduler` instances
+  (temperature is jit-static, so each lane owns one compiled decode
+  step and one fixed-shape state pytree); :meth:`poll` routes arrivals,
+  sheds queued work whose deadline already passed, and advances each
+  busy lane one decode step, forwarding newly-committed tokens to the
+  per-request :class:`StreamHandle` as they commit.  The clock is
+  injectable, so load-replay benchmarks (``benchmarks/serve_load.py``)
+  drive the identical code path on a deterministic virtual clock.
+* :class:`StreamingServer` — the asynchronous front: a background
+  thread polls the loop while callers ``submit()`` from any thread and
+  consume ``handle.tokens()`` / ``handle.result()`` concurrently.
+
+SLO-aware admission, in order of application:
+
+1. **EDF within priority class** (``admission="edf"``): pending
+   requests pop by ``(priority, absolute deadline, arrival)`` — the
+   optimal single-machine order for deadline hit-rate.  Like priority,
+   it only shifts *when* a request is admitted; per-request seed
+   streams keep its tokens bit-identical to FIFO admission and to solo
+   serving.
+2. **Shedding** (``shed_late=True``): a queued request whose deadline
+   has already passed (plus ``shed_slack_s``) is dropped instead of
+   burning a slot on an answer nobody is waiting for — under overload
+   the queue stays short and on-time work keeps meeting its SLO.
+   Running requests are never shed.  ``completed + shed == submitted``
+   is a checked invariant: nothing is lost silently.
+3. **Degrade tree → chain** (``degrade_on_overload=True``): when the
+   pending backlog exceeds ``overload_factor × batch_slots`` and the
+   engine drafts token *trees*, new arrivals are routed to a chain-
+   drafting lane instead — smaller verify windows, higher batch
+   throughput, lower per-step latency.  At T=0 this is invisible in the
+   tokens (speculative decoding is lossless: any drafter yields the
+   target model's greedy stream); at T>0 the sampled stream may differ
+   from the tree lane's (different PRNG consumption), which is why
+   degrade is opt-in.
+
+Restrictions (v1): contiguous KV layout only (the paged pool's
+reservation accounting is per-batch today) and attention-family archs
+(the lane pads prompts to ``max_prompt_len``; recurrent caches cannot
+right-pad) — both enforced at construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.spec_engine import init_state
+from repro.serving.metrics import ServerMetrics
+from repro.serving.request import GenerationRequest, RequestResult
+from repro.serving.scheduler import Scheduler
+
+_MAX_LANES = 8          # distinct (temperature, degraded) decode loops
+
+
+@dataclass(frozen=True)
+class ServerConfig:
+    """Serving front-end policy knobs (engine knobs live in SpecConfig)."""
+
+    batch_slots: int = 4               # decode rows per lane
+    max_prompt_len: int = 64           # admission caps: they fix the
+    max_new_tokens: int = 64           # lane's jit-static buffer sizes
+    admission: str = "edf"             # "edf" | "fifo"
+    shed_late: bool = True             # drop queued past-deadline work
+    shed_slack_s: float = 0.0          # pre-shed margin (est. min service)
+    degrade_on_overload: bool = False  # tree -> chain lane under pressure
+    degrade_drafter: str = "ngram"     # chain drafter for the degraded lane
+    overload_factor: float = 2.0       # pending > factor*slots = overload
+    max_events: Optional[int] = 1024   # scheduler audit-trail cap per lane
+
+    def __post_init__(self):
+        if self.admission not in ("fifo", "edf"):
+            raise ValueError(f"unknown admission {self.admission!r}")
+        if self.batch_slots < 1:
+            raise ValueError("batch_slots must be >= 1")
+
+
+_EOS = None                            # stream terminator sentinel
+
+
+class StreamHandle:
+    """Caller-side view of one in-flight request.
+
+    * :meth:`tokens` — blocking iterator over newly-committed token
+      deltas (``np.int32`` arrays); ends when the request finishes or is
+      shed.  Safe to consume from a different thread than the server's.
+    * :attr:`chunks` — the deltas accumulated so far (non-blocking; the
+      inline/virtual-clock driver reads this after :meth:`ServingLoop.
+      drain`).  ``np.concatenate(chunks)`` is bit-identical to
+      ``result().tokens`` — the streaming contract.
+    * :meth:`result` — blocks until completion; returns the
+      :class:`RequestResult`, or ``None`` if the request was shed.
+    * :attr:`status` — ``queued | running | done | shed``.
+    """
+
+    def __init__(self, rid: int, request: GenerationRequest,
+                 submit_t: float, deadline_t: Optional[float]):
+        self.rid = rid
+        self.request = request
+        self.submit_t = submit_t
+        self.deadline_t = deadline_t
+        self.status = "queued"
+        self.degraded = False
+        self.chunks: List[np.ndarray] = []
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._done = threading.Event()
+        self._result: Optional[RequestResult] = None
+
+    def tokens(self):
+        while True:
+            item = self._q.get()
+            if item is _EOS:
+                return
+            yield item
+
+    def result(self, timeout: Optional[float] = None
+               ) -> Optional[RequestResult]:
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"request {self.rid} still {self.status} after {timeout}s")
+        return self._result
+
+    def collected(self) -> np.ndarray:
+        """All streamed tokens so far, concatenated (non-blocking)."""
+        if not self.chunks:
+            return np.zeros((0,), np.int32)
+        return np.concatenate(self.chunks)
+
+    # loop-side -------------------------------------------------------
+    def _emit(self, toks: np.ndarray) -> None:
+        self.chunks.append(toks)
+        self._q.put(toks)
+
+    def _finish(self, result: Optional[RequestResult], status: str) -> None:
+        self._result = result
+        self.status = status
+        self._q.put(_EOS)
+        self._done.set()
+
+
+class _Lane:
+    """One compiled decode loop: a Scheduler + fixed-shape state pytree
+    for a given (temperature, degraded?) combination."""
+
+    def __init__(self, loop: "ServingLoop", engine, temperature: float):
+        cfg = loop.cfg
+        self.engine = engine
+        self.params = engine._prepare_cached(loop._raw_params)
+        self.step, self.drafter = engine._step_for_temperature(temperature)
+        self.buf = (cfg.max_prompt_len + cfg.max_new_tokens
+                    + self.drafter.gamma + 2)
+        # one padded prompt length per lane => admission prefill compiles
+        # once; requests shorter than the cap are right-padded exactly as
+        # generate_requests pads a group to its maximum
+        self.pmax = cfg.max_prompt_len
+        slots = cfg.batch_slots
+        self.sched = Scheduler(
+            [], slots, policy=cfg.admission, max_events=cfg.max_events,
+            on_event=loop.metrics.on_slot_event)
+        self.state = init_state(
+            engine.model, slots, self.buf,
+            jnp.zeros((slots, 2), jnp.uint32),
+            drafter_state=self.drafter.alloc_state(
+                engine.model, self.params, slots, self.buf),
+            target=jnp.zeros((slots,), jnp.int32))
+        self.handles: Dict[int, StreamHandle] = {}   # lane index -> handle
+
+    def admit(self, state: dict, slot: int, i: int) -> dict:
+        h = self.handles[i]
+        h.status = "running"
+        return self.engine.prefill_into_slot(
+            self.params, state, slot, h.request,
+            pmax=self.pmax, drafter=self.drafter)
+
+    def step_fn(self, state: dict) -> dict:
+        return self.step(self.params, state)
+
+
+class ServingLoop:
+    """Single-threaded serving core with an injectable clock.
+
+    ``submit()`` is thread-safe (arrivals land on an ingestion queue);
+    ``poll()`` must be called from one driving thread — either the
+    :class:`StreamingServer` wrapper's background thread (real clock) or
+    a benchmark's replay loop (virtual clock).
+    """
+
+    def __init__(self, engine, params, cfg: ServerConfig = ServerConfig(),
+                 *, clock=time.perf_counter,
+                 metrics: Optional[ServerMetrics] = None):
+        if engine.scfg.kv_layout != "contiguous":
+            raise ValueError(
+                "serving front-end v1 drives the contiguous KV layout; "
+                "paged admission needs per-batch pool planning "
+                "(ROADMAP follow-up)")
+        if engine.model.cfg.arch_type in ("ssm", "hybrid"):
+            raise ValueError(
+                f"{engine.model.cfg.arch_type!r} caches are recurrent: "
+                "the serving lane right-pads prompts to max_prompt_len, "
+                "which recurrent state cannot mask")
+        self.engine = engine
+        self.cfg = cfg
+        self.clock = clock
+        self.metrics = metrics if metrics is not None else ServerMetrics()
+        self._raw_params = params
+        self._ingress: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._lanes: Dict[Tuple[float, bool], _Lane] = {}
+        self._rid = 0
+        self._rid_lock = threading.Lock()
+        self.total_steps = 0
+        # degraded lane: only meaningful when the primary drafter drafts
+        # trees (template attr) — chain drafting IS the degraded mode
+        self._degraded_engine = None
+        if cfg.degrade_on_overload \
+                and getattr(engine.drafter, "template", None) is not None:
+            from repro.serving.engine import SpecEngine
+            dscfg = dataclasses.replace(
+                engine.scfg, tree_branches=None, drafter=cfg.degrade_drafter)
+            self._degraded_engine = SpecEngine(
+                engine.model, dscfg, drafter=cfg.degrade_drafter,
+                verifier=engine.verifier)
+
+    # ------------------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return not self._ingress.empty() or any(
+            lane.sched.busy for lane in self._lanes.values())
+
+    @property
+    def pending(self) -> int:
+        return sum(len(lane.sched._pending) for lane in self._lanes.values())
+
+    def submit(self, request: GenerationRequest) -> StreamHandle:
+        """Thread-safe ingestion; returns the request's stream handle."""
+        if request.prompt.size > self.cfg.max_prompt_len:
+            raise ValueError(
+                f"prompt length {request.prompt.size} exceeds the server's "
+                f"max_prompt_len={self.cfg.max_prompt_len}")
+        if request.max_new_tokens > self.cfg.max_new_tokens:
+            raise ValueError(
+                f"max_new_tokens {request.max_new_tokens} exceeds the "
+                f"server's cap {self.cfg.max_new_tokens}")
+        now = self.clock()
+        with self._rid_lock:
+            rid = self._rid
+            self._rid += 1
+        deadline_t = (None if request.deadline_s is None
+                      else now + request.deadline_s)
+        handle = StreamHandle(rid, request, now, deadline_t)
+        self._ingress.put(handle)
+        return handle
+
+    # ------------------------------------------------------------------
+    def _overloaded(self) -> bool:
+        return self.pending >= self.cfg.overload_factor * self.cfg.batch_slots
+
+    def _lane(self, temperature: float, degraded: bool) -> _Lane:
+        key = (temperature, degraded)
+        lane = self._lanes.get(key)
+        if lane is None:
+            if len(self._lanes) >= _MAX_LANES:
+                raise RuntimeError(
+                    f"more than {_MAX_LANES} distinct (temperature, lane) "
+                    "combinations — each pins a compiled decode step")
+            engine = (self._degraded_engine if degraded else self.engine)
+            lane = _Lane(self, engine, temperature)
+            self._lanes[key] = lane
+        return lane
+
+    def _route_ingress(self) -> int:
+        routed = 0
+        while True:
+            try:
+                handle = self._ingress.get_nowait()
+            except queue.Empty:
+                return routed
+            degraded = (self._degraded_engine is not None
+                        and self._overloaded())
+            handle.degraded = degraded
+            t = (self.engine.scfg.temperature
+                 if handle.request.temperature is None
+                 else float(handle.request.temperature))
+            lane = self._lane(t, degraded)
+            idx = lane.sched.submit(
+                handle.request, arrival_t=handle.submit_t,
+                deadline=handle.deadline_t)
+            lane.handles[idx] = handle
+            self.metrics.on_submit(handle.rid, handle.submit_t,
+                                   deadline_t=handle.deadline_t,
+                                   degraded=degraded)
+            routed += 1
+
+    def poll(self) -> bool:
+        """One serving iteration: route arrivals, shed late queued work,
+        advance every busy lane one decode step (streaming tokens as
+        they commit), harvest.  Returns True if any lane did work."""
+        self._route_ingress()
+        worked = False
+        now = self.clock()
+        for lane in self._lanes.values():
+            if self.cfg.shed_late:
+                for i in lane.sched.shed_pending(
+                        now, slack=self.cfg.shed_slack_s):
+                    h = lane.handles.pop(i)
+                    self.metrics.on_shed(h.rid, now)
+                    h._finish(None, "shed")
+            if not lane.sched.busy:
+                continue
+            worked = True
+
+            def on_tokens(i, toks, _lane=lane):
+                h = _lane.handles[i]
+                t_emit = self.clock()
+                h._emit(toks)
+                self.metrics.on_tokens(h.rid, t_emit, toks.size)
+
+            def admit(st, slot, i, _lane=lane):
+                st = _lane.admit(st, slot, i)
+                self.metrics.on_admit(_lane.handles[i].rid, self.clock())
+                return st
+
+            lane.state, harvested = lane.sched.tick(
+                lane.state, admit=admit, step=lane.step_fn,
+                on_tokens=on_tokens, clock=self.clock)
+            self.total_steps += 1
+            busy = sum(ev is not None for ev in lane.sched._slots)
+            self.metrics.on_step(self.clock(), busy, lane.sched.batch_slots)
+            for i in harvested:
+                h = lane.handles.pop(i)
+                self.metrics.on_finish(h.rid, self.clock())
+                h._finish(lane.sched.results[i], "done")
+        return worked
+
+    def drain(self, max_polls: int = 10_000_000) -> None:
+        """Poll until every submitted request is finished or shed."""
+        polls = 0
+        while self.busy:
+            self.poll()
+            polls += 1
+            if polls > max_polls:
+                raise RuntimeError("ServingLoop.drain: poll budget exhausted")
+
+
+class StreamingServer:
+    """Background-thread front over :class:`ServingLoop`.
+
+    ::
+
+        server = StreamingServer(engine, params, ServerConfig(...))
+        with server:                       # starts the serving thread
+            h = server.submit(GenerationRequest(prompt, 32, deadline_s=2.0))
+            for delta in h.tokens():       # per-token streaming
+                emit(delta)
+            result = h.result()            # None if the request was shed
+        print(server.metrics.summary())
+    """
+
+    def __init__(self, engine, params, cfg: ServerConfig = ServerConfig(),
+                 *, poll_idle_s: float = 0.002):
+        self.loop = ServingLoop(engine, params, cfg)
+        self.poll_idle_s = poll_idle_s
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def metrics(self) -> ServerMetrics:
+        return self.loop.metrics
+
+    def start(self) -> "StreamingServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._run, name="repro-serving-loop", daemon=True)
+        self._thread.start()
+        return self
+
+    def submit(self, request: GenerationRequest) -> StreamHandle:
+        if self._thread is None:
+            raise RuntimeError("server not started (use `with server:` "
+                               "or server.start())")
+        handle = self.loop.submit(request)
+        self._wake.set()
+        return handle
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            if not self.loop.poll():
+                # idle: sleep until a submit wakes us (bounded, so
+                # deadline shedding still fires for queued work)
+                self._wake.wait(self.poll_idle_s)
+                self._wake.clear()
+
+    def stop(self, *, drain: bool = True, timeout: float = 600.0) -> None:
+        if self._thread is None:
+            return
+        if drain:
+            t0 = time.monotonic()
+            while self.loop.busy:
+                if time.monotonic() - t0 > timeout:
+                    raise RuntimeError("StreamingServer.stop: drain timeout")
+                time.sleep(self.poll_idle_s)
+        self._stop.set()
+        self._wake.set()
+        self._thread.join(timeout=timeout)
+        self._thread = None
+
+    def __enter__(self) -> "StreamingServer":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop(drain=exc_type is None)

@@ -1,0 +1,569 @@
+"""Serving front-end: per-token streaming, SLO-aware admission, shedding.
+
+Three layers under test:
+
+* **scheduler** (model-free) — EDF admission order, deadline shedding,
+  the ``completed + shed == submitted`` conservation property, and the
+  bounded-events audit trail;
+* **engine** — the streaming contract (per-request deltas concatenate
+  bit-identically to the blocking result) for every drafter × verifier,
+  at T=0 and T>0, and EDF-vs-FIFO token invariance;
+* **server** — the ServingLoop on a virtual clock (deterministic
+  shedding, degrade-to-chain) and the threaded StreamingServer
+  end-to-end.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.core import SpecConfig
+from repro.models import Model
+from repro.serving import (
+    GenerationRequest,
+    GenResult,
+    RequestResult,
+    RequestTimeline,
+    ServerConfig,
+    ServerMetrics,
+    ServingLoop,
+    SpecEngine,
+    StreamingServer,
+    safe_rate,
+)
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def model():
+    return Model(get_config("smollm-135m").reduced())
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+def _requests(cfg, *, seed=3, spec=((5, 6, 11), (4, 9, 22), (3, 7, 33),
+                                    (2, 5, 44))):
+    rng = np.random.default_rng(seed)
+    pat = rng.integers(0, cfg.vocab_size, 6)
+    return [GenerationRequest(np.tile(pat, k), max_new_tokens=n, seed=s)
+            for k, n, s in spec]
+
+
+# ---------------------------------------------------------------------------
+# Rate guards (satellite: zero wall/service time must not crash or spike)
+# ---------------------------------------------------------------------------
+
+def test_safe_rate_guards():
+    assert safe_rate(10, 2.0) == 5.0
+    assert safe_rate(10, 0.0) == 0.0
+    assert safe_rate(10, -1.0) == 0.0
+    assert safe_rate(0, 0.0) == 0.0
+
+
+def test_gen_result_rate_zero_wall():
+    r = GenResult(tokens=jnp.zeros((1, 4), jnp.int32),
+                  lengths=jnp.ones((1,), jnp.int32),
+                  mean_accept_len=1.0, steps=1, wall_s=0.0, new_tokens=4)
+    assert r.tokens_per_s == 0.0
+
+
+def test_request_result_rate_zero_service():
+    req = GenerationRequest(np.arange(4), max_new_tokens=3)
+    r = RequestResult(request=req, tokens=np.ones((3,), np.int32),
+                      prompt_len=4, accept_len=1.0, steps=3,
+                      queue_s=0.0, service_s=0.0)
+    assert r.tokens_per_s == 0.0
+    assert r.wall_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Model-free open loop: EDF order, shedding, conservation, events cap
+# ---------------------------------------------------------------------------
+
+def _open_loop(arrivals, batch_slots, *, policy="edf", shed_at=None,
+               accept_seed=0):
+    """Drive Scheduler open-loop with a synthetic decode step on a
+    virtual clock.  ``arrivals``: (budget, deadline_abs|None) per
+    request, all submitted at t=0.  ``shed_at``: virtual times at which
+    shed_pending fires.  Returns the scheduler."""
+    reqs = [GenerationRequest(np.arange(4) % 7, max_new_tokens=b, seed=i)
+            for i, (b, _) in enumerate(arrivals)]
+    buf = max(r.prompt.size + r.max_new_tokens for r in reqs) + 4
+    state = {
+        "tokens": np.zeros((batch_slots, buf), np.int32),
+        "length": np.zeros((batch_slots,), np.int32),
+        "target": np.zeros((batch_slots,), np.int32),
+        "stats": {"commits": np.zeros((batch_slots,), np.int32),
+                  "row_steps": np.zeros((batch_slots,), np.int32)},
+    }
+    rng = np.random.default_rng(accept_seed)
+
+    def admit(st, slot, i):
+        r = reqs[i]
+        st["tokens"][slot, : r.prompt.size] = r.prompt
+        st["length"][slot] = r.prompt.size
+        st["target"][slot] = r.prompt.size + r.max_new_tokens
+        st["stats"]["commits"][slot] = 0
+        st["stats"]["row_steps"][slot] = 0
+        return st
+
+    def step(st):
+        for s in range(batch_slots):
+            if st["length"][s] < st["target"][s]:
+                n = min(int(rng.integers(1, 4)),
+                        int(st["target"][s] - st["length"][s]))
+                pos = int(st["length"][s])
+                st["tokens"][s, pos: pos + n] = 1 + (s % 5)
+                st["length"][s] += n
+                st["stats"]["commits"][s] += n
+                st["stats"]["row_steps"][s] += 1
+        return st
+
+    sched = Scheduler([], batch_slots, policy=policy)
+    for r, (_, dl) in zip(reqs, arrivals):
+        sched.submit(r, arrival_t=0.0, deadline=dl)
+    t = 0.0
+    shed_at = sorted(shed_at or [])
+    while sched.busy:
+        while shed_at and shed_at[0] <= t:
+            sched.shed_pending(shed_at.pop(0))
+        state, _ = sched.tick(state, admit=admit, step=step, clock=lambda: t)
+        t += 1.0
+        assert sched.steps < 10_000
+    return sched
+
+
+def test_edf_admission_order():
+    """One slot, all arrivals at t=0: EDF admits by absolute deadline,
+    deadline-free requests (inf) last, FIFO tiebreak."""
+    sched = _open_loop([(2, 50.0), (2, 10.0), (2, None), (2, 30.0),
+                        (2, 10.0)], batch_slots=1, policy="edf")
+    order = [ev.request_index for ev in
+             sorted(sched.events, key=lambda e: e.admit_step)]
+    assert order == [1, 4, 3, 0, 2]
+    assert sched.completed == sched.submitted
+
+
+def test_fifo_ignores_deadlines():
+    sched = _open_loop([(2, 50.0), (2, 10.0), (2, None), (2, 30.0)],
+                       batch_slots=1, policy="fifo")
+    order = [ev.request_index for ev in
+             sorted(sched.events, key=lambda e: e.admit_step)]
+    assert order == [0, 1, 2, 3]
+
+
+def test_shed_pending_drops_only_queued_late_work():
+    """Shedding drops queued requests whose deadline passed; a running
+    request is never shed even past its own deadline; future-deadline
+    requests survive; conservation holds."""
+    # EDF through 1 slot: request 0 (earliest deadline, 12-token budget
+    # -> >= 4 steps) is admitted at t=0 and still *running* at t=3
+    sched = _open_loop([(12, 1.0), (2, 2.0), (2, 100.0)], batch_slots=1,
+                       shed_at=[3.0])
+    # request 0 running at t=3 (its passed deadline is irrelevant);
+    # request 1's deadline 2.0 <= 3 while queued -> shed; request 2 served
+    assert sched.shed_indices == [1]
+    assert sorted(sched.results) == [0, 2]
+    assert sched.completed + sched.shed == sched.submitted
+
+
+def test_shed_slack_presheds():
+    s0 = Scheduler([], 1)
+    i = s0.submit(GenerationRequest(np.arange(4), 2), arrival_t=0.0,
+                  deadline=10.0)
+    assert s0.shed_pending(5.0) == []            # deadline not yet passed
+    assert s0.shed_pending(5.0, slack=6.0) == [i]  # would miss anyway
+    assert s0.shed == 1 and s0.submitted == 1 and not s0.busy
+
+
+@given(
+    mix=st.lists(
+        st.tuples(st.integers(min_value=1, max_value=12),      # budget
+                  st.integers(min_value=-5, max_value=40)),    # deadline
+        min_size=1, max_size=16),
+    batch_slots=st.integers(min_value=1, max_value=4),
+    policy=st.sampled_from(["fifo", "edf"]),
+    accept_seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+@settings(max_examples=40, deadline=None)
+def test_conservation_with_shedding_property(mix, batch_slots, policy,
+                                             accept_seed):
+    """Property: for ANY mix of budgets and deadlines (some already in
+    the past), with shedding firing throughout the run, every request is
+    either completed or shed — exactly once, never both."""
+    arrivals = [(b, float(d)) for b, d in mix]
+    sched = _open_loop(arrivals, batch_slots, policy=policy,
+                       shed_at=[0.0, 2.0, 5.0, 9.0], accept_seed=accept_seed)
+    assert sched.completed + sched.shed == sched.submitted
+    assert set(sched.results) | set(sched.shed_indices) \
+        == set(range(sched.submitted))
+    assert set(sched.results) & set(sched.shed_indices) == set()
+    # shed requests never held a slot
+    served = {ev.request_index for ev in sched.events}
+    assert served == set(sched.results)
+
+
+def test_conservation_with_shedding_random_mixes():
+    """Seeded fallback for the property above: always runs, even where
+    hypothesis is unavailable (offline containers)."""
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        n = int(rng.integers(1, 16))
+        arrivals = [(int(rng.integers(1, 12)), float(rng.integers(-5, 40)))
+                    for _ in range(n)]
+        sched = _open_loop(arrivals, int(rng.integers(1, 5)),
+                           policy=("fifo", "edf")[trial % 2],
+                           shed_at=[0.0, 2.0, 5.0, 9.0],
+                           accept_seed=trial)
+        assert sched.completed + sched.shed == sched.submitted
+        assert set(sched.results) | set(sched.shed_indices) \
+            == set(range(sched.submitted))
+        assert set(sched.results) & set(sched.shed_indices) == set()
+
+
+def test_events_cap_and_on_event_stream():
+    """max_events bounds the retained audit trail (oldest dropped) while
+    on_event still sees every completed occupancy."""
+    seen = []
+    reqs = [GenerationRequest(np.arange(4), 2, seed=i) for i in range(8)]
+    buf = 4 + 2 + 4
+    state = {
+        "tokens": np.zeros((1, buf), np.int32),
+        "length": np.zeros((1,), np.int32),
+        "target": np.zeros((1,), np.int32),
+        "stats": {"commits": np.zeros((1,), np.int32),
+                  "row_steps": np.zeros((1,), np.int32)},
+    }
+
+    def admit(st, slot, i):
+        st["length"][slot] = 4
+        st["target"][slot] = 6
+        return st
+
+    def step(st):
+        st["length"][0] = min(int(st["length"][0]) + 1,
+                              int(st["target"][0]))
+        st["stats"]["commits"][0] += 1
+        st["stats"]["row_steps"][0] += 1
+        return st
+
+    sched = Scheduler(reqs, 1, max_events=3, on_event=seen.append)
+    sched.run(state, admit=admit, step=step)
+    assert len(sched.events) == 3                 # capped, oldest dropped
+    assert [ev.request_index for ev in sched.events] == [5, 6, 7]
+    assert [ev.request_index for ev in seen] == list(range(8))
+    assert all(ev.harvest_step > ev.admit_step for ev in seen)
+
+
+def test_events_uncapped_by_default():
+    sched = _open_loop([(2, None)] * 6, batch_slots=2)
+    assert len(sched.events) == 6
+
+
+def test_scheduler_rejects_bad_policy():
+    with pytest.raises(ValueError, match="policy"):
+        Scheduler([], 1, policy="sjf")
+
+
+# ---------------------------------------------------------------------------
+# Engine-level streaming contract: every drafter x verifier, T=0 and T>0
+# ---------------------------------------------------------------------------
+
+def _assert_streaming_matches(eng, params, reqs, *, admission="fifo"):
+    chunks = {i: [] for i in range(len(reqs))}
+    results = eng.generate_requests(
+        params, reqs, batch_slots=2, admission=admission,
+        on_tokens=lambda i, toks: chunks[i].append(toks))
+    for i, res in enumerate(results):
+        streamed = np.concatenate(chunks[i])
+        np.testing.assert_array_equal(streamed, res.tokens)
+        assert streamed.size == reqs[i].max_new_tokens
+    return results
+
+
+@pytest.mark.parametrize("drafter,verifier", [
+    ("ngram", "bf16"), ("ngram", "w8a8"),
+    ("vanilla", "bf16"), ("vanilla", "w8a8"),
+    ("pruned", "bf16"), ("pruned", "w8a8"),
+    ("ngram-tree", "bf16"), ("ngram-tree", "w8a8"),
+])
+def test_streaming_concat_equals_result_T0(model, params, drafter, verifier):
+    """The streaming contract: per-request on_tokens deltas concatenate
+    bit-identically to the blocking RequestResult.tokens — for every
+    registered drafter x verifier pair at T=0."""
+    branches = (2, 1, 1) if drafter.endswith("-tree") else None
+    scfg = SpecConfig(temperature=0.0, gamma=3, pruned_retention=0.5,
+                      tree_branches=branches)
+    eng = SpecEngine(model, scfg, drafter=drafter, verifier=verifier)
+    _assert_streaming_matches(eng, params, _requests(model.cfg))
+
+
+@pytest.mark.parametrize("drafter,temperature", [
+    ("ngram", 1.0), ("pruned", 0.7),
+])
+def test_streaming_concat_equals_result_sampling(model, params, drafter,
+                                                 temperature):
+    """Streaming must not perturb the per-request PRNG streams: the
+    deltas still concatenate to the sampled blocking result at T>0."""
+    scfg = SpecConfig(temperature=temperature, gamma=3, pruned_retention=0.5)
+    eng = SpecEngine(model, scfg, drafter=drafter, verifier="bf16")
+    _assert_streaming_matches(eng, params, _requests(model.cfg))
+
+
+def test_edf_admission_never_changes_tokens(model, params):
+    """EDF reorders admission only: with deadlines forcing a different
+    admission order, every request's tokens stay bit-identical to the
+    FIFO run (and the streaming contract holds under EDF too)."""
+    scfg = SpecConfig(temperature=0.0, gamma=3)
+    eng = SpecEngine(model, scfg, verifier="bf16")
+    base = _requests(model.cfg)
+    # reversed-urgency deadlines: EDF admits in reverse arrival order
+    with_dl = [GenerationRequest(r.prompt, r.max_new_tokens, seed=r.seed,
+                                 deadline_s=100.0 - 10.0 * i)
+               for i, r in enumerate(base)]
+    fifo = eng.generate_requests(params, base, batch_slots=2)
+    edf = _assert_streaming_matches(eng, params, with_dl, admission="edf")
+    for a, b in zip(fifo, edf):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    # and at T>0 the per-request seed streams carry the invariance
+    eng_t = SpecEngine(model, SpecConfig(temperature=1.0, gamma=3),
+                       verifier="bf16")
+    fifo_t = eng_t.generate_requests(params, base, batch_slots=2)
+    edf_t = eng_t.generate_requests(params, with_dl, batch_slots=2,
+                                    admission="edf")
+    for a, b in zip(fifo_t, edf_t):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_generate_requests_rejects_bad_admission(model, params):
+    eng = SpecEngine(model, SpecConfig(temperature=0.0, gamma=3),
+                     verifier="bf16")
+    with pytest.raises(ValueError, match="policy"):
+        eng.generate_requests(params, _requests(model.cfg),
+                              admission="lifo")
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+def test_timeline_ttft_and_itl():
+    tl = RequestTimeline(rid=0, arrival_t=10.0, deadline_t=20.0)
+    tl.emits = [(12.0, 1), (13.0, 2), (13.5, 1)]
+    assert tl.ttft == pytest.approx(2.0)
+    # the 2-token delta's 1.0s gap is split per token; then one 0.5s gap
+    assert tl.itl == pytest.approx([0.5, 0.5, 0.5])
+    tl.finish_t, tl.status = 13.5, "done"
+    assert tl.deadline_hit is True
+    tl.finish_t = 21.0
+    assert tl.deadline_hit is False
+
+
+def test_timeline_shed_counts_as_miss():
+    tl = RequestTimeline(rid=0, arrival_t=0.0, deadline_t=5.0)
+    tl.status = "shed"
+    tl.finish_t = 1.0
+    assert tl.deadline_hit is False
+    assert RequestTimeline(rid=1, arrival_t=0.0).deadline_hit is None
+
+
+def test_metrics_conservation_and_summary(tmp_path):
+    m = ServerMetrics()
+    m.on_submit(0, 0.0, deadline_t=10.0)
+    m.on_submit(1, 0.5, deadline_t=1.0)
+    m.on_admit(0, 1.0)
+    m.on_tokens(0, 2.0, 3)
+    m.on_step(2.0, 1, 4)
+    m.on_finish(0, 3.0)
+    with pytest.raises(AssertionError, match="conservation"):
+        m.check_conservation()
+    m.on_shed(1, 3.0)
+    m.check_conservation()
+    s = m.summary()
+    assert s["counters"]["submitted"] == 2
+    assert s["counters"]["completed"] == 1
+    assert s["counters"]["shed"] == 1
+    assert s["occupancy"]["mean"] == 1.0 and s["occupancy"]["slots"] == 4
+    assert s["latency"]["ttft_s"]["n"] == 1
+    assert s["latency"]["queue_s"]["p50"] == pytest.approx(1.0)
+    assert s["deadlines"] == {"with_deadline": 2, "hits": 1,
+                              "hit_rate": 0.5}
+    # JSON round-trip (the schema documented in docs/decoding_api.md)
+    path = m.save(str(tmp_path / "metrics.json"))
+    assert json.load(open(path))["counters"]["submitted"] == 2
+
+
+def test_metrics_without_timelines_keeps_aggregates():
+    m = ServerMetrics(keep_timelines=False)
+    for rid in range(3):
+        m.on_submit(rid, 0.0, deadline_t=4.0)
+        m.on_admit(rid, 1.0)
+        m.on_tokens(rid, 2.0, 1)
+        m.on_finish(rid, 3.0)
+    assert m.timelines == {}
+    s = m.summary(include_requests=True)
+    assert "requests" not in s
+    assert s["latency"]["ttft_s"]["n"] == 3
+    assert s["deadlines"]["hit_rate"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# ServingLoop on a virtual clock (deterministic end-to-end)
+# ---------------------------------------------------------------------------
+
+def _loop_engine(model):
+    return SpecEngine(model, SpecConfig(temperature=0.0, gamma=3),
+                      drafter="ngram", verifier="bf16")
+
+
+def _drive(loop, clock, step_cost=0.25, max_polls=2000):
+    polls = 0
+    while loop.busy:
+        before = loop.total_steps
+        loop.poll()
+        clock[0] += (loop.total_steps - before) * step_cost
+        polls += 1
+        assert polls < max_polls
+    return loop
+
+
+def test_serving_loop_streams_and_conserves(model, params):
+    """Virtual-clock ServingLoop: all requests served, per-handle deltas
+    concatenate to the result tokens, conservation checked, and the
+    tokens match the batch engine path bit-for-bit."""
+    eng = _loop_engine(model)
+    reqs = _requests(model.cfg)
+    clock = [0.0]
+    loop = ServingLoop(eng, params,
+                       ServerConfig(batch_slots=2, max_prompt_len=40,
+                                    max_new_tokens=16, admission="edf"),
+                       clock=lambda: clock[0])
+    handles = [loop.submit(r) for r in reqs]
+    _drive(loop, clock)
+    loop.metrics.check_conservation()
+    expected = eng.generate_requests(params, reqs, batch_slots=2)
+    for h, res in zip(handles, expected):
+        assert h.status == "done"
+        got = h.result(timeout=0.0)
+        np.testing.assert_array_equal(got.tokens, res.tokens)
+        np.testing.assert_array_equal(h.collected(), got.tokens)
+    s = loop.metrics.summary()
+    assert s["counters"]["completed"] == len(reqs)
+    assert s["counters"]["stream_tokens"] == sum(
+        r.max_new_tokens for r in reqs)
+    assert s["occupancy"]["max"] <= 2
+
+
+def test_serving_loop_sheds_hopeless_deadline(model, params):
+    """A queued request whose deadline passes before a slot frees is
+    shed (handle resolves to None), on-time work still completes, and
+    completed + shed == submitted."""
+    eng = _loop_engine(model)
+    cfg = model.cfg
+    rng = np.random.default_rng(3)
+    pat = rng.integers(0, cfg.vocab_size, 6)
+    clock = [0.0]
+    loop = ServingLoop(eng, params,
+                       ServerConfig(batch_slots=1, max_prompt_len=40,
+                                    max_new_tokens=16, admission="edf",
+                                    shed_late=True),
+                       clock=lambda: clock[0])
+    # slot-hogging request admitted first (one poll), THEN the
+    # tight-deadline arrival queues behind it — its 0.5s budget expires
+    # long before the 16-token occupant frees the slot
+    h_long = loop.submit(GenerationRequest(np.tile(pat, 4), 16, seed=1))
+    before = loop.total_steps
+    loop.poll()
+    clock[0] += (loop.total_steps - before) * 0.25
+    h_tight = loop.submit(GenerationRequest(np.tile(pat, 4), 4, seed=2,
+                                            deadline_s=0.5))
+    _drive(loop, clock)          # 0.25 virtual s per step >> 0.5s deadline
+    loop.metrics.check_conservation()
+    assert h_long.status == "done" and h_long.result(0.0) is not None
+    assert h_tight.status == "shed" and h_tight.result(0.0) is None
+    assert h_tight.collected().size == 0
+    c = loop.metrics.counters
+    assert (c["submitted"], c["completed"], c["shed"]) == (2, 1, 1)
+    assert loop.metrics.deadline_hit_rate == 0.0
+
+
+def test_serving_loop_degrade_tree_to_chain_T0(model, params):
+    """Under overload with degrade_on_overload, arrivals route to the
+    chain-drafter lane; at T=0 every request's tokens stay bit-identical
+    to the un-degraded tree engine (speculative decoding is lossless)."""
+    scfg = SpecConfig(temperature=0.0, gamma=3, tree_branches=(2, 1, 1))
+    eng = SpecEngine(model, scfg, drafter="ngram-tree", verifier="bf16")
+    reqs = _requests(model.cfg, spec=((5, 6, 11), (4, 5, 22), (3, 4, 33),
+                                      (2, 5, 44), (4, 4, 55), (3, 6, 66)))
+    clock = [0.0]
+    loop = ServingLoop(eng, params,
+                       ServerConfig(batch_slots=1, max_prompt_len=40,
+                                    max_new_tokens=8,
+                                    degrade_on_overload=True,
+                                    overload_factor=1.0),
+                       clock=lambda: clock[0])
+    handles = [loop.submit(r) for r in reqs]
+    _drive(loop, clock)
+    loop.metrics.check_conservation()
+    assert loop.metrics.counters["degraded"] > 0   # overload actually hit
+    expected = eng.generate_requests(params, reqs, batch_slots=1)
+    for h, res in zip(handles, expected):
+        np.testing.assert_array_equal(h.result(0.0).tokens, res.tokens)
+
+
+def test_serving_loop_rejects_oversized_request(model, params):
+    loop = ServingLoop(_loop_engine(model), params,
+                       ServerConfig(batch_slots=1, max_prompt_len=8,
+                                    max_new_tokens=4))
+    with pytest.raises(ValueError, match="max_prompt_len"):
+        loop.submit(GenerationRequest(np.arange(12), 2))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        loop.submit(GenerationRequest(np.arange(4), 8))
+
+
+def test_serving_loop_rejects_paged_layout(model, params):
+    eng = SpecEngine(model, SpecConfig(temperature=0.0, gamma=3,
+                                       kv_layout="paged"),
+                     verifier="bf16")
+    with pytest.raises(ValueError, match="contiguous"):
+        ServingLoop(eng, params, ServerConfig())
+
+
+# ---------------------------------------------------------------------------
+# Threaded StreamingServer end-to-end (real clock)
+# ---------------------------------------------------------------------------
+
+def test_streaming_server_end_to_end(model, params):
+    """Background-thread server: concurrent submits, blocking per-token
+    iteration from the caller thread, results bit-identical to the batch
+    engine path."""
+    eng = _loop_engine(model)
+    reqs = _requests(model.cfg)
+    expected = eng.generate_requests(params, reqs, batch_slots=2)
+    cfg = ServerConfig(batch_slots=2, max_prompt_len=40, max_new_tokens=16,
+                       admission="edf")
+    with StreamingServer(eng, params, cfg) as srv:
+        handles = [srv.submit(r) for r in reqs]
+        for h, res in zip(handles, expected):
+            streamed = np.concatenate(list(h.tokens()))
+            got = h.result(timeout=120.0)
+            np.testing.assert_array_equal(streamed, got.tokens)
+            np.testing.assert_array_equal(got.tokens, res.tokens)
+    srv.loop.metrics.check_conservation()
+    assert srv.loop.metrics.counters["completed"] == len(reqs)
+
+
+def test_streaming_server_requires_start(model, params):
+    srv = StreamingServer(_loop_engine(model), params,
+                          ServerConfig(batch_slots=1, max_prompt_len=40,
+                                       max_new_tokens=4))
+    with pytest.raises(RuntimeError, match="not started"):
+        srv.submit(GenerationRequest(np.arange(4), 2))
