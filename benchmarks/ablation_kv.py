@@ -21,12 +21,18 @@ to the KV cache:
   request workload modeled at paper scale (contiguous worst-case slots
   vs block-granular demand) plus a measured CPU run of the scheduler
   under both layouts — actual cache-pytree bytes, throughput, and the
-  bit-equality of the served tokens.
+  bit-equality of the served tokens;
+* **shared prefix** — the prefix-cache extension of the capacity
+  argument (``kv_prefix_sharing``): a long common system prompt × N
+  requests, modeled at paper scale and measured on the CPU scheduler
+  run sharing on vs off — peak unique-block high-water must shrink
+  > 2× with bit-identical tokens (the ``--smoke`` CI gate).
 
 Results land in ``benchmarks/results/ablation_kv.json``.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import time
 
@@ -144,6 +150,76 @@ def _paged_rows(quick: bool):
     return out
 
 
+def _shared_prefix_rows(quick: bool):
+    """Prefix-cache capacity: long common system prompt × N requests.
+
+    The production-dominant workload — every request carries the same
+    long system prompt plus a short unique tail.  With
+    ``kv_prefix_sharing`` the prompt's full blocks are stored once for
+    the whole group (``core/paged_cache.PrefixIndex`` + refcounted
+    ``BlockPool``); without it every admission re-stores its full
+    prompt.  ``effective_capacity`` is the unshared/shared ratio of the
+    pool's peak unique-block high-water — how many more concurrent
+    requests the same HBM serves.  The smoke assertion (CI) requires
+    > 2x and bit-identical tokens with sharing on vs off.
+    """
+    # -- modeled at paper scale: 2k system prompt, 256-token tails
+    cfg = get_config("quasar-paper-7b")
+    n_req, sys_tokens, tail = 8, 2048, 256
+    demands = [sys_tokens + tail] * n_req
+    modeled = {}
+    for kv in ("bf16", "int8"):
+        unshared = kv_cache_capacity_bytes(cfg, demands, 32768, kv,
+                                           layout="paged")
+        shared = kv_cache_capacity_bytes(cfg, demands, 32768, kv,
+                                         layout="paged",
+                                         shared_prefix_tokens=sys_tokens)
+        modeled[f"modeled_{kv}"] = {
+            "unshared_gbytes": round(unshared / 1e9, 3),
+            "shared_gbytes": round(shared / 1e9, 3),
+            "effective_capacity": round(unshared / shared, 2),
+        }
+
+    # -- measured on the CPU stand-in: same scheduler run, sharing on/off
+    model, params, _ = get_trained("qwen3-sub")
+    rng = np.random.default_rng(11)
+    n = 4 if quick else 6
+    system = rng.integers(0, model.cfg.vocab_size, 96)
+    reqs = [GenerationRequest(
+                np.concatenate([system,
+                                rng.integers(0, model.cfg.vocab_size, 6)]),
+                max_new_tokens=6, seed=i)
+            for i in range(n)]
+    scfg = SpecConfig(gamma=GAMMA, temperature=0.0, kv_layout="paged",
+                      kv_block_size=16)
+    measured = {}
+    tokens = {}
+    for label, sharing in (("unshared", False), ("shared", True)):
+        sc = dataclasses.replace(scfg, kv_prefix_sharing=sharing)
+        eng = SpecEngine(model, sc, drafter="ngram", verifier="bf16")
+        eng.generate_requests(params, reqs, batch_slots=n)    # compile
+        t0 = time.perf_counter()
+        res = eng.generate_requests(params, reqs, batch_slots=n)
+        wall = time.perf_counter() - t0
+        tokens[label] = [r.tokens.tolist() for r in res]
+        new_tokens = sum(r.new_tokens for r in res)
+        g = eng.group_stats[0]
+        measured[label] = {
+            "peak_blocks": g["peak_blocks"],
+            "shared_blocks": g["shared_blocks"],
+            "cpu_tok_s": round(new_tokens / max(wall, 1e-9), 1),
+        }
+    measured["effective_capacity"] = round(
+        measured["unshared"]["peak_blocks"]
+        / max(measured["shared"]["peak_blocks"], 1), 2)
+    measured["tokens_bit_identical"] = \
+        tokens["shared"] == tokens["unshared"]
+    return {**modeled, "workload": {"n_requests": n,
+                                    "system_prompt_tokens": 96,
+                                    "tail_tokens": 6},
+            "measured_cpu": measured}
+
+
 def rows(quick: bool = False):
     cfg = get_config("quasar-paper-7b")
     contexts = CONTEXTS[:1] + CONTEXTS[-1:] if quick else CONTEXTS
@@ -183,21 +259,43 @@ def rows(quick: bool = False):
                 for S in (s_aligned, s_odd) for kv in ("bf16", "int8")]
 
     out = {"modeled": modeled, "acceptance": acceptance,
-           "cpu_step": cpu_step, "paged": _paged_rows(quick)}
+           "cpu_step": cpu_step, "paged": _paged_rows(quick),
+           "shared_prefix": _shared_prefix_rows(quick)}
     save_json("ablation_kv.json", out)
     return out
 
 
+def _print_section(section, rs):
+    print(f"-- {section}")
+    if isinstance(rs, dict):
+        for k, v in rs.items():
+            print(f"{k}: {v}")
+    else:
+        for r in rs:
+            print(r)
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: run only the shared-prefix section at "
+                         "quick scale and assert >2x effective capacity "
+                         "with bit-identical tokens")
+    args = ap.parse_args()
+    if args.smoke:
+        sp = _shared_prefix_rows(quick=True)
+        _print_section("shared_prefix", sp)
+        m = sp["measured_cpu"]
+        assert m["tokens_bit_identical"], \
+            "prefix sharing changed generated tokens"
+        assert m["effective_capacity"] > 2.0, \
+            f"effective capacity {m['effective_capacity']} <= 2x"
+        print("smoke OK: effective_capacity="
+              f"{m['effective_capacity']}x, tokens bit-identical")
+        return
     out = rows()
     for section, rs in out.items():
-        print(f"-- {section}")
-        if isinstance(rs, dict):
-            for k, v in rs.items():
-                print(f"{k}: {v}")
-        else:
-            for r in rs:
-                print(r)
+        _print_section(section, rs)
 
 
 if __name__ == "__main__":

@@ -125,6 +125,13 @@ def main() -> None:
                   f"measured_bytes_ratio="
                   f"{pg['measured_cpu']['paged_vs_contiguous_bytes']:.3f};"
                   f"lossless={pg['measured_cpu']['tokens_bit_identical']}"))
+    sp = akv["shared_prefix"]
+    lines.append(("prefix_sharing", step_us,
+                  f"modeled_capacity="
+                  f"{sp['modeled_bf16']['effective_capacity']:.2f}x;"
+                  f"measured_capacity="
+                  f"{sp['measured_cpu']['effective_capacity']:.2f}x;"
+                  f"lossless={sp['measured_cpu']['tokens_bit_identical']}"))
 
     rr = roofline_report.rows(quick=args.quick)
     lines.append(("roofline", step_us,

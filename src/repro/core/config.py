@@ -270,3 +270,15 @@ class SpecConfig:
     # engine sizes it to the batch-slot count's worst-case demand, which
     # makes paged admission never stricter than contiguous admission
     kv_pool_blocks: Optional[int] = None
+    # prefix caching: store shared prompt prefixes once via a hash →
+    # block-chain index with refcounted blocks; prefill skips cached
+    # full blocks (chunked prefill for the cold tail) and tree/chain
+    # commits copy-on-write the partially-filled boundary block.
+    # Paged layout only; bit-identical to unshared (tests/
+    # test_prefix_sharing.py).
+    kv_prefix_sharing: bool = True
+    # preemption-and-swap: when paged admission fails, evict the
+    # lowest-priority running slot's blocks to a host-side numpy swap
+    # pool and resume later by re-alloc + copy-back, instead of holding
+    # the worst-case reservation as a hard capacity ceiling.
+    kv_preempt: bool = True

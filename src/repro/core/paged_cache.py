@@ -29,6 +29,39 @@ breaks that coupling:
   - **release-on-harvest** returns every block (and the reservation) to
     the free list.
 
+**Prefix sharing** (vLLM-style, refcounted) layers on top: a
+:class:`PrefixIndex` keyed by a rolling content hash maps full prompt
+blocks (and the partially-filled boundary block) to the physical block
+that already stores them, so an admission whose prompt shares a prefix
+with an earlier request *shares* those blocks (refcount bump) instead of
+re-storing them, and prefill only computes the cold tail.  Three rules
+keep sharing invisible to the tokens:
+
+* **registered rows are immutable** — an owner only ever writes cache
+  rows ``>= P - 1`` (the verify frontier), and registered rows all lie
+  below it, so an index entry's content never goes stale while its block
+  is alive;
+* **copy-on-write boundary forking** — the only block both a writer and
+  a sharer can collide on is the partially-filled boundary block; a
+  write into a block with ``refcount > 1`` first forks it
+  (:meth:`BlockPool.cow` + :func:`clone_block`), and the per-request
+  reservation carries the one-block headroom that makes the fork
+  infallible (degrading to full-blocks-only donation when the pool is
+  too tight to reserve it);
+* **release caches, reuse evicts** — released blocks that the index
+  still describes park on a *cached-free* LRU list (resurrectable by a
+  later admission at zero cost) and only drop their index entries when
+  the allocator actually reuses them.
+
+**Preemption and swap**: :meth:`BlockPool.swap_out` evacuates a victim
+request's blocks (refcounts decremented, reservation dropped — capacity
+is freed *now*) while the engine snapshots their content to a host-side
+``numpy`` pool; resuming re-reserves, re-allocates and copies back
+(:func:`swap_out_blocks` / :func:`swap_in_blocks`).  ``release`` on a
+swapped-out request returns its blocks exactly once — the swap already
+freed them, so a finish/shed racing an eviction is a no-op, not a
+double-free (regression-tested in ``tests/test_prefix_sharing.py``).
+
 Correctness story: the decode step only ever *reads* logical slots that
 are either committed content or freshly written by the current verify
 window, so block-granular allocation (and the junk in just-appended or
@@ -45,7 +78,9 @@ oracle, and the reconstruction property tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -72,27 +107,185 @@ def request_demand_tokens(prompt_len: int, max_new_tokens: int,
     return int(prompt_len) + int(max_new_tokens) + int(gamma) + 1
 
 
-class BlockPool:
-    """Host-side free-list allocator for the physical block pool.
+@dataclasses.dataclass
+class _PrefixEntry:
+    """One indexed block: ``tokens`` are the rows it vouches for."""
 
-    Tracks three disjoint quantities over ``num_blocks - 1`` allocatable
-    blocks (block 0 is scratch):
+    key: str                 # rolling chain hash (content-addressed)
+    parent: str              # parent chain hash ("" = chain root)
+    block: int               # physical block id holding the rows
+    tokens: Tuple[int, ...]  # registered rows, chain order (<= block_size)
 
-    * **free** — on the free list, owned by nobody;
-    * **allocated** — owned by exactly one request id;
-    * **reserved** — admission-time worst-case demand per request;
-      ``alloc`` may only draw up to the reservation, which guarantees
-      mid-flight appends never fail once a request is admitted.
 
-    Invariants (asserted by the property tests in
-    ``tests/test_paged_cache.py``):
+class PrefixIndex:
+    """Prefix-hash → block-chain index over registered prompt blocks.
 
-    * a block id is owned by at most one request (no double-allocation);
-    * ``free + sum(allocated) == num_blocks - 1`` at all times (no leak);
-    * ``sum(reserved) <= num_blocks - 1`` (admission control is sound).
+    Keys are **rolling content hashes**: ``H(parent_key, block_tokens)``,
+    so a chain of full blocks is addressed by its entire token prefix and
+    two different prompts can never alias (an exact token comparison on
+    every hit guards the astronomically-unlikely hash collision too).
+    Entries come in two flavours sharing one namespace:
+
+    * **full-block** entries (``len(tokens) == block_size``) — walked
+      greedily by :meth:`lookup` as a chain;
+    * **boundary** entries (``len(tokens) < block_size``) — the
+      partially-filled last prefix block.  A lookup that exhausts the
+      full chain scans the parent's children for the longest common
+      token prefix, so a boundary (or full) entry can be *partially*
+      matched — the sharer uses only the rows both prompts agree on.
+
+    The index never owns blocks: :class:`BlockPool` calls
+    :meth:`evict_block` the moment it reuses a cached-free block, which
+    drops every entry describing it.  Orphaned descendants (parent
+    evicted, child block still alive) become unreachable but revalidate
+    for free if the same prefix is ever re-registered — content
+    addressing makes the re-registered parent land on the same key.
     """
 
-    def __init__(self, num_blocks: int, block_size: int = DEFAULT_BLOCK_SIZE):
+    ROOT = ""
+
+    def __init__(self, block_size: int):
+        self.block_size = int(block_size)
+        self._entries: Dict[str, _PrefixEntry] = {}
+        self._children: Dict[str, List[str]] = {}
+        self._by_block: Dict[int, List[str]] = {}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def _hash(parent: str, tokens: Tuple[int, ...]) -> str:
+        payload = parent.encode() + b"|" + ",".join(
+            str(t) for t in tokens).encode()
+        return hashlib.sha256(payload).hexdigest()
+
+    def has_block(self, block: int) -> bool:
+        return block in self._by_block
+
+    def _add(self, key: str, parent: str, block: int,
+             tokens: Tuple[int, ...]) -> None:
+        self._entries[key] = _PrefixEntry(key, parent, block, tokens)
+        self._children.setdefault(parent, []).append(key)
+        self._by_block.setdefault(block, []).append(key)
+
+    # ------------------------------------------------------------------
+    def register(self, prompt: np.ndarray, block_ids: Sequence[int], *,
+                 include_boundary: bool = True) -> None:
+        """Index a freshly-admitted request's prefix blocks.
+
+        ``prompt`` is the full (unpadded) prompt; only its prefill region
+        ``prompt[:-1]`` is registered — the last prompt token opens the
+        first verify window and its cache row is written later.
+        ``block_ids`` is the request's block list in table order.
+        Existing entries win (their blocks already hold the rows);
+        ``include_boundary=False`` registers the full-block chain only —
+        the admission path uses it when the pool is too tight to reserve
+        the copy-on-write fork headroom a donated boundary block needs.
+        """
+        region = np.asarray(prompt).ravel()[:-1]
+        bs = self.block_size
+        parent, rows, i = self.ROOT, 0, 0
+        while rows + bs <= region.size:
+            tok = tuple(int(t) for t in region[rows: rows + bs])
+            key = self._hash(parent, tok)
+            if key not in self._entries:
+                self._add(key, parent, int(block_ids[i]), tok)
+            parent, rows, i = key, rows + bs, i + 1
+        rem = tuple(int(t) for t in region[rows:])
+        if rem and include_boundary and i < len(block_ids):
+            key = self._hash(parent, rem)
+            if key not in self._entries:
+                self._add(key, parent, int(block_ids[i]), rem)
+
+    def lookup(self, prompt: np.ndarray) -> Tuple[List[int], int]:
+        """Longest indexed prefix of ``prompt``'s prefill region.
+
+        Returns ``(block_ids, rows)``: the physical blocks holding the
+        shared prefix (chain order; the last may be partially used) and
+        the number of cache rows they cover.  ``rows`` is the admission
+        prefill's warm frontier — rows ``[0, rows)`` are gathered from
+        the pool, rows ``[rows, P - 1)`` are the cold tail.
+        """
+        region = np.asarray(prompt).ravel()[:-1]
+        bs = self.block_size
+        ids: List[int] = []
+        rows, parent = 0, self.ROOT
+        while rows + bs <= region.size:
+            tok = tuple(int(t) for t in region[rows: rows + bs])
+            key = self._hash(parent, tok)
+            e = self._entries.get(key)
+            if e is None or e.tokens != tok:
+                break
+            ids.append(e.block)
+            rows, parent = rows + bs, key
+        rem = tuple(int(t) for t in region[rows:])
+        if rem:
+            best_m, best = 0, None
+            for ck in self._children.get(parent, ()):
+                e = self._entries.get(ck)
+                if e is None:
+                    continue
+                lim = min(len(e.tokens), len(rem))
+                m = 0
+                while m < lim and e.tokens[m] == rem[m]:
+                    m += 1
+                # longest match wins; block id breaks ties determin-
+                # istically so repeated lookups share the same donor
+                if m > best_m or (m == best_m and m > 0
+                                  and best is not None
+                                  and e.block < best.block):
+                    best_m, best = m, e
+            if best_m > 0:
+                ids.append(best.block)
+                rows += best_m
+        return ids, rows
+
+    def evict_block(self, block: int) -> None:
+        """Drop every entry describing ``block`` (its content is about
+        to be overwritten by a new owner)."""
+        for key in self._by_block.pop(block, []):
+            e = self._entries.pop(key, None)
+            if e is not None:
+                kids = self._children.get(e.parent)
+                if kids is not None and key in kids:
+                    kids.remove(key)
+
+
+class BlockPool:
+    """Host-side refcounting allocator for the physical block pool.
+
+    Over ``num_blocks - 1`` allocatable blocks (block 0 is scratch) every
+    block is in exactly one of three states:
+
+    * **free** — on the free list, owned by nobody, not indexed;
+    * **cached-free** — owned by nobody but still described by the
+      :class:`PrefixIndex` (resurrectable via :meth:`share`); reused in
+      LRU order when the free list runs dry, which evicts its entries;
+    * **referenced** — held by ``refcount >= 1`` requests.  A block with
+      ``refcount > 1`` is *shared*: it appears in several requests'
+      block tables and is freed only when the last reference drops.
+
+    Reservations guarantee appends: :meth:`reserve` books worst-case
+    *fresh-block* demand per request and :meth:`alloc` / :meth:`cow` may
+    only draw up to it.  The admission gate is the **slack** — free
+    blocks minus every request's still-undrawn reservation — so sharing
+    an already-referenced block costs nothing, resurrecting a
+    cached-free one costs one slack unit, and without sharing the gate
+    is provably the legacy ``reserved + n <= capacity`` rule.
+
+    Invariants (property-tested in ``tests/test_paged_cache.py`` and
+    ``tests/test_prefix_sharing.py``):
+
+    * ``free + cached + unique_allocated == num_blocks - 1`` (no leak);
+    * per-block refcount equals the number of owning requests' tables
+      it appears in; blocks free only at refcount zero;
+    * the scratch block is never allocated, shared or refcounted;
+    * ``drawn <= reserved`` per request and ``slack >= 0`` — admission
+      control is sound, mid-flight appends and COW forks never fail.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int = DEFAULT_BLOCK_SIZE,
+                 prefix: Optional[PrefixIndex] = None):
         if num_blocks < 2:
             raise ValueError(f"need >= 2 blocks (1 scratch + 1 usable), "
                              f"got {num_blocks}")
@@ -100,10 +293,16 @@ class BlockPool:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         self.num_blocks = int(num_blocks)
         self.block_size = int(block_size)
+        self.prefix = prefix
         # LIFO free list: recently released blocks are re-used first
         self._free: List[int] = list(range(self.num_blocks - 1, 0, -1))
-        self._owned: Dict[int, List[int]] = {}      # rid -> block ids
-        self._reserved: Dict[int, int] = {}         # rid -> total blocks
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU
+        self._ref: Dict[int, int] = {}              # block -> refcount
+        self._owned: Dict[int, List[int]] = {}      # rid -> table order
+        self._reserved: Dict[int, int] = {}         # rid -> fresh budget
+        self._drawn: Dict[int, int] = {}            # rid -> fresh drawn
+        self._swapped: set = set()                  # rids evicted to host
+        self.peak_allocated = 0                     # high-water unique blocks
 
     # -- capacity ------------------------------------------------------
     @property
@@ -113,7 +312,12 @@ class BlockPool:
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        """Blocks owned by nobody (plain free + cached-free)."""
+        return len(self._free) + len(self._cached)
+
+    @property
+    def cached_blocks(self) -> int:
+        return len(self._cached)
 
     @property
     def reserved_blocks(self) -> int:
@@ -121,68 +325,221 @@ class BlockPool:
 
     @property
     def allocated_blocks(self) -> int:
+        """Block-table entries across requests (shared blocks counted
+        once per sharer — the logical footprint)."""
         return sum(len(b) for b in self._owned.values())
+
+    @property
+    def unique_allocated(self) -> int:
+        """Distinct referenced blocks (the physical footprint)."""
+        return len(self._ref)
+
+    @property
+    def slack(self) -> int:
+        """Free blocks not yet promised to any admitted request."""
+        undrawn = sum(self._reserved[r] - self._drawn[r]
+                      for r in self._reserved)
+        return self.free_blocks - undrawn
 
     def blocks_for(self, n_tokens: int) -> int:
         return blocks_for_tokens(n_tokens, self.block_size)
 
+    def ref(self, block: int) -> int:
+        """Current refcount of ``block`` (0 = free or cached-free)."""
+        return self._ref.get(int(block), 0)
+
     # -- lifecycle -----------------------------------------------------
     def can_reserve(self, n_blocks: int) -> bool:
-        """Admission check: does a further ``n_blocks`` reservation fit?"""
-        return self.reserved_blocks + int(n_blocks) <= self.capacity
+        """Admission check: does a further ``n_blocks`` fresh-block
+        reservation fit?  Equivalent to the legacy ``reserved + n <=
+        capacity`` gate when nothing is shared or cached."""
+        return int(n_blocks) <= self.slack
 
     def reserve(self, rid: int, n_blocks: int) -> None:
-        """Reserve worst-case demand for request ``rid`` at admission."""
+        """Book worst-case fresh-block demand for ``rid`` at admission
+        (also the swap-in re-admission path: clears the swapped mark)."""
         if rid in self._reserved:
             raise ValueError(f"request {rid} already reserved")
         if not self.can_reserve(n_blocks):
             raise ValueError(
                 f"pool over-committed: reserve({n_blocks}) with "
-                f"{self.capacity - self.reserved_blocks} unreserved")
+                f"slack {self.slack}")
         self._reserved[rid] = int(n_blocks)
+        self._drawn[rid] = 0
         self._owned.setdefault(rid, [])
+        self._swapped.discard(rid)
 
     def owned(self, rid: int) -> List[int]:
         return list(self._owned.get(rid, []))
 
+    def _draw(self) -> int:
+        """Pop one free block, evicting a cached-free block (LRU, index
+        entries dropped) when the plain free list is dry."""
+        if self._free:
+            return self._free.pop()
+        if self._cached:
+            block, _ = self._cached.popitem(last=False)
+            if self.prefix is not None:
+                self.prefix.evict_block(block)
+            return block
+        raise RuntimeError(      # unreachable if reservations are honoured
+            "free list exhausted (reservation accounting broken)")
+
+    def _note_peak(self) -> None:
+        if len(self._ref) > self.peak_allocated:
+            self.peak_allocated = len(self._ref)
+
     def alloc(self, rid: int, n_blocks: int) -> List[int]:
-        """Draw ``n_blocks`` from the free list for ``rid`` (<= its
+        """Draw ``n_blocks`` fresh blocks for ``rid`` (<= its
         reservation; admission control makes this infallible)."""
         if rid not in self._reserved:
             raise ValueError(f"request {rid} has no reservation")
-        have = len(self._owned[rid])
+        have = self._drawn[rid]
         if have + n_blocks > self._reserved[rid]:
             raise ValueError(
                 f"request {rid} alloc beyond reservation: "
                 f"{have}+{n_blocks} > {self._reserved[rid]}")
-        if n_blocks > len(self._free):
-            raise RuntimeError(      # unreachable if reservations are honoured
-                f"free list exhausted: want {n_blocks}, have "
-                f"{len(self._free)} (reservation accounting broken)")
-        ids = [self._free.pop() for _ in range(int(n_blocks))]
+        ids = [self._draw() for _ in range(int(n_blocks))]
+        for b in ids:
+            self._ref[b] = 1
         self._owned[rid].extend(ids)
+        self._drawn[rid] += int(n_blocks)
+        self._note_peak()
+        return ids
+
+    def share(self, rid: int, block_ids: Sequence[int]) -> None:
+        """Append already-stored prefix blocks to ``rid``'s table.
+
+        Referenced blocks just gain a reference; cached-free blocks are
+        resurrected (costing one slack unit each — the admission gate
+        must have accounted for them).  Never draws a fresh block, so it
+        does not count against ``rid``'s reservation.
+        """
+        if rid not in self._reserved:
+            raise ValueError(f"request {rid} has no reservation")
+        for b in block_ids:
+            b = int(b)
+            if b == SCRATCH_BLOCK:
+                raise ValueError("scratch block can never be shared")
+            if b in self._ref:
+                self._ref[b] += 1
+            elif b in self._cached:
+                if self.slack < 1:
+                    raise RuntimeError(
+                        f"resurrecting cached block {b} would break a "
+                        "running request's append guarantee (admission "
+                        "gate under-counted)")
+                del self._cached[b]
+                self._ref[b] = 1
+            else:
+                raise ValueError(f"block {b} is not shareable "
+                                 "(free or unknown)")
+            self._owned[rid].append(b)
+        self._note_peak()
+
+    def cow(self, rid: int, block: int) -> int:
+        """Copy-on-write fork: make ``rid``'s table entry for ``block``
+        privately writable.
+
+        Sole owner → the block itself (write in place).  Shared → one
+        reference is moved to a freshly drawn block (counted against
+        ``rid``'s reservation) and the new id returned; the caller must
+        copy the device content (:func:`clone_block`) and patch its
+        block table.  Other sharers keep the original untouched.
+        """
+        block = int(block)
+        if self._ref.get(block, 0) < 1:
+            raise ValueError(f"block {block} is not allocated")
+        if block not in self._owned.get(rid, ()):
+            raise ValueError(f"request {rid} does not own block {block}")
+        if self._ref[block] == 1:
+            return block
+        if self._drawn[rid] + 1 > self._reserved[rid]:
+            raise ValueError(
+                f"request {rid} COW fork beyond reservation "
+                f"({self._reserved[rid]} blocks)")
+        new = self._draw()
+        self._ref[new] = 1
+        self._ref[block] -= 1
+        self._drawn[rid] += 1
+        owned = self._owned[rid]
+        owned[owned.index(block)] = new
+        self._note_peak()
+        return new
+
+    def _unref(self, block: int) -> None:
+        self._ref[block] -= 1
+        if self._ref[block] == 0:
+            del self._ref[block]
+            if self.prefix is not None and self.prefix.has_block(block):
+                self._cached[block] = None      # resurrectable, LRU order
+            else:
+                self._free.append(block)
+
+    def swap_out(self, rid: int) -> List[int]:
+        """Evacuate ``rid``: drop every table reference and the whole
+        reservation, freeing its capacity *now*; mark the request
+        swapped so a racing :meth:`release` is a no-op.  Returns the
+        table (the engine snapshots the block content to host memory
+        *before* calling this).  Resume = :meth:`reserve` +
+        :meth:`alloc` + copy-back."""
+        if rid not in self._reserved:
+            raise ValueError(f"request {rid} has no reservation")
+        ids = self._owned.pop(rid, [])
+        for b in ids:
+            self._unref(b)
+        self._reserved.pop(rid, None)
+        self._drawn.pop(rid, None)
+        self._swapped.add(rid)
         return ids
 
     def release(self, rid: int) -> List[int]:
-        """Free every block owned by ``rid`` and drop its reservation."""
+        """Drop every reference ``rid`` holds and its reservation.
+
+        Exactly-once guarantee: a request that was swapped out already
+        returned its blocks in :meth:`swap_out`, so releasing it (a
+        finish or shed racing the eviction) frees nothing and returns
+        ``[]`` — the double-free this used to cause is regression-tested
+        in ``tests/test_prefix_sharing.py``.
+        """
+        if rid in self._swapped:
+            self._swapped.discard(rid)
+            self._owned.pop(rid, None)
+            self._reserved.pop(rid, None)
+            self._drawn.pop(rid, None)
+            return []
         ids = self._owned.pop(rid, [])
         self._reserved.pop(rid, None)
-        self._free.extend(reversed(ids))
+        self._drawn.pop(rid, None)
+        for b in reversed(ids):
+            self._unref(b)
         return ids
 
     def check_invariants(self) -> None:
-        """Raise if conservation or exclusivity is violated."""
+        """Raise if conservation, refcounting or exclusivity breaks."""
         owned_all = [b for ids in self._owned.values() for b in ids]
-        assert len(owned_all) == len(set(owned_all)), "block double-allocated"
-        assert SCRATCH_BLOCK not in owned_all, "scratch block allocated"
+        counts: Dict[int, int] = {}
+        for b in owned_all:
+            counts[b] = counts.get(b, 0) + 1
+        assert counts == self._ref, (
+            f"refcounts drifted from ownership: {self._ref} != {counts}")
+        assert SCRATCH_BLOCK not in counts, "scratch block allocated"
         assert SCRATCH_BLOCK not in self._free, "scratch block on free list"
-        assert len(self._free) + len(owned_all) == self.capacity, (
-            f"pool not conserved: {len(self._free)} free + "
-            f"{len(owned_all)} owned != {self.capacity}")
-        assert self.reserved_blocks <= self.capacity
-        for rid, ids in self._owned.items():
-            assert len(ids) <= self._reserved.get(rid, 0), (
-                f"request {rid} owns beyond reservation")
+        assert SCRATCH_BLOCK not in self._cached, "scratch block cached"
+        assert not (set(self._free) & set(self._cached)), (
+            "block both free and cached")
+        assert len(self._free) + len(self._cached) + len(self._ref) \
+            == self.capacity, (
+                f"pool not conserved: {len(self._free)} free + "
+                f"{len(self._cached)} cached + {len(self._ref)} allocated "
+                f"!= {self.capacity}")
+        assert self.slack >= 0, "append guarantee broken (negative slack)"
+        for rid in self._reserved:
+            assert self._drawn[rid] <= self._reserved[rid], (
+                f"request {rid} drew beyond reservation")
+        for rid in self._swapped:
+            assert not self._owned.get(rid) and rid not in self._reserved, (
+                f"swapped request {rid} still owns blocks")
 
 
 # ---------------------------------------------------------------------------
@@ -257,30 +614,77 @@ def gather_block_rows(pool_buf: jnp.ndarray, bt: jnp.ndarray) -> jnp.ndarray:
 
 
 def scatter_prefill_rows(pool: dict, block_ids: Sequence[int],
-                         row_cache: dict, block_size: int) -> dict:
+                         row_cache: dict, block_size: int,
+                         first_block: int = 0) -> dict:
     """Scatter a single-row *contiguous* prefill cache into pool blocks.
 
-    ``row_cache`` leaves are ``(1, S_row, ...)``; the first
-    ``len(block_ids) * block_size`` rows (zero-padded if the contiguous
-    row is shorter) land in the listed physical blocks.  Writing the
-    fresh-init-plus-prefill content into *every* allocated block is what
-    keeps admission retrace-free and slot-recycling leak-free, exactly
-    like the contiguous ``prefill_into_slot`` row reset.
+    ``row_cache`` leaves are ``(1, S_row, ...)``; contiguous rows
+    starting at logical block ``first_block`` (zero-padded if the
+    contiguous row is shorter) land in the listed physical blocks, i.e.
+    ``block_ids[i]`` receives rows ``[(first_block + i) * bs, ...)``.
+    With prefix sharing the leading cached full blocks are skipped by
+    passing the boundary's logical index as ``first_block``.  Writing
+    the fresh-init-plus-prefill content into every *owned* (non-shared)
+    block is what keeps admission retrace-free and slot-recycling
+    leak-free, exactly like the contiguous ``prefill_into_slot`` row
+    reset.
     """
     n = len(block_ids)
     if n == 0:
         return pool
     idx = jnp.asarray(np.asarray(block_ids, np.int32))
+    lo = int(first_block) * block_size
     new = dict(pool)
     for name, buf in pool.items():
         row = row_cache[name][0]                             # (S_row, ...)
-        need = n * block_size
+        need = lo + n * block_size
         if row.shape[0] < need:
             pad = [(0, need - row.shape[0])] + [(0, 0)] * (row.ndim - 1)
             row = jnp.pad(row, pad)
-        vals = row[:need].reshape((n, block_size) + row.shape[1:])
+        vals = row[lo:need].reshape((n, block_size) + row.shape[1:])
         new[name] = buf.at[idx].set(vals.astype(buf.dtype))
     return new
+
+
+def clone_block(layers: Sequence[dict], src: int, dst: int) -> List[dict]:
+    """Copy every pool tensor's ``src`` block into ``dst`` (the device
+    half of a COW fork; the `BlockPool.cow` bookkeeping is the host
+    half)."""
+    out = []
+    for pool in layers:
+        out.append({name: buf.at[dst].set(buf[src])
+                    for name, buf in pool.items()})
+    return out
+
+
+def swap_out_blocks(layers: Sequence[dict],
+                    block_ids: Sequence[int]) -> List[Dict[str, np.ndarray]]:
+    """Snapshot the listed physical blocks of every layer pool to host
+    ``numpy`` arrays (the swap pool).  Bit-exact for every pool dtype —
+    int8 KV swaps the quantized codes *and* the f32 scale pools, so the
+    round-trip reproduces the device state exactly."""
+    if not block_ids:
+        return [{name: np.empty((0,) + tuple(buf.shape[1:]),
+                                 dtype=np.asarray(buf[:0]).dtype)
+                 for name, buf in pool.items()} for pool in layers]
+    idx = np.asarray(block_ids, np.int32)
+    return [{name: np.asarray(jnp.take(buf, jnp.asarray(idx), axis=0))
+             for name, buf in pool.items()} for pool in layers]
+
+
+def swap_in_blocks(layers: Sequence[dict], block_ids: Sequence[int],
+                   host: Sequence[Dict[str, np.ndarray]]) -> List[dict]:
+    """Copy a `swap_out_blocks` snapshot back into (possibly different)
+    physical blocks.  Pure data movement — resume never retraces."""
+    if not block_ids:
+        return list(layers)
+    idx = jnp.asarray(np.asarray(block_ids, np.int32))
+    out = []
+    for pool, snap in zip(layers, host):
+        out.append({name: buf.at[idx].set(
+                        jnp.asarray(snap[name]).astype(buf.dtype))
+                    for name, buf in pool.items()})
+    return out
 
 
 # ---------------------------------------------------------------------------

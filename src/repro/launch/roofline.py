@@ -137,7 +137,8 @@ def kv_bytes_per_token(cfg, kv_cache_dtype: str = None) -> float:
 def kv_cache_capacity_bytes(cfg, request_tokens, max_len: int,
                             kv_cache_dtype: str = None,
                             layout: str = "contiguous",
-                            block_size: int = None) -> float:
+                            block_size: int = None,
+                            shared_prefix_tokens: int = 0) -> float:
     """Modeled HBM *footprint* of the serving-group KV cache — the term
     the paged layout shrinks (where :func:`kv_cache_read_bytes` is the
     per-step *streaming* term int8 halves).
@@ -149,6 +150,14 @@ def kv_cache_capacity_bytes(cfg, request_tokens, max_len: int,
     request its own demand rounded up to ``block_size`` plus one
     scratch block and the int32 block tables — block-granular
     fragmentation instead of max-length fragmentation.
+
+    ``shared_prefix_tokens`` models the prefix cache
+    (``core/paged_cache.PrefixIndex``): every request shares that long
+    a common prompt prefix, so its *full* blocks are stored once for
+    the whole group instead of once per request (paged layout only —
+    the contiguous layout cannot share rows and still charges every
+    slot its full buffer).  The partially-filled boundary block stays
+    per-request (copy-on-write forking makes it private).
     """
     from repro.core.paged_cache import DEFAULT_BLOCK_SIZE, blocks_for_tokens
 
@@ -160,7 +169,10 @@ def kv_cache_capacity_bytes(cfg, request_tokens, max_len: int,
     if layout != "paged":
         raise ValueError(f"unknown kv layout {layout!r}")
     bs = DEFAULT_BLOCK_SIZE if block_size is None else block_size
-    blocks = sum(blocks_for_tokens(t, bs) for t in request_tokens) + 1
+    shared_full = max(int(shared_prefix_tokens), 0) // bs
+    blocks = shared_full + sum(
+        blocks_for_tokens(t - shared_full * bs, bs)
+        for t in request_tokens) + 1
     table = n * blocks_for_tokens(max_len, bs) * 4.0     # int32 entries
     return float(blocks) * bs * layers * per_token + table
 

@@ -46,6 +46,14 @@ def main():
                          "contiguous")
     ap.add_argument("--kv-block-size", type=int, default=128,
                     help="tokens per paged KV block (--kv-layout paged)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="--kv-layout paged: disable the prefix cache "
+                         "(refcounted block sharing of common prompt "
+                         "prefixes + copy-on-write boundary forking)")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="--kv-layout paged: never evict running slots "
+                         "to the host swap pool; denied admissions wait "
+                         "for capacity instead")
     ap.add_argument("--attn-impl", default="auto",
                     choices=["auto", "jnp", "pallas"],
                     help="decode/verify attention path: auto = Pallas "
@@ -124,7 +132,9 @@ def main():
                       k_min=1, k_max=4, drafter=drafter,
                       verifier=args.verifier, tree_branches=branches,
                       kv_layout=args.kv_layout,
-                      kv_block_size=args.kv_block_size)
+                      kv_block_size=args.kv_block_size,
+                      kv_prefix_sharing=not args.no_prefix_sharing,
+                      kv_preempt=not args.no_preempt)
     # the engine's verifier quantizes internally when scfg.verifier demands it
     engine = SpecEngine(model, scfg)
     prompts = jnp.asarray(task_prompts(
@@ -135,8 +145,6 @@ def main():
           f"drafter={engine.drafter.name} kv_cache={cfg.kv_cache_dtype} "
           f"kv_layout={args.kv_layout} attn={attn_path}")
     if args.serve:
-        if args.kv_layout == "paged":
-            ap.error("--serve currently requires --kv-layout contiguous")
         import numpy as np
 
         from repro.serving import GenerationRequest, ServerConfig, \

@@ -297,10 +297,18 @@ def write_cache_paged(cache: dict, k, v, qpos, bt) -> dict:
 
     ``qpos`` are logical slots; ``repro.core.paged_cache.physical_slots``
     maps them through ``bt`` onto rows of the pool viewed as
-    ``(num_blocks * block_size, Hkv, dh)``.  Live requests own disjoint
-    blocks, so cross-row scatters never collide; idle rows (and logical
-    slots past a row's allocation) land in the scratch block, whose
-    content is never validly read.
+    ``(num_blocks * block_size, Hkv, dh)``.  Cross-row scatters never
+    collide because the host guarantees *write exclusivity*: with prefix
+    sharing a block may be referenced by several rows' tables, but only
+    ever written through a table whose owner holds it at refcount 1 —
+    admission forks a shared boundary block via copy-on-write
+    (``BlockPool.cow`` + ``clone_block``) before the verify window can
+    reach it, and ``PagedGroup.prepare_step``'s defensive COW sweep
+    re-establishes exclusivity before every step.  Shared (registered)
+    blocks hold only prefill rows strictly below every sharer's write
+    frontier, so concurrent *reads* through multiple tables are safe.
+    Idle rows (and logical slots past a row's allocation) land in the
+    scratch block, whose content is never validly read.
     """
     from repro.core.paged_cache import physical_slots
 

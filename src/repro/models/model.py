@@ -11,6 +11,7 @@ key in the param/cache pytree:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -74,6 +75,30 @@ class Model:
         if "scan" not in params:
             kw["num_layers"] = num_layers
         _, cache, _ = self._fwd(params, tokens, start, **kw)
+        return cache
+
+    def prefill_chunk(self, params, cache, tokens, start, *, num_layers=None):
+        """Prefill a prompt *tail* against an already-warm cache.
+
+        Rows ``[0, start)`` of ``cache`` hold earlier context (e.g. a
+        shared prompt prefix gathered from the paged prefix cache);
+        ``tokens`` (B, T) continue it at absolute position ``start``.
+        Forces the ``jnp`` attention path so the chunk attends over the
+        cached prefix exactly like a full-prompt prefill does over its
+        own rows — full-row softmax with masked columns contributing
+        exact zeros — which keeps chunked prefill bit-identical to the
+        monolithic one (asserted in tests/test_prefix_sharing.py).
+        """
+        if "scan" in params:
+            raise NotImplementedError(
+                "chunked prefill is not lowered for the scan "
+                "(stacked-layer) param layout")
+        cfg = dataclasses.replace(self.cfg, attn_impl="jnp")
+        B = tokens.shape[0]
+        st = jnp.full((B,), int(start), jnp.int32)
+        _, cache, _ = transformer.forward(
+            params, cfg, tokens, st, cache=cache, read_cache=True,
+            need_logits=False, num_layers=num_layers)
         return cache
 
     def verify_step(self, params, cache, window_tokens, start, num_layers=None,

@@ -53,10 +53,14 @@ from repro.core.config import SpecConfig
 from repro.core.paged_cache import (
     SCRATCH_BLOCK,
     BlockPool,
+    PrefixIndex,
+    clone_block,
     init_paged_cache,
     plan_group,
     request_demand_tokens,
     scatter_prefill_rows,
+    swap_in_blocks,
+    swap_out_blocks,
 )
 from repro.core.protocols import get_drafter, get_verifier
 from repro.core.spec_engine import init_state, make_decode_step
@@ -252,6 +256,10 @@ class SpecEngine:
         #                                     block allocator
         rid: Optional[int] = None,          # paged layout: allocator id
         #                                     (must be reserved already)
+        shared_blocks: int = 0,             # prefix cache: leading blocks of
+        #                                     rid's table already stored
+        shared_rows: int = 0,               # ... covering this many prompt
+        #                                     rows (< P; cold tail is chunked)
     ) -> dict:
         """Admit ``request`` into slot ``row`` of a live decode state.
 
@@ -303,18 +311,70 @@ class SpecEngine:
         # The padded prefill writes junk K/V at positions [P-1, pmax-1),
         # but verify windows cover every position gap-free before the
         # causal frontier reads it — dead weight, never live state.
+        paged = "bt" in state["cache"]
         row_cache = self.model.init_cache(1, buf)
-        row_cache = self.model.prefill(
-            params, row_cache, prompt[:, :-1], aux_embeds=aux_embeds)
-        if "bt" in state["cache"]:       # paged: blocks instead of a row
+        # Warm prefix (prefix cache hit): gather the shared rows out of
+        # the pool into the contiguous row cache and run *chunked*
+        # prefill over the cold tail only.  The gather is an exact copy
+        # (same dtype), and the chunk attends over it exactly like the
+        # monolithic prefill attends over its own rows, so the admitted
+        # row stays bit-identical to an unshared admission.  int8 KV
+        # keeps the full recompute (attending a quantized prefix would
+        # diverge from the solo run) and only skips re-*storing* the
+        # shared blocks below — the capacity win without the compute
+        # win.
+        use_chunk = (paged and shared_rows > 0
+                     and self.model.cfg.kv_cache_dtype != "int8")
+        if use_chunk:
+            c = int(shared_rows)
+            shared_ids = pool.owned(rid)[: int(shared_blocks)]
+            idx = jnp.asarray(np.asarray(shared_ids, np.int32))
+            warm = []
+            for pool_l, row_l in zip(state["cache"]["layers"],
+                                     row_cache["layers"]):
+                lay = dict(row_l)
+                for name, buf_l in pool_l.items():
+                    g = jnp.take(buf_l, idx, axis=0)
+                    g = g.reshape((-1,) + g.shape[2:])[:c]
+                    lay[name] = row_l[name].at[0, :c].set(
+                        g.astype(row_l[name].dtype))
+                warm.append(lay)
+            row_cache = dict(row_cache)
+            row_cache["layers"] = warm
+            if P - 1 > c:
+                row_cache = self.model.prefill_chunk(
+                    params, row_cache, prompt[:, c: P - 1], c)
+        else:
+            row_cache = self.model.prefill(
+                params, row_cache, prompt[:, :-1], aux_embeds=aux_embeds)
+        if paged:                        # paged: blocks instead of a row
             if pool is None or rid is None:
                 raise ValueError("paged admission needs pool= and rid=")
-            ids = pool.alloc(rid, pool.blocks_for(P))
+            n_shared = int(shared_blocks)
+            fork = n_shared > 0 and int(shared_rows) % pool.block_size != 0
+            if fork:
+                # the last shared block is a partially-matched boundary:
+                # fork it copy-on-write so our tail rows never touch the
+                # donor's copy.  The "copy" is free — the scatter below
+                # rewrites the fork block wholesale (gathered shared rows
+                # + computed tail + zero pad).
+                old = pool.owned(rid)[n_shared - 1]
+                new = pool.cow(rid, old)
+                if new == old and pool.prefix is not None:
+                    # sole owner (resurrected cached block): write in
+                    # place, but the donor's boundary entry may claim
+                    # rows beyond what we matched — drop it before we
+                    # overwrite them
+                    pool.prefix.evict_block(old)
+            pool.alloc(rid, pool.blocks_for(P) - n_shared)
+            ids = pool.owned(rid)
+            w0 = n_shared - (1 if fork else 0)   # first block we must write
             bt = state["cache"]["bt"].at[row].set(SCRATCH_BLOCK)
             bt = bt.at[row, : len(ids)].set(jnp.asarray(ids, jnp.int32))
             cache = dict(state["cache"])
             cache["layers"] = [
-                scatter_prefill_rows(pool_l, ids, row_l, pool.block_size)
+                scatter_prefill_rows(pool_l, ids[w0:], row_l,
+                                     pool.block_size, first_block=w0)
                 for pool_l, row_l in zip(cache["layers"],
                                          row_cache["layers"])]
             cache["bt"] = bt
@@ -380,6 +440,14 @@ class SpecEngine:
             state["cache"] = dict(state["cache"])
             state["cache"]["bt"] = bt
         return state
+
+    def paged_group(self, *, num_blocks: int, block_size: int,
+                    gamma: int) -> "PagedGroup":
+        """Build the per-group paged-serving context (allocator + prefix
+        index + swap pool) honouring ``SpecConfig.kv_prefix_sharing``."""
+        return PagedGroup(self, num_blocks=num_blocks,
+                          block_size=block_size, gamma=gamma,
+                          sharing=self.scfg.kv_prefix_sharing)
 
     def generate_requests(
         self,
@@ -468,7 +536,7 @@ class SpecEngine:
             buf = max(r.prompt.size + r.max_new_tokens for r in batch) \
                 + drafter.gamma + 2
 
-            plan = pool = None
+            plan = ctx = None
             cache = None
             if paged:
                 plan = plan_group(
@@ -479,7 +547,9 @@ class SpecEngine:
                     batch_slots=batch_slots,
                     default_slots=DEFAULT_BATCH_SLOTS)
                 slots = plan.slots
-                pool = BlockPool(plan.num_blocks, plan.block_size)
+                ctx = self.paged_group(num_blocks=plan.num_blocks,
+                                       block_size=plan.block_size,
+                                       gamma=drafter.gamma)
                 cache = init_paged_cache(self.model.cfg, slots,
                                          plan.max_blocks, plan.num_blocks,
                                          plan.block_size)
@@ -508,41 +578,37 @@ class SpecEngine:
                     "block_size": plan.block_size} if paged else {}),
             })
 
-            live = {}          # slot -> (rid, demand tokens); paged only
-
-            def admit(st, slot, j, _idxs=idxs, _drafter=drafter, _pmax=pmax,
-                      _batch=batch, _plan=plan, _pool=pool, _live=live):
-                i = _idxs[j]
-                aux = aux_embeds[i: i + 1] if aux_embeds is not None else None
-                if _pool is not None:
-                    _pool.reserve(j, _plan.demands[j])
-                    _live[slot] = (j, request_demand_tokens(
-                        _batch[j].prompt.size, _batch[j].max_new_tokens,
-                        _drafter.gamma))
-                return self.prefill_into_slot(
-                    params, st, slot, requests[i], pmax=_pmax,
-                    drafter=_drafter, aux_embeds=aux,
-                    draft_params=draft_params, pool=_pool, rid=j)
-
-            can_admit = release = None
+            can_admit = release = preempt = None
             if paged:
-                def can_admit(j, _plan=plan, _pool=pool):
-                    return _pool.can_reserve(_plan.demands[j])
+                for j, i in enumerate(idxs):
+                    aux = (aux_embeds[i: i + 1]
+                           if aux_embeds is not None else None)
+                    ctx.register(j, batch[j], aux_embeds=aux)
 
-                def release(st, slot, j, _pool=pool, _live=live):
-                    _pool.release(j)
-                    _live.pop(slot, None)
-                    st = dict(st)
-                    st["cache"] = dict(st["cache"])
-                    st["cache"]["bt"] = \
-                        st["cache"]["bt"].at[slot].set(SCRATCH_BLOCK)
-                    return st
+                def admit(st, slot, j, _ctx=ctx, _drafter=drafter,
+                          _pmax=pmax):
+                    return _ctx.admit(st, slot, j, params=params,
+                                      pmax=_pmax, drafter=_drafter,
+                                      draft_params=draft_params)
 
-                def step_fn(st, _s=step, _pool=pool, _live=live,
-                            _g=drafter.gamma):
-                    st = self._append_paged_blocks(st, _pool, _live, _g)
-                    return _s(params, st)
+                can_admit = ctx.can_admit
+                release = ctx.release
+                if self.scfg.kv_preempt:
+                    preempt = ctx.preempt
+
+                def step_fn(st, _s=step, _ctx=ctx):
+                    return _s(params, _ctx.prepare_step(st))
             else:
+                def admit(st, slot, j, _idxs=idxs, _drafter=drafter,
+                          _pmax=pmax):
+                    i = _idxs[j]
+                    aux = (aux_embeds[i: i + 1]
+                           if aux_embeds is not None else None)
+                    return self.prefill_into_slot(
+                        params, st, slot, requests[i], pmax=_pmax,
+                        drafter=_drafter, aux_embeds=aux,
+                        draft_params=draft_params)
+
                 def step_fn(st, _s=step):
                     return _s(params, st)
 
@@ -554,8 +620,281 @@ class SpecEngine:
             sched = Scheduler(batch, slots, policy=admission)
             _, group_results = sched.run(
                 state, admit=admit, step=step_fn, t0=t_arrival,
-                can_admit=can_admit, release=release,
+                can_admit=can_admit, release=release, preempt=preempt,
                 on_tokens=group_on_tokens)
+            if paged:
+                self.group_stats[-1].update(
+                    peak_blocks=ctx.pool.peak_allocated,
+                    shared_blocks=ctx.shared_blocks,
+                    shared_rows=ctx.shared_rows,
+                    cow_forks=ctx.cow_forks,
+                    preemptions=sched.preemptions)
             for j, i in enumerate(idxs):
                 results[i] = group_results[j]
         return results
+
+
+class PagedGroup:
+    """Paged-serving context for one scheduler group: the refcounting
+    :class:`~repro.core.paged_cache.BlockPool`, the prefix-cache
+    :class:`~repro.core.paged_cache.PrefixIndex`, and the host-side
+    ``numpy`` swap pool for preempted requests.
+
+    Owns the scheduler-hook state machine around the jitted decode
+    step — everything here is host-side bookkeeping plus ``.at[].set``
+    scatters, so no hook ever retraces the step:
+
+    * :meth:`can_admit` / :meth:`admit` — prefix-aware admission: probe
+      the index, reserve only the *fresh-block* demand (minus shared
+      full blocks, plus a fork for a partially-matched boundary), share
+      the cached chain, prefill the cold tail (chunked), and register
+      this prompt's blocks for later arrivals.  A swapped-out request
+      resumes instead: re-reserve, re-alloc, copy the snapshot back.
+    * :meth:`preempt` — snapshot the victim's committed cache rows and
+      per-row decode state to host memory, free its blocks *now*.
+    * :meth:`prepare_step` — append-on-commit block top-up plus a
+      defensive copy-on-write sweep: any block in a live row's verify
+      window still referenced by another request is forked before the
+      step can write it.  Admission forks boundary blocks eagerly, so
+      this fires only if that discipline is ever relaxed — the sweep is
+      what makes "COW never mutates a shared block" an allocator
+      invariant rather than a scheduling accident.
+    * :meth:`release` / :meth:`drop` — exactly-once block return
+      (a release racing an eviction frees nothing; regression-tested).
+
+    The admission arithmetic degrades gracefully on tight pools: the
+    boundary block is registered for sharing (which needs +1 COW
+    headroom in the reservation) only when that headroom fits, so a
+    pool sized for exactly one request serializes instead of
+    deadlocking, and with sharing disabled every formula collapses to
+    PR 5's worst-case reservation.
+    """
+
+    def __init__(self, engine: SpecEngine, *, num_blocks: int,
+                 block_size: int, gamma: int, sharing: bool = True):
+        self.engine = engine
+        self.gamma = int(gamma)
+        self.index = PrefixIndex(block_size) if sharing else None
+        self.pool = BlockPool(num_blocks, block_size, prefix=self.index)
+        self.live: dict = {}       # slot -> (rid, demand_tokens)
+        self.swap: dict = {}       # rid  -> host snapshot
+        self._reqs: dict = {}      # rid  -> (request, aux_embeds)
+        # telemetry (benchmarks/ablation_kv.py shared-prefix section)
+        self.shared_blocks = 0     # prefix-cache block hits
+        self.shared_rows = 0       # prompt rows served from cache
+        self.swaps = 0             # preemptions executed
+        self.cow_forks = 0         # boundary forks (admission + sweep)
+
+    # -- registration --------------------------------------------------
+    def register(self, rid: int, request: GenerationRequest,
+                 aux_embeds=None) -> None:
+        """Associate ``rid`` with its request before any hook runs."""
+        self._reqs[rid] = (request, aux_embeds)
+
+    def demand_tokens(self, rid: int) -> int:
+        r, _ = self._reqs[rid]
+        return request_demand_tokens(r.prompt.size, r.max_new_tokens,
+                                     self.gamma)
+
+    def demand_blocks(self, rid: int) -> int:
+        return self.pool.blocks_for(self.demand_tokens(rid))
+
+    def _probe(self, rid: int):
+        """(shared block ids, prompt rows they cover, cached-free count).
+
+        Empty on a cold index, with sharing off, or when the request
+        carries aux embeddings (prompt tokens alone don't determine its
+        K/V content, so its blocks can neither be shared nor reused).
+        """
+        r, aux = self._reqs[rid]
+        if self.index is None or aux is not None:
+            return [], 0, 0
+        ids, rows = self.index.lookup(np.asarray(r.prompt).ravel())
+        n_res = sum(1 for b in ids if self.pool.ref(b) == 0)
+        return ids, rows, n_res
+
+    def _admission_need(self, rid: int):
+        """(fresh-block reservation, probe) for admitting ``rid`` now.
+
+        Graceful degradation: when the shared plan's slack cost (fresh
+        blocks + a fork for a partially-matched boundary + resurrected
+        cached blocks) does not fit but the plain worst-case demand
+        does, the probe is discarded and the request admits *unshared*
+        — a tight pool serializes exactly like PR 5 instead of
+        deadlocking on sharing arithmetic.
+        """
+        d = self.demand_blocks(rid)
+        ids, rows, n_res = self._probe(rid)
+        if ids:
+            fork = 1 if rows % self.pool.block_size != 0 else 0
+            need = d - len(ids) + fork
+            if self.pool.can_reserve(need + n_res):
+                return need, (ids, rows, n_res)
+        return d, ([], 0, 0)
+
+    # -- scheduler hooks -----------------------------------------------
+    def can_admit(self, rid: int) -> bool:
+        if rid in self.swap:
+            return self.pool.can_reserve(self.demand_blocks(rid))
+        # resurrecting a cached-free block consumes one slack unit even
+        # though it is not a fresh draw — count it in the gate
+        need, (_, _, n_res) = self._admission_need(rid)
+        return self.pool.can_reserve(need + n_res)
+
+    def admit(self, state: dict, slot: int, rid: int, *, params,
+              pmax: int, drafter, draft_params=None) -> dict:
+        if rid in self.swap:
+            return self._resume(state, slot, rid)
+        r, aux = self._reqs[rid]
+        need, (ids, rows, n_res) = self._admission_need(rid)
+        P = r.prompt.size
+        bs = self.pool.block_size
+        # +1 COW headroom lets us *donate* our partially-filled boundary
+        # block to the index (a later arrival may share it while we are
+        # still decoding); skipped — not failed — when the pool is tight
+        head = 1 if (self.index is not None and aux is None
+                     and (P - 1) % bs != 0) else 0
+        donate = bool(head) and self.pool.can_reserve(need + n_res + head)
+        self.pool.reserve(rid, need + (head if donate else 0))
+        if ids:
+            self.pool.share(rid, ids)
+            self.shared_blocks += len(ids)
+            self.shared_rows += rows
+        self.live[slot] = (rid, self.demand_tokens(rid))
+        if ids and rows % bs != 0:
+            self.cow_forks += 1          # prefill_into_slot forks below
+        state = self.engine.prefill_into_slot(
+            params, state, slot, r, pmax=pmax, drafter=drafter,
+            aux_embeds=aux, draft_params=draft_params,
+            pool=self.pool, rid=rid,
+            shared_blocks=len(ids), shared_rows=rows)
+        if self.index is not None and aux is None:
+            self.index.register(np.asarray(r.prompt).ravel(),
+                                self.pool.owned(rid),
+                                include_boundary=donate)
+        return state
+
+    def release(self, state: dict, slot: int, rid: int) -> dict:
+        """Harvest hook: return blocks (exactly once) and idle the row."""
+        self.pool.release(rid)
+        self.live.pop(slot, None)
+        state = dict(state)
+        state["cache"] = dict(state["cache"])
+        state["cache"]["bt"] = \
+            state["cache"]["bt"].at[slot].set(SCRATCH_BLOCK)
+        return state
+
+    def drop(self, rid: int) -> None:
+        """Forget a request that will never resume (shed while swapped)."""
+        self.swap.pop(rid, None)
+        self.pool.release(rid)
+
+    # -- preemption / swap ---------------------------------------------
+    def preempt(self, state: dict, slot: int, rid: int) -> dict:
+        """Evict ``slot``'s occupant to the host swap pool.
+
+        Saves the committed cache rows ``[0, length - 1)`` (everything a
+        future verify window *reads*; the window itself rewrites rows
+        from ``length - 1`` on) plus every per-row decode register, then
+        frees the blocks and reservation so the pending head can admit.
+        Pure host work — the decode step never retraces, and the row is
+        left idle (``length == target == 0``) like any un-admitted slot.
+        """
+        self.live.pop(slot, None)
+        L = int(np.asarray(state["length"])[slot])
+        n_save = self.pool.blocks_for(max(L - 1, 0))
+        ids = self.pool.owned(rid)[:n_save]
+        snap = {
+            "n_blocks": n_save,
+            "blocks": swap_out_blocks(state["cache"]["layers"], ids),
+            "tokens": np.asarray(state["tokens"][slot]),
+            "length": L,
+            "target": int(np.asarray(state["target"])[slot]),
+            "key": np.asarray(state["key"][slot]),
+            "commits": int(np.asarray(state["stats"]["commits"])[slot]),
+            "row_steps": int(np.asarray(state["stats"]["row_steps"])[slot]),
+            "drafter": jax.tree.map(lambda x: np.asarray(x[slot]),
+                                    state["drafter_state"]),
+        }
+        self.pool.swap_out(rid)
+        self.swap[rid] = snap
+        self.swaps += 1
+        state = dict(state)
+        state["length"] = state["length"].at[slot].set(0)
+        state["target"] = state["target"].at[slot].set(0)
+        state["cache"] = dict(state["cache"])
+        state["cache"]["bt"] = \
+            state["cache"]["bt"].at[slot].set(SCRATCH_BLOCK)
+        return state
+
+    def _resume(self, state: dict, slot: int, rid: int) -> dict:
+        """Re-admit a swapped request: fresh blocks, bit-exact copy-back."""
+        snap = self.swap.pop(rid)
+        self.pool.reserve(rid, self.demand_blocks(rid))
+        ids = self.pool.alloc(rid, snap["n_blocks"])
+        state = dict(state)
+        state["stats"] = dict(state["stats"])
+        state["tokens"] = state["tokens"].at[slot].set(
+            jnp.asarray(snap["tokens"]))
+        state["length"] = state["length"].at[slot].set(snap["length"])
+        state["target"] = state["target"].at[slot].set(snap["target"])
+        state["key"] = state["key"].at[slot].set(jnp.asarray(snap["key"]))
+        state["stats"]["commits"] = \
+            state["stats"]["commits"].at[slot].set(snap["commits"])
+        state["stats"]["row_steps"] = \
+            state["stats"]["row_steps"].at[slot].set(snap["row_steps"])
+        state["drafter_state"] = jax.tree.map(
+            lambda full, one: full.at[slot].set(
+                jnp.asarray(one).astype(full.dtype)),
+            state["drafter_state"], snap["drafter"])
+        cache = dict(state["cache"])
+        bt = cache["bt"].at[slot].set(SCRATCH_BLOCK)
+        bt = bt.at[slot, : len(ids)].set(jnp.asarray(ids, jnp.int32))
+        cache["bt"] = bt
+        cache["layers"] = swap_in_blocks(cache["layers"], ids,
+                                         snap["blocks"])
+        state["cache"] = cache
+        self.live[slot] = (rid, self.demand_tokens(rid))
+        return state
+
+    # -- per-step maintenance ------------------------------------------
+    def prepare_step(self, state: dict) -> dict:
+        """Run before every decode step: block top-up + COW sweep."""
+        state = self.engine._append_paged_blocks(
+            state, self.pool, self.live, self.gamma)
+        if self.index is None or not self.live:
+            return state
+        # defensive copy-on-write: fork any still-shared block the next
+        # verify window would write (rows [L-1, L+gamma])
+        bt = state["cache"]["bt"]
+        bt_host = np.asarray(bt)
+        lengths = np.asarray(state["length"])
+        layers = state["cache"]["layers"]
+        bs = self.pool.block_size
+        changed = False
+        for slot, (rid, _demand) in self.live.items():
+            L = int(lengths[slot])
+            lo = max(L - 1, 0) // bs
+            hi = min((L + self.gamma) // bs, bt_host.shape[1] - 1)
+            for k in range(lo, hi + 1):
+                bid = int(bt_host[slot, k])
+                if bid == SCRATCH_BLOCK or self.pool.ref(bid) <= 1:
+                    continue
+                new = self.pool.cow(rid, bid)
+                layers = clone_block(layers, bid, new)
+                bt = bt.at[slot, k].set(new)
+                self.cow_forks += 1
+                changed = True
+        if changed:
+            state = dict(state)
+            state["cache"] = dict(state["cache"])
+            state["cache"]["layers"] = layers
+            state["cache"]["bt"] = bt
+        return state
+
+    # -- invariants ----------------------------------------------------
+    def check_invariants(self) -> None:
+        self.pool.check_invariants()
+        for slot, (rid, _d) in self.live.items():
+            assert rid not in self.swap, (
+                f"request {rid} both live and swapped")

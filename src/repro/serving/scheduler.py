@@ -74,6 +74,7 @@ class SlotEvent:
     admit_step: int            # scheduler step count at admission
     harvest_step: int = -1     # step count when the row was harvested
     streamed: int = 0          # new tokens already forwarded via on_tokens
+    preempted: bool = False    # occupancy ended by eviction, not harvest
 
 
 @dataclass
@@ -117,6 +118,7 @@ class Scheduler:
     on_event: Optional[Callable[[SlotEvent], None]] = None
     events: List[SlotEvent] = field(default_factory=list)
     steps: int = 0             # decode steps taken by the loop
+    preemptions: int = 0       # running slots evicted for a better head
 
     def __post_init__(self):
         if self.batch_slots < 1:
@@ -135,6 +137,11 @@ class Scheduler:
         self._pending: List[tuple] = []
         self._slots: List[Optional[SlotEvent]] = [None] * self.batch_slots
         self._admit_t = [0.0] * self.batch_slots
+        # preemption accounting: queue_s is measured to the FIRST
+        # admission (being evicted and resumed is service disruption,
+        # not queueing) and streaming resumes where it left off
+        self._first_admit_t: Dict[int, float] = {}
+        self._resume_streamed: Dict[int, int] = {}
         now = time.perf_counter()
         for r in initial:
             self.submit(r, arrival_t=now)
@@ -230,6 +237,7 @@ class Scheduler:
         step: Callable[[dict], dict],
         can_admit: Optional[Callable[[int], bool]] = None,
         release: Optional[Callable[[dict, int, int], dict]] = None,
+        preempt: Optional[Callable[[dict, int, int], dict]] = None,
         on_tokens: Optional[Callable[[int, np.ndarray], None]] = None,
         clock: Callable[[], float] = time.perf_counter,
     ) -> tuple:
@@ -250,22 +258,57 @@ class Scheduler:
         Returns ``(state, harvested request indices)``; results land in
         ``self.results``.
         """
-        for slot in range(self.batch_slots):
-            if self._slots[slot] is None and self._pending:
+        while self._pending:
+            free_slot = next((s for s in range(self.batch_slots)
+                              if self._slots[s] is None), None)
+            if free_slot is None:
+                break
+            head_key = self._pending[0]
+            i = head_key[-1]
+            if can_admit is not None and not can_admit(i):
                 # head-of-line gate: a denied head blocks the wave so
-                # admission order (and queue_s) stays priority-exact
-                if can_admit is not None \
-                        and not can_admit(self._pending[0][-1]):
+                # admission order (and queue_s) stays priority-exact.
+                # With a preempt hook, evict strictly-worse-key running
+                # occupants (lowest priority first) until the head fits
+                # — their blocks move to the host swap pool and they
+                # re-enter the queue with their original keys.
+                while preempt is not None and not can_admit(i):
+                    victim = None
+                    for s in range(self.batch_slots):
+                        ev = self._slots[s]
+                        if ev is None:
+                            continue
+                        k = self._key(ev.request_index)
+                        if k > head_key and (
+                                victim is None or k > victim[1]):
+                            victim = (s, k)
+                    if victim is None:
+                        break
+                    vs = victim[0]
+                    vev = self._slots[vs]
+                    state = preempt(state, vs, vev.request_index)
+                    vev.preempted = True
+                    self._slots[vs] = None
+                    self.preemptions += 1
+                    self._resume_streamed[vev.request_index] = vev.streamed
+                    heapq.heappush(self._pending,
+                                   self._key(vev.request_index))
+                if not can_admit(i):
                     break
-                i = heapq.heappop(self._pending)[-1]
-                # stamp before admit(): prefill cost is service, not
-                # queueing
-                self._admit_t[slot] = clock()
-                state = admit(state, slot, i)
-                ev = SlotEvent(request_index=i, slot=slot,
-                               admit_step=self.steps)
-                self._slots[slot] = ev
-                self._record_admit(ev)
+                free_slot = next(s for s in range(self.batch_slots)
+                                 if self._slots[s] is None)
+            heapq.heappop(self._pending)
+            # stamp before admit(): prefill cost is service, not
+            # queueing; a resumed request keeps its first admission
+            # stamp (eviction is service disruption, not queueing)
+            self._admit_t[free_slot] = \
+                self._first_admit_t.setdefault(i, clock())
+            state = admit(state, free_slot, i)
+            ev = SlotEvent(request_index=i, slot=free_slot,
+                           admit_step=self.steps,
+                           streamed=self._resume_streamed.pop(i, 0))
+            self._slots[free_slot] = ev
+            self._record_admit(ev)
 
         if self._pending and all(ev is None for ev in self._slots):
             # every slot idle yet the head was denied: it can never
@@ -320,6 +363,7 @@ class Scheduler:
                     service_s=now - self._admit_t[s],
                 )
                 harvested.append(i)
+                self._first_admit_t.pop(i, None)
                 if self.on_event is not None:
                     self.on_event(ev)
                 if release is not None:
@@ -337,6 +381,7 @@ class Scheduler:
         t0: Optional[float] = None,
         can_admit: Optional[Callable[[int], bool]] = None,
         release: Optional[Callable[[dict, int, int], dict]] = None,
+        preempt: Optional[Callable[[dict, int, int], dict]] = None,
         on_tokens: Optional[Callable[[int, np.ndarray], None]] = None,
     ) -> tuple:
         """Drive the loop until the queue drains.
@@ -366,6 +411,21 @@ class Scheduler:
           **and resets the slot's block-table row to scratch** — an idle
           row keeps stepping, and its (discarded) window writes must not
           land in blocks the free list may hand to the next admission.
+        * ``preempt(state, slot, request_index) -> state`` — optional
+          eviction hook.  When the queue head is denied by
+          ``can_admit``, running occupants whose admission key is
+          *strictly worse* than the head's are evicted worst-first
+          (``PagedGroup.preempt`` swaps their blocks to host memory)
+          until the head fits; evicted requests re-enter the pending
+          queue with their original keys and resume bit-exactly via
+          ``admit``.  The strict-key rule guarantees progress: a
+          request can only be displaced by a strictly better one, so
+          preemption chains terminate.  In the batch :meth:`run` mode
+          admissions already pop in key order, so every occupant's key
+          is better than any pending head's and the hook structurally
+          never fires — it exists for the open-loop front-end
+          (``repro.serving.server``) where better-keyed requests arrive
+          while worse ones hold slots.
         * ``on_tokens(request_index, tokens)`` — optional per-request
           streaming callback (see :meth:`tick`).
 
@@ -387,7 +447,7 @@ class Scheduler:
         while self.busy:
             state, _ = self.tick(
                 state, admit=admit, step=step, can_admit=can_admit,
-                release=release, on_tokens=on_tokens)
+                release=release, preempt=preempt, on_tokens=on_tokens)
             if self.steps > max_steps:
                 stuck = [ev.request_index for ev in self._slots
                          if ev is not None]

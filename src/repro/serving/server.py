@@ -46,10 +46,18 @@ SLO-aware admission, in order of application:
    from the tree lane's (different PRNG consumption), which is why
    degrade is opt-in.
 
-Restrictions (v1): contiguous KV layout only (the paged pool's
-reservation accounting is per-batch today) and attention-family archs
-(the lane pads prompts to ``max_prompt_len``; recurrent caches cannot
-right-pad) — both enforced at construction.
+With ``SpecConfig(kv_layout="paged")`` each lane owns a block pool
+sized for its slot count's worst-case demand, a prefix-cache index
+(shared system prompts are stored once across requests,
+``kv_prefix_sharing``) and a host-side swap pool: when the pool denies
+the queue head, the scheduler preempts the lowest-priority running
+occupant — its blocks are snapshotted to host ``numpy`` and freed — and
+resumes it later bit-exactly (``kv_preempt``).  Worst-case reservation
+thus stops being the admission ceiling (``serving/engine.PagedGroup``).
+
+Restrictions (v1): attention-family archs only (the lane pads prompts
+to ``max_prompt_len``; recurrent caches cannot right-pad) — enforced at
+construction.
 """
 from __future__ import annotations
 
@@ -64,6 +72,11 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.core.paged_cache import (
+    blocks_for_tokens,
+    init_paged_cache,
+    request_demand_tokens,
+)
 from repro.core.spec_engine import init_state
 from repro.serving.metrics import ServerMetrics
 from repro.serving.request import GenerationRequest, RequestResult
@@ -176,22 +189,62 @@ class _Lane:
         self.sched = Scheduler(
             [], slots, policy=cfg.admission, max_events=cfg.max_events,
             on_event=loop.metrics.on_slot_event)
+        self.ctx = None                        # paged: PagedGroup context
+        cache = None
+        scfg = engine.scfg
+        if scfg.kv_layout == "paged":
+            engine._check_paged_supported()
+            bs = scfg.kv_block_size
+            # every admitted request can demand at most the server caps'
+            # worth of blocks; one pool per lane, sized so `slots`
+            # worst-case requests co-reside (+1 COW headroom each when
+            # prefix sharing may donate boundary blocks, +1 scratch)
+            demand_cap = blocks_for_tokens(
+                request_demand_tokens(cfg.max_prompt_len,
+                                      cfg.max_new_tokens,
+                                      self.drafter.gamma), bs)
+            per = demand_cap + (1 if scfg.kv_prefix_sharing else 0)
+            num_blocks = (scfg.kv_pool_blocks
+                          if scfg.kv_pool_blocks is not None
+                          else 1 + slots * per)
+            if demand_cap > num_blocks - 1:
+                raise ValueError(
+                    f"kv_pool_blocks={num_blocks} cannot hold even one "
+                    f"worst-case request ({demand_cap} blocks at the "
+                    "server's prompt/budget caps)")
+            max_blocks = blocks_for_tokens(self.buf, bs)
+            cache = init_paged_cache(engine.model.cfg, slots, max_blocks,
+                                     num_blocks, bs)
+            self.ctx = engine.paged_group(num_blocks=num_blocks,
+                                          block_size=bs,
+                                          gamma=self.drafter.gamma)
         self.state = init_state(
             engine.model, slots, self.buf,
             jnp.zeros((slots, 2), jnp.uint32),
             drafter_state=self.drafter.alloc_state(
                 engine.model, self.params, slots, self.buf),
-            target=jnp.zeros((slots,), jnp.int32))
+            target=jnp.zeros((slots,), jnp.int32),
+            cache=cache)
         self.handles: Dict[int, StreamHandle] = {}   # lane index -> handle
+
+    def on_submit(self, i: int, handle: StreamHandle) -> None:
+        self.handles[i] = handle
+        if self.ctx is not None:
+            self.ctx.register(i, handle.request)
 
     def admit(self, state: dict, slot: int, i: int) -> dict:
         h = self.handles[i]
         h.status = "running"
+        if self.ctx is not None:
+            return self.ctx.admit(state, slot, i, params=self.params,
+                                  pmax=self.pmax, drafter=self.drafter)
         return self.engine.prefill_into_slot(
             self.params, state, slot, h.request,
             pmax=self.pmax, drafter=self.drafter)
 
     def step_fn(self, state: dict) -> dict:
+        if self.ctx is not None:
+            state = self.ctx.prepare_step(state)
         return self.step(self.params, state)
 
 
@@ -207,11 +260,6 @@ class ServingLoop:
     def __init__(self, engine, params, cfg: ServerConfig = ServerConfig(),
                  *, clock=time.perf_counter,
                  metrics: Optional[ServerMetrics] = None):
-        if engine.scfg.kv_layout != "contiguous":
-            raise ValueError(
-                "serving front-end v1 drives the contiguous KV layout; "
-                "paged admission needs per-batch pool planning "
-                "(ROADMAP follow-up)")
         if engine.model.cfg.arch_type in ("ssm", "hybrid"):
             raise ValueError(
                 f"{engine.model.cfg.arch_type!r} caches are recurrent: "
@@ -303,7 +351,7 @@ class ServingLoop:
             idx = lane.sched.submit(
                 handle.request, arrival_t=handle.submit_t,
                 deadline=handle.deadline_t)
-            lane.handles[idx] = handle
+            lane.on_submit(idx, handle)
             self.metrics.on_submit(handle.rid, handle.submit_t,
                                    deadline_t=handle.deadline_t,
                                    degraded=degraded)
@@ -321,6 +369,12 @@ class ServingLoop:
                 for i in lane.sched.shed_pending(
                         now, slack=self.cfg.shed_slack_s):
                     h = lane.handles.pop(i)
+                    if lane.ctx is not None:
+                        # a preempted request re-enters the pending queue
+                        # and may be shed while swapped out — drop its
+                        # host snapshot and swap marker (its blocks were
+                        # already freed exactly once at eviction)
+                        lane.ctx.drop(i)
                     self.metrics.on_shed(h.rid, now)
                     h._finish(None, "shed")
             if not lane.sched.busy:
@@ -338,8 +392,15 @@ class ServingLoop:
                 self.metrics.on_admit(_lane.handles[i].rid, self.clock())
                 return st
 
+            can_admit = release = preempt = None
+            if lane.ctx is not None:
+                can_admit = lane.ctx.can_admit
+                release = lane.ctx.release
+                if self.engine.scfg.kv_preempt:
+                    preempt = lane.ctx.preempt
             lane.state, harvested = lane.sched.tick(
                 lane.state, admit=admit, step=lane.step_fn,
+                can_admit=can_admit, release=release, preempt=preempt,
                 on_tokens=on_tokens, clock=self.clock)
             self.total_steps += 1
             busy = sum(ev is not None for ev in lane.sched._slots)

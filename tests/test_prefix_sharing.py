@@ -1,0 +1,522 @@
+"""Prefix caching + copy-on-write sharing + preemption/swap harness.
+
+Locks down the refcounted prefix cache (``core/paged_cache.PrefixIndex``
++ sharing ``BlockPool``) and the scheduler's preemption-and-swap path
+(``PagedGroup.preempt`` / resume) behind three layers:
+
+1. **Scheduler fuzz harness** — the batch ``Scheduler.run`` path admits
+   in key order, so preemption structurally never fires there; these
+   tests drive ``Scheduler.tick`` directly with mid-loop submissions
+   (the open-loop front-end's shape) so a better-keyed arrival really
+   does evict a running victim to the host swap pool.  The bar is the
+   same as PRs 2-5: every request's tokens are **bit-identical** to the
+   contiguous scheduler run (and therefore, transitively, to solo
+   serving) for every drafter × verifier at T=0 and T>0 — through
+   sharing, boundary COW forks, eviction and bit-exact resume — and the
+   jitted decode step compiles exactly once (swap-in never retraces).
+2. **Allocator property suite** (hypothesis, model-free): arbitrary
+   admit/share/fork/swap/release interleavings over a shared-prefix
+   prompt universe conserve the pool exactly, never free a block
+   another request still references, and never touch the scratch block.
+3. **Data-plane units**: COW forks never mutate the shared original,
+   host swap round-trips are bit-exact for bf16 and int8 (including the
+   f32 scale pools), and a release racing an eviction frees blocks
+   exactly once (the double-free regression).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.core import SpecConfig
+from repro.core.paged_cache import (
+    SCRATCH_BLOCK,
+    BlockPool,
+    PrefixIndex,
+    blocks_for_tokens,
+    clone_block,
+    init_paged_cache,
+    plan_group,
+    request_demand_tokens,
+    swap_in_blocks,
+    swap_out_blocks,
+)
+from repro.core.spec_engine import init_state
+from repro.models import Model
+from repro.serving import GenerationRequest, SpecEngine
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def model():
+    return Model(get_config("smollm-135m").reduced())
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+BS = 8          # paged block size under test (non-power-of-round prompts)
+BASE_SCFG = SpecConfig(temperature=0.0, gamma=3, pruned_retention=0.5,
+                       tree_branches=(2, 1, 1))
+
+ALL_COMBOS = [
+    ("ngram", "bf16"), ("ngram", "w8a8"),
+    ("vanilla", "bf16"), ("vanilla", "w8a8"),
+    ("pruned", "bf16"), ("pruned", "w8a8"),
+    ("ngram-tree", "bf16"), ("ngram-tree", "w8a8"),
+]
+
+
+# ---------------------------------------------------------------------------
+# Manually-driven paged serving loop
+# ---------------------------------------------------------------------------
+
+class Harness:
+    """Drive ``Scheduler.tick`` by hand over the paged serving state.
+
+    Mirrors ``SpecEngine.generate_requests``'s paged setup exactly
+    (plan → ``PagedGroup`` → paged cache → ``init_state``) but exposes
+    mid-loop ``submit`` so better-keyed arrivals can trigger the
+    preemption hook — which the batch ``run()`` path never does.
+    """
+
+    def __init__(self, model, params, reqs, *, drafter, verifier, temp,
+                 slots=2, pool_blocks=None, sharing=True):
+        demands = [blocks_for_tokens(
+            request_demand_tokens(r.prompt.size, r.max_new_tokens, 8), BS)
+            for r in reqs]
+        if pool_blocks is None:
+            pool_blocks = 1 + max(demands) + 2
+        scp = dataclasses.replace(
+            BASE_SCFG, temperature=temp, kv_layout="paged",
+            kv_block_size=BS, kv_pool_blocks=pool_blocks,
+            kv_prefix_sharing=sharing)
+        self.eng = SpecEngine(model, scp, drafter=drafter,
+                              verifier=verifier)
+        self.params = self.eng._prepare_cached(params)
+        self._step, self.drafter = self.eng._step_for_temperature(temp)
+        self.reqs = list(reqs)
+        self.pmax = max(r.prompt.size for r in reqs)
+        buf = max(r.prompt.size + r.max_new_tokens for r in reqs) \
+            + self.drafter.gamma + 2
+        plan = plan_group([r.prompt.size for r in reqs],
+                          [r.max_new_tokens for r in reqs],
+                          self.drafter.gamma, buf, block_size=BS,
+                          pool_blocks=pool_blocks, batch_slots=slots)
+        self.ctx = self.eng.paged_group(num_blocks=plan.num_blocks,
+                                        block_size=plan.block_size,
+                                        gamma=self.drafter.gamma)
+        cache = init_paged_cache(model.cfg, slots, plan.max_blocks,
+                                 plan.num_blocks, plan.block_size)
+        self.state = init_state(
+            model, slots, buf, jnp.zeros((slots, 2), jnp.uint32),
+            drafter_state=self.drafter.alloc_state(model, self.params,
+                                                   slots, buf),
+            target=jnp.zeros((slots,), jnp.int32), cache=cache)
+        self.sched = Scheduler([], slots)
+
+    def submit(self, j: int) -> int:
+        i = self.sched.submit(self.reqs[j])
+        self.ctx.register(i, self.reqs[j])
+        return i
+
+    def tick(self):
+        def admit(st, slot, i):
+            return self.ctx.admit(st, slot, i, params=self.params,
+                                  pmax=self.pmax, drafter=self.drafter)
+
+        self.state, done = self.sched.tick(
+            self.state, admit=admit,
+            step=lambda st: self._step(self.params,
+                                       self.ctx.prepare_step(st)),
+            can_admit=self.ctx.can_admit, release=self.ctx.release,
+            preempt=self.ctx.preempt)
+        self.ctx.check_invariants()
+        return done
+
+    def drain(self, max_ticks=300):
+        for _ in range(max_ticks):
+            if not self.sched.busy:
+                return
+            self.tick()
+        raise AssertionError("scheduler failed to drain")
+
+
+def _reference(model, params, reqs, *, drafter, verifier, temp):
+    """Solo-equivalent tokens: the contiguous scheduler run (bit-equal
+    to solo serving by tests/test_continuous_batching.py)."""
+    eng = SpecEngine(model, dataclasses.replace(BASE_SCFG,
+                                                temperature=temp),
+                     drafter=drafter, verifier=verifier)
+    return eng.generate_requests(params, reqs, batch_slots=2)
+
+
+def _preempt_workload(cfg):
+    """A victim that fills the pool + a shared-prefix family that must
+    evict it: the victim (worst key) has the strictly-largest demand,
+    so ``Harness`` sizes the pool to it and the family's head is denied
+    while the victim runs."""
+    rng = np.random.default_rng(17)
+    pat = rng.integers(0, cfg.vocab_size, 6)
+    other = rng.integers(0, cfg.vocab_size, 18)
+    victim = GenerationRequest(other, max_new_tokens=10, seed=1,
+                               priority=2)
+    fam = [GenerationRequest(np.tile(pat, 2), max_new_tokens=4, seed=2),
+           GenerationRequest(np.concatenate([np.tile(pat, 2), pat[:3]]),
+                             max_new_tokens=5, seed=3)]
+    return [victim] + fam
+
+
+@pytest.mark.parametrize("drafter,verifier", ALL_COMBOS)
+def test_preempt_resume_bit_identity_all_combos(model, params, drafter,
+                                                verifier):
+    """The headline bar: a running low-priority request is preempted
+    mid-decode (blocks swapped to host memory), higher-priority
+    shared-prefix arrivals are served through the freed blocks, the
+    victim resumes — and every request's tokens are bit-identical to
+    the no-preemption contiguous run, at T=0 and T>0, with exactly one
+    decode-step compile (swap-in never retraces)."""
+    reqs = _preempt_workload(model.cfg)
+    for temp in (0.0, 0.8):
+        h = Harness(model, params, reqs, drafter=drafter,
+                    verifier=verifier, temp=temp)
+        # pool = victim demand + donate headroom: victim alone fills it
+        d_vic = blocks_for_tokens(request_demand_tokens(
+            reqs[0].prompt.size, reqs[0].max_new_tokens,
+            h.drafter.gamma), BS)
+        h = Harness(model, params, reqs, drafter=drafter,
+                    verifier=verifier, temp=temp,
+                    pool_blocks=1 + d_vic + 1)
+        h.submit(0)
+        h.tick()                      # victim admitted, starts decoding
+        h.tick()                      # ... and commits some tokens
+        h.submit(1)
+        h.submit(2)
+        h.drain()
+        assert h.sched.preemptions >= 1
+        assert h.ctx.swaps >= 1
+        assert h.ctx.shared_blocks >= 1       # family shared the prefix
+        assert not h.ctx.swap                 # victim resumed + finished
+        ref = _reference(model, params, reqs, drafter=drafter,
+                         verifier=verifier, temp=temp)
+        for i, r in enumerate(ref):
+            got = h.sched.results[i]
+            assert got.tokens.size == reqs[i].max_new_tokens
+            np.testing.assert_array_equal(got.tokens, r.tokens)
+        # swap-in is pure host work: one compile for the whole episode
+        assert h.eng.step_traces == 1
+        # drained pool: every block back (free or cached), none leaked
+        assert h.ctx.pool.unique_allocated == 0
+        assert h.ctx.pool.free_blocks == h.ctx.pool.capacity
+
+
+def _fuzz_universe(cfg, rng):
+    """Mixed workload: two shared-prefix families (incl. an exact
+    duplicate prompt and a boundary-LCP tail) + unrelated prompts,
+    random priorities and budgets."""
+    a = rng.integers(0, cfg.vocab_size, 8)
+    b = rng.integers(0, cfg.vocab_size, 8)
+    prompts = [
+        np.tile(a, 2),                                # family A
+        np.tile(a, 2),                                # exact duplicate
+        np.concatenate([np.tile(a, 2), a[:5]]),       # A + boundary tail
+        np.tile(b, 2),                                # family B
+        np.concatenate([b, b[:4]]),                   # B, shorter chain
+        rng.integers(0, cfg.vocab_size, 14),          # cold
+    ]
+    return [GenerationRequest(p, max_new_tokens=int(rng.integers(3, 7)),
+                              seed=i, priority=int(rng.integers(0, 3)))
+            for i, p in enumerate(prompts)]
+
+
+@pytest.mark.parametrize("seed,drafter,verifier,temp", [
+    (0, "ngram", "bf16", 0.0),
+    (1, "ngram", "bf16", 0.0),
+    (2, "pruned", "bf16", 0.0),
+    (3, "vanilla", "w8a8", 0.8),
+])
+def test_scheduler_fuzz_random_interleavings(model, params, seed, drafter,
+                                             verifier, temp):
+    """Seeded random interleavings of submit/step over a tight pool:
+    arrival order, gaps and priorities are random, so admission, prefix
+    hits, boundary forks, preemption and resume interleave arbitrarily —
+    tokens must still be bit-identical per request to the contiguous
+    run, with pool invariants checked after every tick."""
+    rng = np.random.default_rng(100 + seed)
+    reqs = _fuzz_universe(model.cfg, rng)
+    h = Harness(model, params, reqs, drafter=drafter, verifier=verifier,
+                temp=temp)
+    order = rng.permutation(len(reqs))
+    k = 0
+    while k < len(order) or h.sched.busy:
+        while k < len(order) and rng.random() < 0.55:
+            h.submit(int(order[k]))
+            k += 1
+        if k < len(order) and not h.sched.busy:
+            continue                  # nothing running: submit more
+        h.tick()
+    assert len(h.sched.results) == len(reqs)
+    ref = _reference(model, params, reqs, drafter=drafter,
+                     verifier=verifier, temp=temp)
+    for j, i in enumerate(order):     # results keyed by submission index
+        got = h.sched.results[j]
+        np.testing.assert_array_equal(got.tokens, ref[int(i)].tokens)
+    assert h.eng.step_traces == 1
+    assert h.ctx.pool.unique_allocated == 0
+
+
+def test_unshared_paged_run_unchanged(model, params):
+    """kv_prefix_sharing=False collapses to PR 5's reservation formulas:
+    the manual harness serves the shared-prefix workload with zero
+    index hits and the same tokens."""
+    reqs = _preempt_workload(model.cfg)
+    h = Harness(model, params, reqs, drafter="ngram", verifier="bf16",
+                temp=0.0, sharing=False)
+    for j in range(len(reqs)):
+        h.submit(j)
+    h.drain()
+    assert h.ctx.shared_blocks == 0 and h.ctx.index is None
+    ref = _reference(model, params, reqs, drafter="ngram",
+                     verifier="bf16", temp=0.0)
+    for i, r in enumerate(ref):
+        np.testing.assert_array_equal(h.sched.results[i].tokens, r.tokens)
+
+
+def test_serving_loop_paged_lane_preempts_and_stays_exact(model, params):
+    """Open-loop front-end over a paged lane: a later better-keyed
+    arrival really preempts the running low-priority request via the
+    swap pool, and every request's tokens still match the batch engine
+    path bit-for-bit."""
+    from repro.serving.server import ServerConfig, ServingLoop
+    scp = dataclasses.replace(BASE_SCFG, kv_layout="paged",
+                              kv_block_size=BS, kv_pool_blocks=8)
+    eng = SpecEngine(model, scp, drafter="ngram", verifier="bf16")
+    reqs = _preempt_workload(model.cfg)
+    clock = [0.0]
+    loop = ServingLoop(eng, params,
+                       ServerConfig(batch_slots=2, max_prompt_len=24,
+                                    max_new_tokens=16),
+                       clock=lambda: clock[0])
+    handles = [loop.submit(reqs[0])]
+    for _ in range(2):                      # victim admitted + decoding
+        loop.poll()
+        clock[0] += 0.25
+    handles += [loop.submit(r) for r in reqs[1:]]
+    polls = 0
+    while loop.busy:
+        loop.poll()
+        clock[0] += 0.25
+        polls += 1
+        assert polls < 500
+    lane = next(iter(loop._lanes.values()))
+    assert lane.ctx is not None and lane.ctx.swaps >= 1
+    assert lane.sched.preemptions >= 1
+    loop.metrics.check_conservation()
+    expected = _reference(model, params, reqs, drafter="ngram",
+                          verifier="bf16", temp=0.0)
+    for h, res in zip(handles, expected):
+        assert h.status == "done"
+        got = h.result(timeout=0.0)
+        np.testing.assert_array_equal(got.tokens, res.tokens)
+        np.testing.assert_array_equal(h.collected(), got.tokens)
+
+
+# ---------------------------------------------------------------------------
+# Allocator property suite (hypothesis)
+# ---------------------------------------------------------------------------
+
+_BSP = 4
+_PROMPTS = [
+    np.array([1, 2, 3, 4, 5, 6, 7, 8, 9]),        # 2-block chain
+    np.array([1, 2, 3, 4, 5, 6, 7, 8, 9]),        # exact duplicate
+    np.array([1, 2, 3, 4, 5, 6, 7, 8, 10, 11]),   # boundary LCP
+    np.array([1, 2, 3, 4, 5, 6]),                 # shorter, same chain
+    np.array([9, 8, 7, 6, 5, 4, 3]),              # unrelated
+    np.array([9, 8, 7, 6, 5, 4, 3, 2, 1, 0, 1]),  # unrelated, longer
+]
+
+
+def _admit(pool, index, rid, prompt):
+    """Mirror ``PagedGroup``'s admission arithmetic at the pool level
+    (no device arrays): probe → share → boundary fork → fresh alloc →
+    register.  Returns False when the pool cannot admit."""
+    d = pool.blocks_for(prompt.size + 3)          # +small decode budget
+    ids, rows = index.lookup(prompt)
+    n_res = sum(1 for b in ids if pool.ref(b) == 0)
+    fork = 1 if ids and rows % _BSP != 0 else 0
+    need = d - len(ids) + fork
+    if not (ids and pool.can_reserve(need + n_res)):
+        ids, rows, n_res, fork = [], 0, 0, 0
+        need = d
+    if not pool.can_reserve(need + n_res):
+        return False
+    pool.reserve(rid, need)
+    if ids:
+        pool.share(rid, ids)
+    if fork:
+        old = pool.owned(rid)[len(ids) - 1]
+        new = pool.cow(rid, old)
+        if new == old:                # sole owner: stale entry evicted
+            index.evict_block(old)
+    pool.alloc(rid, d - len(ids))
+    index.register(prompt, pool.owned(rid))
+    return True
+
+
+@given(ops=st.lists(st.tuples(st.integers(0, 3),   # admit/release/swap/resume
+                              st.integers(0, 4),   # request id
+                              st.integers(0, len(_PROMPTS) - 1)),
+                    min_size=1, max_size=60),
+       num_blocks=st.integers(6, 24))
+@settings(max_examples=60, deadline=None)
+def test_pool_sharing_invariants_property(ops, num_blocks):
+    """Property: under ANY admit/share/fork/swap/release interleaving
+    over a shared-prefix prompt universe —
+
+    * ``free + cached + unique_allocated == capacity`` after every op;
+    * no block is freed while another request still references it;
+    * the scratch block is never shared, allocated or cached;
+    * a swapped request's release frees nothing (exactly-once).
+    """
+    index = PrefixIndex(_BSP)
+    pool = BlockPool(num_blocks, _BSP, prefix=index)
+    active, swapped = {}, {}
+    for kind, rid, pi in ops:
+        if kind == 0 and rid not in active and rid not in swapped:
+            if _admit(pool, index, rid, _PROMPTS[pi]):
+                active[rid] = set(pool.owned(rid))
+        elif kind == 1 and rid in active:
+            mine = active.pop(rid)
+            theirs = {b for r, s in active.items() for b in s}
+            freed = pool.release(rid)
+            assert set(freed) <= mine
+            for b in freed:
+                assert pool.ref(b) == 0
+            for b in mine & theirs:   # still referenced elsewhere
+                assert pool.ref(b) >= 1
+        elif kind == 1 and rid in swapped:
+            assert pool.release(rid) == []       # exactly-once
+            swapped.pop(rid)
+        elif kind == 2 and rid in active:
+            n = len(pool.owned(rid))
+            pool.swap_out(rid)
+            active.pop(rid)
+            swapped[rid] = n
+        elif kind == 3 and rid in swapped:
+            n = swapped[rid]
+            if pool.can_reserve(n):
+                pool.reserve(rid, n)
+                pool.alloc(rid, n)
+                active[rid] = set(pool.owned(rid))
+                swapped.pop(rid)
+        pool.check_invariants()
+        assert pool.free_blocks + pool.unique_allocated == pool.capacity
+        for r in active:
+            assert SCRATCH_BLOCK not in pool.owned(r)
+
+
+def test_scratch_block_never_shared_or_indexed():
+    index = PrefixIndex(_BSP)
+    pool = BlockPool(6, _BSP, prefix=index)
+    pool.reserve(0, 3)
+    with pytest.raises(ValueError, match="scratch"):
+        pool.share(0, [SCRATCH_BLOCK])
+    ids = pool.alloc(0, 3)
+    assert SCRATCH_BLOCK not in ids
+    prompt = np.arange(1, 11)
+    index.register(prompt, ids)
+    got, rows = index.lookup(prompt)
+    assert SCRATCH_BLOCK not in got and rows == prompt.size - 1
+
+
+# ---------------------------------------------------------------------------
+# Data-plane units: COW isolation, swap round-trip, double-free regression
+# ---------------------------------------------------------------------------
+
+def _filled_layers(cfg, num_blocks, rng):
+    layers = init_paged_cache(cfg, 1, 4, num_blocks, _BSP)["layers"]
+    def fill(x):
+        if x.dtype == jnp.int8:
+            return jnp.asarray(rng.integers(-128, 128, x.shape), jnp.int8)
+        return jnp.asarray(rng.standard_normal(x.shape), x.dtype)
+    return jax.tree.map(fill, layers)
+
+
+def test_cow_fork_never_mutates_shared_block(model):
+    """COW isolation: after a sharer forks and rewrites its copy, the
+    original block's bytes (and the other owner's view) are untouched."""
+    rng = np.random.default_rng(0)
+    index = PrefixIndex(_BSP)
+    pool = BlockPool(6, _BSP, prefix=index)
+    pool.reserve(0, 2)
+    b = pool.alloc(0, 1)[0]
+    pool.reserve(1, 2)
+    pool.share(1, [b])                   # ref(b) == 2
+    layers = _filled_layers(model.cfg, 6, rng)
+    before = [np.asarray(pl["k"][b]).copy() for pl in layers]
+    new = pool.cow(1, b)
+    assert new != b and pool.ref(b) == 1 and pool.ref(new) == 1
+    layers = clone_block(layers, b, new)
+    layers = [dict(pl, k=pl["k"].at[new].set(0.0)) for pl in layers]
+    for pl, snap in zip(layers, before):
+        np.testing.assert_array_equal(np.asarray(pl["k"][b]), snap)
+    assert pool.owned(0) == [b] and pool.owned(1) == [new]
+    pool.check_invariants()
+
+
+@pytest.mark.parametrize("kv", ["bf16", "int8"])
+def test_swap_roundtrip_bit_exact(model, kv):
+    """Host swap round-trip is bit-exact for both KV dtypes — int8
+    includes the f32 k_scale/v_scale pools."""
+    cfg = dataclasses.replace(model.cfg, kv_cache_dtype=kv)
+    rng = np.random.default_rng(1)
+    layers = _filled_layers(cfg, 8, rng)
+    if kv == "int8":
+        assert "k_scale" in layers[0] and "v_scale" in layers[0]
+    ids = [2, 5, 7]
+    before = [{k: np.asarray(v)[np.asarray(ids)].copy()
+               for k, v in pl.items()} for pl in layers]
+    host = swap_out_blocks(layers, ids)
+    # the pool reuses the blocks for someone else meanwhile
+    layers = [{k: v.at[jnp.asarray(ids)].set(0) for k, v in pl.items()}
+              for pl in layers]
+    layers = swap_in_blocks(layers, ids, host)
+    for pl, snap in zip(layers, before):
+        for name, want in snap.items():
+            np.testing.assert_array_equal(
+                np.asarray(pl[name])[np.asarray(ids)], want)
+
+
+def test_release_after_swap_out_frees_exactly_once():
+    """Regression: a finish/shed racing an eviction must not double-free.
+    ``swap_out`` already returned the blocks; the subsequent ``release``
+    returns ``[]`` and the free list holds each block exactly once."""
+    index = PrefixIndex(_BSP)
+    pool = BlockPool(8, _BSP, prefix=index)
+    pool.reserve(7, 3)
+    ids = pool.alloc(7, 3)
+    assert sorted(pool.swap_out(7)) == sorted(ids)
+    assert pool.free_blocks == pool.capacity
+    assert pool.release(7) == []                 # the racing release
+    pool.check_invariants()
+    assert pool.free_blocks == pool.capacity
+    # no duplicate free-list entries: two admissions get disjoint blocks
+    pool.reserve(1, 4)
+    a = pool.alloc(1, 4)
+    pool.reserve(2, 3)
+    b = pool.alloc(2, 3)
+    assert len(set(a) | set(b)) == 7 and not set(a) & set(b)
+    pool.release(1)
+    pool.release(2)
+    # the swapped mark was consumed: a resumed request releases normally
+    pool.reserve(7, 2)
+    c = pool.alloc(7, 2)
+    assert sorted(pool.release(7)) == sorted(c)
+    pool.check_invariants()

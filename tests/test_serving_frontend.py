@@ -529,12 +529,28 @@ def test_serving_loop_rejects_oversized_request(model, params):
         loop.submit(GenerationRequest(np.arange(4), 8))
 
 
-def test_serving_loop_rejects_paged_layout(model, params):
+def test_serving_loop_accepts_paged_layout(model, params):
+    """Paged engines get a paged lane (PagedGroup admission/release
+    wired through the scheduler hooks) instead of the PR 6 rejection;
+    the full preemption/sharing behaviour is locked down in
+    tests/test_prefix_sharing.py."""
     eng = SpecEngine(model, SpecConfig(temperature=0.0, gamma=3,
-                                       kv_layout="paged"),
-                     verifier="bf16")
-    with pytest.raises(ValueError, match="contiguous"):
-        ServingLoop(eng, params, ServerConfig())
+                                       kv_layout="paged", kv_block_size=8),
+                     drafter="ngram", verifier="bf16")
+    req = GenerationRequest(np.arange(8), 4, seed=1)
+    clock = [0.0]
+    loop = ServingLoop(eng, params,
+                       ServerConfig(batch_slots=1, max_prompt_len=8,
+                                    max_new_tokens=4),
+                       clock=lambda: clock[0])
+    h = loop.submit(req)
+    _drive(loop, clock)
+    lane = next(iter(loop._lanes.values()))
+    assert lane.ctx is not None           # paged group, not contiguous
+    assert lane.ctx.pool.unique_allocated == 0   # drained clean
+    expected = eng.generate_requests(params, [req], batch_slots=1)
+    np.testing.assert_array_equal(h.result(0.0).tokens,
+                                  expected[0].tokens)
 
 
 # ---------------------------------------------------------------------------
