@@ -42,6 +42,31 @@ def _bench_step_us() -> float:
     return (time.perf_counter() - t0) / n * 1e6
 
 
+def _acceptance_parity(quick: bool) -> str:
+    """w8a8-vs-bf16 verify acceptance parity from *live* engine telemetry
+    (``SpecEngine.telemetry`` accepted-length histograms), not offline
+    tables — the paper's Table-1 invariant as a monitorable signal."""
+    import jax.numpy as jnp
+
+    from repro.core.config import SpecConfig
+    from repro.data import task_prompts
+    from repro.serving.engine import SpecEngine
+    from benchmarks.common import get_trained
+
+    model, params, _ = get_trained("qwen3-sub")
+    prompts = jnp.asarray(
+        task_prompts("gsm8k", 2, 48, model.cfg.vocab_size))
+    new_tokens = 16 if quick else 64
+    L = {}
+    for verifier in ("bf16", "w8a8"):
+        engine = SpecEngine(model, SpecConfig(gamma=5, temperature=0.0),
+                            drafter="ngram", verifier=verifier)
+        engine.generate(params, prompts, new_tokens)
+        L[verifier] = engine.telemetry.mean_accept(f"ngram:{verifier}")
+    return (f"bf16_L={L['bf16']:.2f};w8a8_L={L['w8a8']:.2f};"
+            f"delta={L['w8a8'] - L['bf16']:+.3f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -144,6 +169,9 @@ def main() -> None:
                   f"fifo_hit={sl['fifo_hit_rate']:.3f};"
                   f"edf_shed_hit={sl['edf_shed_hit_rate']:.3f};"
                   f"edf_ttft_p99={sl['edf_shed_ttft_p99']:.2f}s"))
+
+    lines.append(("acceptance_parity", step_us,
+                  _acceptance_parity(args.quick)))
 
     print("name,us_per_call,derived")
     for name, us, derived in lines:

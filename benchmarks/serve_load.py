@@ -75,6 +75,9 @@ class VirtualClock:
     def read(self) -> float:
         return self.t
 
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
 
 # ---------------------------------------------------------------------------
 # Trace generation / IO
@@ -131,15 +134,24 @@ def _requests_from_trace(trace, vocab: int, *, pattern_seed: int = 3) -> list:
 # ---------------------------------------------------------------------------
 
 def replay(engine, params, trace, *, admission: str, shed: bool,
-           batch_slots: int = 2, step_cost_s: float = STEP_COST_S) -> dict:
+           batch_slots: int = 2, step_cost_s: float = STEP_COST_S,
+           clock=None, tracer=None) -> dict:
     """Replay ``trace`` through a ServingLoop on the virtual clock.
 
     Arrivals are injected exactly at their trace timestamps; every lane
-    decode step advances virtual time by ``step_cost_s``.  Returns the
-    metrics summary plus the streaming-equality check.
+    decode step advances virtual time by ``step_cost_s`` *inside* the
+    step (``ServingLoop.step_hook``), so scheduler/decode trace spans
+    get real widths and per-step latencies equal the modeled step cost.
+    Returns the metrics summary plus the streaming-equality check.
+
+    ``clock`` / ``tracer`` let the caller share the virtual clock with a
+    ``repro.serving.trace.Tracer(clock=clock.read)`` — the resulting
+    trace is a pure function of (trace, seed, policy): two replays of
+    the same inputs serialize byte-identically.
     """
     requests = _requests_from_trace(trace, engine.model.cfg.vocab_size)
-    clock = VirtualClock()
+    if clock is None:
+        clock = VirtualClock()
     cfg = ServerConfig(
         batch_slots=batch_slots,
         max_prompt_len=max(r.prompt.size for r in requests),
@@ -147,7 +159,9 @@ def replay(engine, params, trace, *, admission: str, shed: bool,
         admission=admission,
         shed_late=shed,
     )
-    loop = ServingLoop(engine, params, cfg, clock=clock.read)
+    loop = ServingLoop(engine, params, cfg, clock=clock.read,
+                       tracer=tracer,
+                       step_hook=lambda: clock.advance(step_cost_s))
 
     events = sorted(zip((row["arrival_s"] for row in trace), requests),
                     key=lambda e: e[0])
@@ -163,9 +177,7 @@ def replay(engine, params, trace, *, admission: str, shed: bool,
             # idle: jump to the next arrival instead of spinning
             clock.t = max(clock.t, events[i][0])
             continue
-        before = loop.total_steps
-        loop.poll()
-        clock.t += (loop.total_steps - before) * step_cost_s
+        loop.poll()      # virtual time advances inside each decode step
 
     loop.metrics.check_conservation()
     # streaming contract: per-request deltas concatenate bit-identically
@@ -181,7 +193,7 @@ def replay(engine, params, trace, *, admission: str, shed: bool,
     return summary
 
 
-def _build_engine(smoke: bool):
+def _build_engine(smoke: bool, paged: bool = False):
     if smoke:
         import jax
 
@@ -194,8 +206,14 @@ def _build_engine(smoke: bool):
         from benchmarks.common import get_trained
         model, params, _ = get_trained("qwen3-sub")
         verifier = "w8a8"
-    engine = SpecEngine(model, SpecConfig(temperature=0.0, gamma=3),
-                        drafter="ngram", verifier=verifier)
+    scfg = SpecConfig(temperature=0.0, gamma=3)
+    if paged:
+        # tight block pool: the overloaded mix forces preempt/swap, so
+        # traces exercise the swap-out/in spans (tests/test_observability)
+        import dataclasses
+        scfg = dataclasses.replace(scfg, kv_layout="paged",
+                                   kv_block_size=8, kv_pool_blocks=10)
+    engine = SpecEngine(model, scfg, drafter="ngram", verifier=verifier)
     return engine, params
 
 
@@ -203,8 +221,14 @@ def _build_engine(smoke: bool):
 # Entry points
 # ---------------------------------------------------------------------------
 
-def rows(quick: bool = False, trace=None, seed: int = 0) -> dict:
-    """FIFO vs EDF+shed on the same overloaded trace (same seed)."""
+def rows(quick: bool = False, trace=None, seed: int = 0,
+         artifacts=None) -> dict:
+    """FIFO vs EDF+shed on the same overloaded trace (same seed).
+
+    Pass an ``artifacts`` dict to additionally capture a Perfetto tracer
+    for the EDF replay under ``artifacts["tracer"]`` (the tracer shares
+    the replay's virtual clock, so the export is deterministic).
+    """
     engine, params = _build_engine(smoke=quick)
     rate = None
     if trace is None:
@@ -214,7 +238,14 @@ def rows(quick: bool = False, trace=None, seed: int = 0) -> dict:
         rate = 6.0
         trace = poisson_trace(n, rate_per_s=rate, seed=seed)
     fifo = replay(engine, params, trace, admission="fifo", shed=False)
-    edf = replay(engine, params, trace, admission="edf", shed=True)
+    if artifacts is not None:
+        from repro.serving import Tracer
+        clock = VirtualClock()
+        artifacts["tracer"] = Tracer(clock=clock.read)
+        edf = replay(engine, params, trace, admission="edf", shed=True,
+                     clock=clock, tracer=artifacts["tracer"])
+    else:
+        edf = replay(engine, params, trace, admission="edf", shed=True)
     out = {
         "trace": {"n": len(trace), "seed": seed, "rate_per_s": rate},
         "fifo": fifo,
@@ -239,6 +270,13 @@ def main() -> int:
                     help="replay a recorded trace JSON instead of Poisson")
     ap.add_argument("--export-trace", default=None,
                     help="write the generated Poisson trace to this path")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto/Chrome trace of the EDF replay "
+                         "(virtual-clock timestamps; validate with "
+                         "tools/check_trace.py)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the full FIFO/EDF metrics summaries "
+                         "(latency, acceptance, kv_cache sections) as JSON")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -250,7 +288,25 @@ def main() -> int:
             json.dump(t, f, indent=1)
         print(f"trace -> {args.export_trace}")
 
-    out = rows(quick=smoke, trace=trace, seed=args.seed)
+    artifacts = {} if args.trace_out else None
+    out = rows(quick=smoke, trace=trace, seed=args.seed, artifacts=artifacts)
+
+    if smoke:
+        # CI gate: the summary schema the docs promise actually shipped
+        for pol in ("fifo", "edf_shed"):
+            s = out[pol]
+            assert "acceptance" in s and "kv_cache" in s, \
+                f"{pol}: summary missing telemetry sections"
+            assert all("accept_len" in v for v in s["acceptance"].values())
+
+    if args.trace_out:
+        artifacts["tracer"].save(args.trace_out)
+        print(f"trace-out -> {args.trace_out} "
+              f"({len(artifacts['tracer'].events)} events)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"metrics-out -> {args.metrics_out}")
 
     from benchmarks.common import save_json
     path = save_json("serve_load.json", out)

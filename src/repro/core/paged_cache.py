@@ -149,6 +149,14 @@ class PrefixIndex:
         self._entries: Dict[str, _PrefixEntry] = {}
         self._children: Dict[str, List[str]] = {}
         self._by_block: Dict[int, List[str]] = {}
+        # probe counters: NOTE the admission gate probes speculatively
+        # (can_admit may run many times per admission), so ``lookups`` /
+        # ``hits`` count *probes*; admission-level hit/miss rates live in
+        # PagedGroup (one count per actually-admitted request)
+        self.lookups = 0
+        self.hits = 0            # probes returning >= 1 shared block
+        self.hit_rows = 0        # cache rows covered across hit probes
+        self.evictions = 0       # entries dropped via evict_block
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -238,6 +246,10 @@ class PrefixIndex:
             if best_m > 0:
                 ids.append(best.block)
                 rows += best_m
+        self.lookups += 1
+        if ids:
+            self.hits += 1
+            self.hit_rows += rows
         return ids, rows
 
     def evict_block(self, block: int) -> None:
@@ -246,6 +258,7 @@ class PrefixIndex:
         for key in self._by_block.pop(block, []):
             e = self._entries.pop(key, None)
             if e is not None:
+                self.evictions += 1
                 kids = self._children.get(e.parent)
                 if kids is not None and key in kids:
                     kids.remove(key)
@@ -303,6 +316,16 @@ class BlockPool:
         self._drawn: Dict[int, int] = {}            # rid -> fresh drawn
         self._swapped: set = set()                  # rids evicted to host
         self.peak_allocated = 0                     # high-water unique blocks
+        # monotone event counters (observability: ServerMetrics kv_cache
+        # section aggregates these through PagedGroup.snapshot)
+        self.counters: Dict[str, int] = {
+            "alloc_blocks": 0,       # fresh draws (alloc + COW forks)
+            "freed_blocks": 0,       # refcount reached zero
+            "resurrections": 0,      # cached-free blocks shared back in
+            "cached_evicted": 0,     # cached-free blocks reclaimed by _draw
+            "cow_forks": 0,          # shared blocks forked for a writer
+            "swap_out_blocks": 0,    # blocks released via swap_out
+        }
 
     # -- capacity ------------------------------------------------------
     @property
@@ -381,6 +404,7 @@ class BlockPool:
             block, _ = self._cached.popitem(last=False)
             if self.prefix is not None:
                 self.prefix.evict_block(block)
+            self.counters["cached_evicted"] += 1
             return block
         raise RuntimeError(      # unreachable if reservations are honoured
             "free list exhausted (reservation accounting broken)")
@@ -404,6 +428,7 @@ class BlockPool:
             self._ref[b] = 1
         self._owned[rid].extend(ids)
         self._drawn[rid] += int(n_blocks)
+        self.counters["alloc_blocks"] += int(n_blocks)
         self._note_peak()
         return ids
 
@@ -431,6 +456,7 @@ class BlockPool:
                         "gate under-counted)")
                 del self._cached[b]
                 self._ref[b] = 1
+                self.counters["resurrections"] += 1
             else:
                 raise ValueError(f"block {b} is not shareable "
                                  "(free or unknown)")
@@ -462,6 +488,8 @@ class BlockPool:
         self._ref[new] = 1
         self._ref[block] -= 1
         self._drawn[rid] += 1
+        self.counters["alloc_blocks"] += 1
+        self.counters["cow_forks"] += 1
         owned = self._owned[rid]
         owned[owned.index(block)] = new
         self._note_peak()
@@ -471,6 +499,7 @@ class BlockPool:
         self._ref[block] -= 1
         if self._ref[block] == 0:
             del self._ref[block]
+            self.counters["freed_blocks"] += 1
             if self.prefix is not None and self.prefix.has_block(block):
                 self._cached[block] = None      # resurrectable, LRU order
             else:
@@ -491,6 +520,7 @@ class BlockPool:
         self._reserved.pop(rid, None)
         self._drawn.pop(rid, None)
         self._swapped.add(rid)
+        self.counters["swap_out_blocks"] += len(ids)
         return ids
 
     def release(self, rid: int) -> List[int]:

@@ -146,10 +146,16 @@ def make_decode_step(model, drafter, verifier, scfg,
                 "at one position")
 
     def decode_step(params, state):
+        # jax.named_scope annotates the HLO with draft/verify/commit
+        # phase names — zero runtime cost, but XLA device profiles (and
+        # Tracer(annotate_device=True) host spans) segment the fused
+        # step without splitting its jit (splitting would perturb
+        # fusion and break the tracing-on/off bit-identity guarantee)
         tokens, length = state["tokens"], state["length"]
-        proposal, dstate, key = drafter.propose(
-            model, params, tokens, length, state["drafter_state"],
-            state["key"])
+        with jax.named_scope("draft"):
+            proposal, dstate, key = drafter.propose(
+                model, params, tokens, length, state["drafter_state"],
+                state["key"])
 
         last = jnp.take_along_axis(
             tokens, jnp.maximum(length - 1, 0)[:, None], axis=1)
@@ -157,34 +163,43 @@ def make_decode_step(model, drafter, verifier, scfg,
         start = jnp.maximum(length - 1, 0)
 
         key, sub = prng.next_key(key)
-        if template is None:
-            logits, cand = model.verify_step(params, state["cache"], window,
-                                             start, num_layers=num_layers)
-            res = verifier.verify(logits, proposal, scfg.temperature, sub)
-            cache = model.commit(cand, res.n_accept, num_layers=num_layers)
-            drafts = proposal.tokens
-        else:
-            logits, cand = model.verify_step(
-                params, state["cache"], window, start, num_layers=num_layers,
-                tree_depths=template.depths_dev,
-                tree_mask=template.mask_dev)
-            res = verifier.verify_tree(logits, proposal, template,
-                                       scfg.temperature, sub)
-            cache = model.commit_tree(cand, start, res.path_nodes,
-                                      res.n_accept, num_layers=num_layers)
-            drafts = res.path_tokens           # accepted path, chain order
-        dstate = drafter.advance(model, dstate, proposal, res.n_accept)
+        with jax.named_scope("verify"):
+            if template is None:
+                logits, cand = model.verify_step(
+                    params, state["cache"], window,
+                    start, num_layers=num_layers)
+                res = verifier.verify(logits, proposal, scfg.temperature,
+                                      sub)
+            else:
+                logits, cand = model.verify_step(
+                    params, state["cache"], window, start,
+                    num_layers=num_layers,
+                    tree_depths=template.depths_dev,
+                    tree_mask=template.mask_dev)
+                res = verifier.verify_tree(logits, proposal, template,
+                                           scfg.temperature, sub)
+        with jax.named_scope("commit"):
+            if template is None:
+                cache = model.commit(cand, res.n_accept,
+                                     num_layers=num_layers)
+                drafts = proposal.tokens
+            else:
+                cache = model.commit_tree(cand, start, res.path_nodes,
+                                          res.n_accept,
+                                          num_layers=num_layers)
+                drafts = res.path_tokens       # accepted path, chain order
+            dstate = drafter.advance(model, dstate, proposal, res.n_accept)
 
-        n_commit = res.n_commit
-        if "target" in state:
-            # freeze rows that reached their per-request target length
-            n_commit = jnp.clip(n_commit, 0, state["target"] - length)
-            active = (length < state["target"]).astype(jnp.int32)
-        else:
-            active = jnp.ones_like(length)
-        tokens = _commit_tokens(tokens, length, drafts,
-                                res.next_token, res.n_accept,
-                                n_write=n_commit)
+            n_commit = res.n_commit
+            if "target" in state:
+                # freeze rows that reached their per-request target length
+                n_commit = jnp.clip(n_commit, 0, state["target"] - length)
+                active = (length < state["target"]).astype(jnp.int32)
+            else:
+                active = jnp.ones_like(length)
+            tokens = _commit_tokens(tokens, length, drafts,
+                                    res.next_token, res.n_accept,
+                                    n_write=n_commit)
         out = {
             "tokens": tokens,
             "length": length + n_commit,

@@ -94,6 +94,17 @@ def main():
     ap.add_argument("--no-shed", action="store_true",
                     help="--serve: keep past-deadline queued work instead "
                          "of shedding it")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event / Perfetto JSON of "
+                         "the run (request lifecycle, scheduler ticks, "
+                         "decode/prefill/swap spans); open at "
+                         "https://ui.perfetto.dev")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics summary (latency, acceptance, "
+                         "kv_cache sections) as JSON")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write the metrics in Prometheus text exposition "
+                         "format (ServerMetrics.expose_text)")
     args = ap.parse_args()
 
     import dataclasses
@@ -144,6 +155,34 @@ def main():
     print(f"arch={cfg.name} verifier={engine.verifier.name} "
           f"drafter={engine.drafter.name} kv_cache={cfg.kv_cache_dtype} "
           f"kv_layout={args.kv_layout} attn={attn_path}")
+
+    import json
+
+    from repro.serving.trace import Tracer
+    tracer = Tracer() if args.trace_out else None
+
+    def dump_observability(metrics=None):
+        """Write --trace-out / --metrics-out / --prom-out artifacts."""
+        if tracer is not None:
+            tracer.save(args.trace_out)
+            print(f"trace: {args.trace_out} "
+                  f"({len(tracer.events)} events)")
+        if args.metrics_out:
+            if metrics is not None:
+                payload = metrics.summary()
+            else:  # batch path: engine-level telemetry only
+                payload = {"acceptance": engine.telemetry.summary()}
+            with open(args.metrics_out, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            print(f"metrics: {args.metrics_out}")
+        if args.prom_out:
+            if metrics is None:
+                print("--prom-out needs --serve (ServerMetrics); skipped")
+            else:
+                with open(args.prom_out, "w") as f:
+                    f.write(metrics.expose_text())
+                print(f"prometheus: {args.prom_out}")
+
     if args.serve:
         import numpy as np
 
@@ -161,7 +200,7 @@ def main():
                                size=args.requests)
         pool = np.asarray(prompts)
         t0 = time.perf_counter()
-        with StreamingServer(engine, params, cfg_srv) as srv:
+        with StreamingServer(engine, params, cfg_srv, tracer=tracer) as srv:
             handles = []
             for i in range(args.requests):
                 time.sleep(gaps[i])
@@ -178,6 +217,7 @@ def main():
             summary = srv.loop.metrics.summary()
         wall = time.perf_counter() - t0
         srv.loop.metrics.check_conservation()
+        dump_observability(metrics=srv.loop.metrics)
         c = summary["counters"]
         lat = summary["latency"]
         print(f"served {c['completed']}/{c['submitted']} "
@@ -199,7 +239,7 @@ def main():
         reqs = [GenerationRequest(np.asarray(p), args.new_tokens, seed=i)
                 for i, p in enumerate(np.asarray(prompts))]
         t0 = time.perf_counter()
-        out = engine.generate_requests(params, reqs)
+        out = engine.generate_requests(params, reqs, tracer=tracer)
         wall = time.perf_counter() - t0
         new_tokens = sum(r.new_tokens for r in out)
         L = sum(r.accept_len for r in out) / len(out)
@@ -207,11 +247,13 @@ def main():
         print(f"generated {new_tokens} tokens in {wall:.2f}s "
               f"({new_tokens / max(wall, 1e-9):.1f} tok/s CPU)")
         print(f"verify steps={steps}  mean acceptance length L={L:.3f}")
+        dump_observability()
         return
     r = engine.generate(params, prompts, args.new_tokens)
     print(f"generated {r.new_tokens} tokens in {r.wall_s:.2f}s "
           f"({r.tokens_per_s:.1f} tok/s CPU)")
     print(f"verify steps={r.steps}  mean acceptance length L={r.mean_accept_len:.3f}")
+    dump_observability()
 
 
 if __name__ == "__main__":

@@ -3,9 +3,12 @@ from repro.serving.engine import (  # noqa: F401
     GenResult,
     SpecEngine,
 )
+from repro.serving.histogram import Histogram  # noqa: F401
 from repro.serving.metrics import (  # noqa: F401
+    AcceptanceStats,
     RequestTimeline,
     ServerMetrics,
+    percentile,
 )
 from repro.serving.request import (  # noqa: F401
     GenerationRequest,
@@ -20,4 +23,9 @@ from repro.serving.server import (  # noqa: F401
     ServingLoop,
     StreamHandle,
     StreamingServer,
+)
+from repro.serving.trace import (  # noqa: F401
+    NULL_TRACER,
+    NullTracer,
+    Tracer,
 )

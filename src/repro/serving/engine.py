@@ -70,7 +70,9 @@ from repro.serving.request import (
     pad_prompt,
     safe_rate,
 )
+from repro.serving.metrics import AcceptanceStats
 from repro.serving.scheduler import Scheduler
+from repro.serving.trace import NULL_TRACER
 
 # deprecated mode-string → drafter-registry-name mapping (public: the serve
 # CLI builds its --mode choices from it)
@@ -122,6 +124,10 @@ class SpecEngine:
         self.step_traces = 0
         # per-group sizing of the last generate_requests call
         self.group_stats = []
+        # live per drafter×verifier acceptance/step-time telemetry,
+        # accumulated across generate / generate_requests / serving-lane
+        # calls (bounded histograms; benchmarks/run.py reads this)
+        self.telemetry = AcceptanceStats()
         self._step = self._jit_counted(
             make_decode_step(model, self.drafter, self.verifier, scfg))
         self._steps_by_temp = {}                   # temperature overrides
@@ -185,13 +191,26 @@ class SpecEngine:
         return state
 
     def _run(self, step, params, state, max_steps: int):
-        """Drive the jitted step until every row reaches its target."""
+        """Drive the jitted step until every row reaches its target,
+        feeding per-step accepted-length/wall-time telemetry (host-side,
+        from the same post-step length read the loop already does)."""
+        tkey = f"{self.drafter.name}:{self.verifier.name}"
+        targets = np.asarray(state["target"])
+        prev = np.minimum(np.asarray(state["length"]), targets)
         t0 = time.perf_counter()
         steps = 0
         while True:
+            t_s = time.perf_counter()
             state = step(params, state)
+            lengths = np.asarray(state["length"])
+            step_s = time.perf_counter() - t_s
             steps += 1
-            if bool(jnp.all(state["length"] >= state["target"])):
+            cur = np.minimum(lengths, targets)
+            active = prev < targets
+            self.telemetry.on_decode_step(
+                tkey, (cur - prev)[active].tolist(), step_s)
+            prev = cur
+            if bool((lengths >= targets).all()):
                 break
             if steps > max_steps:      # safety: >= 1 token/step guaranteed
                 break
@@ -442,12 +461,14 @@ class SpecEngine:
         return state
 
     def paged_group(self, *, num_blocks: int, block_size: int,
-                    gamma: int) -> "PagedGroup":
+                    gamma: int, tracer=None,
+                    trace_tid: int = 0) -> "PagedGroup":
         """Build the per-group paged-serving context (allocator + prefix
         index + swap pool) honouring ``SpecConfig.kv_prefix_sharing``."""
         return PagedGroup(self, num_blocks=num_blocks,
                           block_size=block_size, gamma=gamma,
-                          sharing=self.scfg.kv_prefix_sharing)
+                          sharing=self.scfg.kv_prefix_sharing,
+                          tracer=tracer, trace_tid=trace_tid)
 
     def generate_requests(
         self,
@@ -459,6 +480,7 @@ class SpecEngine:
         draft_params=None,
         admission: str = "fifo",       # "fifo" | "edf" (deadline-aware)
         on_tokens=None,                # per-request streaming callback
+        tracer=None,                   # trace.Tracer: per-group tick spans
     ) -> List[RequestResult]:
         """Serve requests with heterogeneous prompt lengths, budgets,
         seeds and temperatures; returns results in request order.
@@ -522,8 +544,10 @@ class SpecEngine:
         paged = self.scfg.kv_layout == "paged"
         if paged:
             self._check_paged_supported()
-        for t, idxs in groups.items():
+        tr = tracer if tracer is not None else NULL_TRACER
+        for gi, (t, idxs) in enumerate(groups.items()):
             step, drafter = self._step_for_temperature(t)
+            tr.thread_name(gi, f"group{gi} T={t:g}")
             batch = [requests[i] for i in idxs]
             lengths = [r.prompt.size for r in batch]
             if (len(set(lengths)) > 1
@@ -549,7 +573,8 @@ class SpecEngine:
                 slots = plan.slots
                 ctx = self.paged_group(num_blocks=plan.num_blocks,
                                        block_size=plan.block_size,
-                                       gamma=drafter.gamma)
+                                       gamma=drafter.gamma,
+                                       tracer=tracer, trace_tid=gi)
                 cache = init_paged_cache(self.model.cfg, slots,
                                          plan.max_blocks, plan.num_blocks,
                                          plan.block_size)
@@ -617,7 +642,15 @@ class SpecEngine:
                 def group_on_tokens(j, toks, _idxs=idxs):
                     on_tokens(_idxs[j], toks)     # group -> request index
 
-            sched = Scheduler(batch, slots, policy=admission)
+            tkey = f"{drafter.name}:{self.verifier.name}"
+
+            def group_stats_cb(accepted, step_s, n_tokens, _k=tkey):
+                self.telemetry.on_decode_step(_k, accepted, step_s)
+
+            sched = Scheduler(batch, slots, policy=admission,
+                              tracer=tracer, trace_tid=gi,
+                              trace_ids=idxs,
+                              on_step_stats=group_stats_cb)
             _, group_results = sched.run(
                 state, admit=admit, step=step_fn, t0=t_arrival,
                 can_admit=can_admit, release=release, preempt=preempt,
@@ -671,7 +704,8 @@ class PagedGroup:
     """
 
     def __init__(self, engine: SpecEngine, *, num_blocks: int,
-                 block_size: int, gamma: int, sharing: bool = True):
+                 block_size: int, gamma: int, sharing: bool = True,
+                 tracer=None, trace_tid: int = 0):
         self.engine = engine
         self.gamma = int(gamma)
         self.index = PrefixIndex(block_size) if sharing else None
@@ -679,11 +713,26 @@ class PagedGroup:
         self.live: dict = {}       # slot -> (rid, demand_tokens)
         self.swap: dict = {}       # rid  -> host snapshot
         self._reqs: dict = {}      # rid  -> (request, aux_embeds)
+        self._tr = tracer if tracer is not None else NULL_TRACER
+        self.trace_tid = int(trace_tid)
         # telemetry (benchmarks/ablation_kv.py shared-prefix section)
         self.shared_blocks = 0     # prefix-cache block hits
         self.shared_rows = 0       # prompt rows served from cache
         self.swaps = 0             # preemptions executed
         self.cow_forks = 0         # boundary forks (admission + sweep)
+        # observability counters (ServerMetrics kv_cache section via
+        # :meth:`snapshot`) — admission-level prefix accounting, one
+        # count per admitted request (the index's own probe counters
+        # are inflated by speculative can_admit probes)
+        self.prefix_hits = 0       # admissions that shared >= 1 block
+        self.prefix_misses = 0     # sharing-eligible admissions, cold
+        self.shared_tokens = 0     # prompt rows gathered from the cache
+        self.cold_prefill_tokens = 0   # prompt rows prefilled cold
+        self.resurrections = 0     # cached-free blocks shared back in
+        self.swap_out_bytes = 0    # host-snapshot traffic, out
+        self.swap_in_bytes = 0     # ... and back in
+        self.swapped_out_blocks = 0
+        self.swapped_in_blocks = 0
 
     # -- registration --------------------------------------------------
     def register(self, rid: int, request: GenerationRequest,
@@ -760,14 +809,24 @@ class PagedGroup:
             self.pool.share(rid, ids)
             self.shared_blocks += len(ids)
             self.shared_rows += rows
+        if self.index is not None and aux is None:
+            if ids:
+                self.prefix_hits += 1
+            else:
+                self.prefix_misses += 1
+        self.shared_tokens += rows
+        self.cold_prefill_tokens += max(P - 1 - rows, 0)
+        self.resurrections += n_res
         self.live[slot] = (rid, self.demand_tokens(rid))
         if ids and rows % bs != 0:
             self.cow_forks += 1          # prefill_into_slot forks below
-        state = self.engine.prefill_into_slot(
-            params, state, slot, r, pmax=pmax, drafter=drafter,
-            aux_embeds=aux, draft_params=draft_params,
-            pool=self.pool, rid=rid,
-            shared_blocks=len(ids), shared_rows=rows)
+        with self._tr.span("prefill", tid=self.trace_tid, rid=rid,
+                           shared_rows=rows, cold_rows=max(P - 1 - rows, 0)):
+            state = self.engine.prefill_into_slot(
+                params, state, slot, r, pmax=pmax, drafter=drafter,
+                aux_embeds=aux, draft_params=draft_params,
+                pool=self.pool, rid=rid,
+                shared_blocks=len(ids), shared_rows=rows)
         if self.index is not None and aux is None:
             self.index.register(np.asarray(r.prompt).ravel(),
                                 self.pool.owned(rid),
@@ -804,21 +863,27 @@ class PagedGroup:
         L = int(np.asarray(state["length"])[slot])
         n_save = self.pool.blocks_for(max(L - 1, 0))
         ids = self.pool.owned(rid)[:n_save]
-        snap = {
-            "n_blocks": n_save,
-            "blocks": swap_out_blocks(state["cache"]["layers"], ids),
-            "tokens": np.asarray(state["tokens"][slot]),
-            "length": L,
-            "target": int(np.asarray(state["target"])[slot]),
-            "key": np.asarray(state["key"][slot]),
-            "commits": int(np.asarray(state["stats"]["commits"])[slot]),
-            "row_steps": int(np.asarray(state["stats"]["row_steps"])[slot]),
-            "drafter": jax.tree.map(lambda x: np.asarray(x[slot]),
-                                    state["drafter_state"]),
-        }
+        with self._tr.span("swap_out", tid=self.trace_tid, rid=rid,
+                           blocks=n_save):
+            snap = {
+                "n_blocks": n_save,
+                "blocks": swap_out_blocks(state["cache"]["layers"], ids),
+                "tokens": np.asarray(state["tokens"][slot]),
+                "length": L,
+                "target": int(np.asarray(state["target"])[slot]),
+                "key": np.asarray(state["key"][slot]),
+                "commits": int(np.asarray(state["stats"]["commits"])[slot]),
+                "row_steps": int(
+                    np.asarray(state["stats"]["row_steps"])[slot]),
+                "drafter": jax.tree.map(lambda x: np.asarray(x[slot]),
+                                        state["drafter_state"]),
+            }
         self.pool.swap_out(rid)
         self.swap[rid] = snap
         self.swaps += 1
+        nbytes = int(sum(x.nbytes for x in jax.tree.leaves(snap["blocks"])))
+        self.swap_out_bytes += nbytes
+        self.swapped_out_blocks += n_save
         state = dict(state)
         state["length"] = state["length"].at[slot].set(0)
         state["target"] = state["target"].at[slot].set(0)
@@ -829,9 +894,16 @@ class PagedGroup:
 
     def _resume(self, state: dict, slot: int, rid: int) -> dict:
         """Re-admit a swapped request: fresh blocks, bit-exact copy-back."""
+        with self._tr.span("swap_in", tid=self.trace_tid, rid=rid):
+            return self._resume_inner(state, slot, rid)
+
+    def _resume_inner(self, state: dict, slot: int, rid: int) -> dict:
         snap = self.swap.pop(rid)
         self.pool.reserve(rid, self.demand_blocks(rid))
         ids = self.pool.alloc(rid, snap["n_blocks"])
+        self.swap_in_bytes += int(sum(
+            x.nbytes for x in jax.tree.leaves(snap["blocks"])))
+        self.swapped_in_blocks += len(ids)
         state = dict(state)
         state["stats"] = dict(state["stats"])
         state["tokens"] = state["tokens"].at[slot].set(
@@ -860,8 +932,9 @@ class PagedGroup:
     # -- per-step maintenance ------------------------------------------
     def prepare_step(self, state: dict) -> dict:
         """Run before every decode step: block top-up + COW sweep."""
-        state = self.engine._append_paged_blocks(
-            state, self.pool, self.live, self.gamma)
+        with self._tr.span("append_blocks", tid=self.trace_tid):
+            state = self.engine._append_paged_blocks(
+                state, self.pool, self.live, self.gamma)
         if self.index is None or not self.live:
             return state
         # defensive copy-on-write: fork any still-shared block the next
@@ -891,6 +964,34 @@ class PagedGroup:
             state["cache"]["layers"] = layers
             state["cache"]["bt"] = bt
         return state
+
+    # -- observability -------------------------------------------------
+    def snapshot(self) -> dict:
+        """Gauge snapshot for ``ServerMetrics.add_kv_source`` (schema:
+        docs/observability.md, kv_cache section).  All counters are
+        monotone; ``pool`` carries this group's point-in-time gauges."""
+        return {
+            "prefix_hits": self.prefix_hits,
+            "prefix_misses": self.prefix_misses,
+            "shared_blocks": self.shared_blocks,
+            "shared_tokens": self.shared_tokens,
+            "cold_prefill_tokens": self.cold_prefill_tokens,
+            "cow_forks": self.cow_forks,
+            "resurrections": self.resurrections,
+            "cached_evicted": self.pool.counters["cached_evicted"],
+            "swap_out_blocks": self.swapped_out_blocks,
+            "swap_in_blocks": self.swapped_in_blocks,
+            "swap_out_bytes": self.swap_out_bytes,
+            "swap_in_bytes": self.swap_in_bytes,
+            "preemptions": self.swaps,
+            "pool": {
+                "capacity": self.pool.capacity,
+                "free": self.pool.free_blocks,
+                "cached": self.pool.cached_blocks,
+                "unique_allocated": self.pool.unique_allocated,
+                "peak_allocated": self.pool.peak_allocated,
+            },
+        }
 
     # -- invariants ----------------------------------------------------
     def check_invariants(self) -> None:

@@ -14,37 +14,60 @@ front-end (``repro.serving.server``) calls as requests flow through:
     on_submit → on_admit → on_tokens* → on_finish      (served)
     on_submit → on_shed                                (deadline shed)
 
-plus ``on_step`` (per scheduler tick: the occupancy gauge) and
+plus ``on_step`` (per scheduler tick: the occupancy gauge),
 ``on_slot_event`` (the drain target for ``Scheduler.on_event`` — every
 completed occupancy is counted here even when the scheduler's retained
-``events`` list is capped).  All timestamps come from the caller's clock
-(wall or virtual), so load-replay benchmarks produce deterministic
+``events`` list is capped), and ``on_decode_step`` (per decode step:
+accepted-length and step wall-time samples per drafter×verifier — the
+live monitor of the paper's Table-1 signal that quantized verification
+preserves acceptance length).  All timestamps come from the caller's
+clock (wall or virtual), so load-replay benchmarks produce deterministic
 latency distributions.
 
+Latency/acceptance aggregates are **bounded**: samples land in
+log-bucketed :class:`repro.serving.histogram.Histogram`\\ s (O(1) per
+sample regardless of request count), never in raw lists.  Per-request
+timelines are kept in full by default — pass ``keep_timelines=False``
+for a months-lived process where only the aggregates should stay
+resident; finished/shed timelines are then dropped on fold and memory
+stays flat.
+
 ``summary()`` returns the JSON-ready schema (documented in
-``docs/decoding_api.md``); ``save()`` writes it.  Per-request timelines
-are kept in full by default — pass ``keep_timelines=False`` for a
-months-lived process where only the aggregates should stay resident.
+``docs/observability.md``); ``save()`` writes it;
+:meth:`ServerMetrics.expose_text` renders a Prometheus-style text
+exposition for scrape-based monitoring.  KV-cache gauges are pulled at
+summary time from registered sources (:meth:`add_kv_source` — the
+serving loop registers each paged lane's ``PagedGroup.snapshot``).
 """
 from __future__ import annotations
 
 import json
+import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.serving.histogram import Histogram
 
 
 def percentile(values, q: float) -> float:
     """Nearest-rank percentile (q in [0, 100]) without numpy: metrics
-    must stay importable in the scheduler's framework-agnostic layer."""
+    must stay importable in the scheduler's framework-agnostic layer.
+
+    Nearest-rank proper: the smallest value with at least ``⌈q/100·n⌉``
+    samples at or below it (``q=0`` → min, ``q=100`` → max).  The
+    previous implementation used Python ``round()``, whose banker's
+    rounding made p50 of even-length lists inconsistent with the
+    documented method (p50 of ``[1,2,3,4]`` returned 3, not 2).
+    """
     if not values:
         return float("nan")
     v = sorted(values)
-    k = max(0, min(len(v) - 1, round(q / 100.0 * (len(v) - 1))))
-    return float(v[int(k)])
+    k = max(1, min(len(v), math.ceil(q / 100.0 * len(v))))
+    return float(v[k - 1])
 
 
 def _dist(values) -> dict:
-    """p50/p99/mean/max summary of a latency sample list."""
+    """p50/p99/mean/max summary of a raw sample list."""
     if not values:
         return {"n": 0}
     return {
@@ -118,6 +141,79 @@ class RequestTimeline:
         }
 
 
+class AcceptanceStats:
+    """Per drafter×verifier decode-step telemetry: accepted-length and
+    step wall-time histograms, bounded memory.
+
+    One entry per ``"drafter:verifier"`` key.  ``accept_len`` samples
+    are the per-row tokens committed by one verify step (the live L
+    signal); ``step_s`` is host wall time of the whole fused step.
+    Owned by both :class:`ServerMetrics` (server view) and
+    ``SpecEngine.telemetry`` (engine view, batch/solo paths included).
+    """
+
+    def __init__(self):
+        self._per_key: Dict[str, dict] = {}
+
+    def _entry(self, key: str) -> dict:
+        e = self._per_key.get(key)
+        if e is None:
+            e = self._per_key[key] = {
+                "steps": 0,
+                "tokens": 0,
+                # accepted lengths are small ints >= 0: min_value .5
+                # puts 0 in the underflow bucket and 1, 2, 3... in
+                # distinct buckets up to max_value
+                "accept_len": Histogram(min_value=0.5, max_value=4096,
+                                        growth=1.15),
+                "step_s": Histogram(),
+            }
+        return e
+
+    def on_decode_step(self, key: str, accepted, step_s: float) -> None:
+        """One fused decode step: ``accepted`` is the per-active-row
+        committed-token count, ``step_s`` the step's wall time."""
+        e = self._entry(key)
+        e["steps"] += 1
+        for a in accepted:
+            e["accept_len"].add(float(a))
+            e["tokens"] += int(a)
+        if step_s >= 0:
+            e["step_s"].add(float(step_s))
+
+    def mean_accept(self, key: str) -> Optional[float]:
+        """Mean accepted length per row-step (the measured L)."""
+        e = self._per_key.get(key)
+        if e is None or not e["accept_len"].count:
+            return None
+        return e["accept_len"].mean
+
+    @property
+    def keys(self) -> List[str]:
+        return sorted(self._per_key)
+
+    def summary(self) -> dict:
+        return {
+            key: {
+                "steps": e["steps"],
+                "committed_tokens": e["tokens"],
+                "accept_len": e["accept_len"].summary(),
+                "step_s": e["step_s"].summary(),
+            }
+            for key, e in sorted(self._per_key.items())
+        }
+
+
+# KV-cache snapshot keys summed across registered sources; everything a
+# ``PagedGroup.snapshot()`` emits except the non-additive pool gauges.
+_KV_SUMMED = (
+    "prefix_hits", "prefix_misses", "shared_blocks", "shared_tokens",
+    "cold_prefill_tokens", "cow_forks", "resurrections", "cached_evicted",
+    "swap_out_blocks", "swap_in_blocks", "swap_out_bytes", "swap_in_bytes",
+    "preemptions",
+)
+
+
 class ServerMetrics:
     """Aggregating sink for the serving front-end's lifecycle hooks."""
 
@@ -125,6 +221,7 @@ class ServerMetrics:
         self.counters: Dict[str, int] = {
             "submitted": 0, "admitted": 0, "completed": 0, "shed": 0,
             "degraded": 0, "slot_events": 0, "stream_tokens": 0,
+            "decode_steps": 0,
         }
         self.keep_timelines = keep_timelines
         self.timelines: Dict[int, RequestTimeline] = {}
@@ -133,13 +230,17 @@ class ServerMetrics:
         self._occ_sum = 0
         self._occ_max = 0
         self._slots_total = 0
-        # latency aggregates survive even with keep_timelines=False
-        self._ttft: List[float] = []
-        self._itl: List[float] = []
-        self._queue: List[float] = []
-        self._service: List[float] = []
+        # latency aggregates: bounded log-bucketed histograms (memory is
+        # O(buckets), independent of request count — the fix for the
+        # unbounded raw lists keep_timelines=False used to accumulate)
+        self._ttft = Histogram()
+        self._itl = Histogram()
+        self._queue = Histogram()
+        self._service = Histogram()
         self._deadline_total = 0
         self._deadline_hits = 0
+        self.acceptance = AcceptanceStats()
+        self._kv_sources: List[Tuple[str, Callable[[], dict]]] = []
 
     # -- lifecycle hooks ------------------------------------------------
     def on_submit(self, rid: int, t: float,
@@ -197,6 +298,17 @@ class ServerMetrics:
         the scheduler's retained ``events`` list is capped."""
         self.counters["slot_events"] += 1
 
+    def on_decode_step(self, key: str, accepted, step_s: float) -> None:
+        """Per decode step acceptance telemetry (``Scheduler.
+        on_step_stats`` target): ``key`` is ``"drafter:verifier"``."""
+        self.counters["decode_steps"] += 1
+        self.acceptance.on_decode_step(key, accepted, step_s)
+
+    def add_kv_source(self, name: str, snapshot: Callable[[], dict]) -> None:
+        """Register a KV-cache gauge source (e.g. one paged lane's
+        ``PagedGroup.snapshot``); polled lazily at summary time."""
+        self._kv_sources.append((name, snapshot))
+
     # -- aggregation ----------------------------------------------------
     def _fold(self, tl: RequestTimeline) -> None:
         if tl.deadline_t is not None:
@@ -206,12 +318,13 @@ class ServerMetrics:
         if tl.status != "done":
             return
         if tl.ttft is not None:
-            self._ttft.append(tl.ttft)
-        self._itl.extend(tl.itl)
+            self._ttft.add(tl.ttft)
+        for gap in tl.itl:
+            self._itl.add(gap)
         if tl.admit_t is not None:
-            self._queue.append(tl.admit_t - tl.arrival_t)
+            self._queue.add(tl.admit_t - tl.arrival_t)
             if tl.finish_t is not None:
-                self._service.append(tl.finish_t - tl.admit_t)
+                self._service.add(tl.finish_t - tl.admit_t)
 
     @property
     def deadline_hit_rate(self) -> Optional[float]:
@@ -227,8 +340,27 @@ class ServerMetrics:
                 f"conservation violated: completed={c['completed']} + "
                 f"shed={c['shed']} != submitted={c['submitted']}")
 
+    def kv_cache_summary(self) -> dict:
+        """Aggregate of all registered KV sources (counters summed,
+        pool gauges listed per source) + the derived prefix hit rate."""
+        out = {k: 0 for k in _KV_SUMMED}
+        pools = {}
+        for name, snap in self._kv_sources:
+            s = snap()
+            for k in _KV_SUMMED:
+                out[k] += int(s.get(k, 0))
+            if "pool" in s:
+                pools[name] = s["pool"]
+        probes = out["prefix_hits"] + out["prefix_misses"]
+        out["prefix_hit_rate"] = (out["prefix_hits"] / probes
+                                  if probes else None)
+        out["sources"] = len(self._kv_sources)
+        if pools:
+            out["pools"] = pools
+        return out
+
     def summary(self, *, include_requests: bool = False) -> dict:
-        """JSON-ready metrics snapshot (schema: docs/decoding_api.md)."""
+        """JSON-ready metrics snapshot (schema: docs/observability.md)."""
         out = {
             "counters": dict(self.counters),
             "occupancy": {
@@ -239,16 +371,18 @@ class ServerMetrics:
                 "slots": self._slots_total,
             },
             "latency": {
-                "ttft_s": _dist(self._ttft),
-                "itl_s": _dist(self._itl),
-                "queue_s": _dist(self._queue),
-                "service_s": _dist(self._service),
+                "ttft_s": self._ttft.summary(),
+                "itl_s": self._itl.summary(),
+                "queue_s": self._queue.summary(),
+                "service_s": self._service.summary(),
             },
             "deadlines": {
                 "with_deadline": self._deadline_total,
                 "hits": self._deadline_hits,
                 "hit_rate": self.deadline_hit_rate,
             },
+            "acceptance": self.acceptance.summary(),
+            "kv_cache": self.kv_cache_summary(),
         }
         if include_requests and self.keep_timelines:
             out["requests"] = [self.timelines[r].to_dict()
@@ -260,3 +394,67 @@ class ServerMetrics:
             json.dump(self.summary(include_requests=include_requests), f,
                       indent=1)
         return path
+
+    # -- Prometheus-style exposition ------------------------------------
+    def expose_text(self) -> str:
+        """Prometheus text-format exposition of the summary (counters,
+        gauges, latency/acceptance summaries with stat labels, KV-cache
+        counters).  Deterministic ordering: scrape diffs are meaningful.
+        """
+        s = self.summary()
+        lines: List[str] = []
+
+        def emit(name, mtype, help_, samples):
+            lines.append(f"# HELP {name} {help_}")
+            lines.append(f"# TYPE {name} {mtype}")
+            for labels, v in samples:
+                if v is None or (isinstance(v, float) and math.isnan(v)):
+                    continue
+                lab = ("{" + ",".join(f'{k}="{val}"'
+                                      for k, val in labels) + "}"
+                       if labels else "")
+                lines.append(f"{name}{lab} {v}")
+
+        emit("serve_requests_total", "counter",
+             "Requests by lifecycle outcome.",
+             [([("event", k)], v) for k, v in sorted(s["counters"].items())])
+        occ = s["occupancy"]
+        emit("serve_slot_occupancy", "gauge", "Busy decode slots.",
+             [([("stat", k)], occ[k]) for k in ("mean", "max", "slots")])
+        for kind, d in sorted(s["latency"].items()):
+            name = f"serve_latency_{kind}"
+            emit(name, "gauge", f"Latency summary ({kind}).",
+                 [([("stat", st)], d.get(st))
+                  for st in ("n", "mean", "p50", "p99", "max")])
+        dl = s["deadlines"]
+        emit("serve_deadline_hit_rate", "gauge",
+             "Deadline hit rate over requests with an SLO.",
+             [([], dl["hit_rate"])])
+        acc_samples, step_samples = [], []
+        for key, e in s["acceptance"].items():
+            drafter, _, verifier = key.partition(":")
+            base = [("drafter", drafter), ("verifier", verifier)]
+            acc_samples.append((base + [("stat", "mean")],
+                                e["accept_len"].get("mean")))
+            acc_samples.append((base + [("stat", "p50")],
+                                e["accept_len"].get("p50")))
+            acc_samples.append((base + [("stat", "steps")], e["steps"]))
+            acc_samples.append((base + [("stat", "tokens")],
+                                e["committed_tokens"]))
+            step_samples.append((base + [("stat", "mean")],
+                                 e["step_s"].get("mean")))
+            step_samples.append((base + [("stat", "p99")],
+                                 e["step_s"].get("p99")))
+        emit("serve_accept_len", "gauge",
+             "Accepted tokens per row-step (live L) by drafter/verifier.",
+             acc_samples)
+        emit("serve_decode_step_seconds", "gauge",
+             "Decode step wall time by drafter/verifier.", step_samples)
+        kv = s["kv_cache"]
+        emit("serve_kv_cache_total", "counter",
+             "Paged KV-cache event counters (summed over lanes).",
+             [([("event", k)], kv[k]) for k in _KV_SUMMED])
+        emit("serve_kv_prefix_hit_rate", "gauge",
+             "Prefix-cache admission hit rate.",
+             [([], kv["prefix_hit_rate"])])
+        return "\n".join(lines) + "\n"

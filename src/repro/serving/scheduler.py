@@ -63,6 +63,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.serving.request import GenerationRequest, RequestResult
+from repro.serving.trace import NULL_TRACER
 
 
 @dataclass
@@ -109,6 +110,25 @@ class Scheduler:
     ``shed_indices`` (requests dropped by :meth:`shed_pending` before
     ever holding a slot).  ``completed + shed == submitted`` once idle —
     no request is silently lost (property-tested).
+
+    **Observability** (all optional, zero-cost when unset):
+
+    * ``tracer`` — a :class:`repro.serving.trace.Tracer`.  The scheduler
+      emits per-tick duration spans (``tick`` → ``admit`` / ``decode`` /
+      ``harvest`` / ``preempt`` on track ``trace_tid``) and per-request
+      async lifecycle phases (``queued`` → ``running`` → finish, with
+      ``preempted`` interludes and ``shed`` instants) keyed by the
+      request's trace id.
+    * ``trace_ids`` — external ids for the batch path's initial
+      requests (``generate_requests`` passes the caller's request
+      indices); open-loop callers pass ``trace_id=`` per
+      :meth:`submit`.  Defaults to the scheduler-local index.
+    * ``on_step_stats(accepted, step_s, n_tokens)`` — called after
+      every decode step with the per-active-row committed-token counts
+      (derived host-side from the length deltas the harvest already
+      reads — no extra device sync), the step wall time, and their sum.
+      The serving loop folds this into acceptance histograms per
+      drafter×verifier.
     """
 
     requests: Sequence[GenerationRequest]
@@ -119,6 +139,10 @@ class Scheduler:
     events: List[SlotEvent] = field(default_factory=list)
     steps: int = 0             # decode steps taken by the loop
     preemptions: int = 0       # running slots evicted for a better head
+    tracer: Optional[object] = None            # trace.Tracer (or None)
+    trace_tid: int = 0                         # tracer track for spans
+    trace_ids: Optional[Sequence[int]] = None  # ids for initial requests
+    on_step_stats: Optional[Callable[[List[int], float, int], None]] = None
 
     def __post_init__(self):
         if self.batch_slots < 1:
@@ -142,9 +166,22 @@ class Scheduler:
         # not queueing) and streaming resumes where it left off
         self._first_admit_t: Dict[int, float] = {}
         self._resume_streamed: Dict[int, int] = {}
+        self._tr = self.tracer if self.tracer is not None else NULL_TRACER
+        self._trace_ids_list: List[int] = []
+        # host-side committed length per slot: admission knows the
+        # prompt length (fresh) or the preemption snapshot (resume), and
+        # the harvest already reads post-step lengths — so per-step
+        # accepted-token counts cost zero extra device syncs
+        self._row_len = [0] * self.batch_slots
+        self._preempted_len: Dict[int, int] = {}
+        self._preempted: set = set()
+        ids = list(self.trace_ids) if self.trace_ids is not None else None
+        if ids is not None and len(ids) != len(initial):
+            raise ValueError("trace_ids must match the initial requests")
         now = time.perf_counter()
-        for r in initial:
-            self.submit(r, arrival_t=now)
+        for j, r in enumerate(initial):
+            self.submit(r, arrival_t=now,
+                        trace_id=ids[j] if ids is not None else None)
 
     # ------------------------------------------------------------------
     @property
@@ -173,7 +210,8 @@ class Scheduler:
     # ------------------------------------------------------------------
     def submit(self, request: GenerationRequest, *,
                arrival_t: Optional[float] = None,
-               deadline: Optional[float] = None) -> int:
+               deadline: Optional[float] = None,
+               trace_id: Optional[int] = None) -> int:
         """Enqueue ``request``; returns its request index.
 
         ``arrival_t`` stamps when the request arrived (``perf_counter``
@@ -181,8 +219,10 @@ class Scheduler:
         from it.  ``deadline`` is the *absolute* deadline on the same
         clock; when omitted it is derived as ``arrival_t +
         request.deadline_s`` (``inf`` if the request has no deadline).
-        Safe to call mid-loop between :meth:`tick`\\ s — this is the
-        open-loop ingestion path.
+        ``trace_id`` names the request in trace lifecycle spans (the
+        serving front-end passes its global request id); defaults to the
+        scheduler-local index.  Safe to call mid-loop between
+        :meth:`tick`\\ s — this is the open-loop ingestion path.
         """
         i = len(self.requests)
         self.requests.append(request)
@@ -192,8 +232,18 @@ class Scheduler:
             deadline = math.inf if dl is None else arrival + float(dl)
         self._arrival_t.append(arrival)
         self._deadlines.append(float(deadline))
+        self._trace_ids_list.append(i if trace_id is None else int(trace_id))
+        rid = self._trace_ids_list[i]
+        targs = {"rid": rid,
+                 "priority": int(getattr(request, "priority", 0))}
+        if math.isfinite(deadline):
+            targs["deadline_s"] = float(deadline)
+        self._tr.begin_async("queued", rid, **targs)
         heapq.heappush(self._pending, self._key(i))
         return i
+
+    def _rid(self, i: int) -> int:
+        return self._trace_ids_list[i]
 
     def deadline(self, i: int) -> float:
         """Absolute deadline of request ``i`` (``inf`` if none)."""
@@ -221,6 +271,14 @@ class Scheduler:
             heapq.heapify(keep)
             self._pending = keep
             self.shed_indices.extend(key[-1] for key in out)
+            for key in out:
+                i = key[-1]
+                rid = self._rid(i)
+                phase = "preempted" if i in self._preempted else "queued"
+                self._preempted.discard(i)
+                self._preempted_len.pop(i, None)
+                self._tr.end_async(phase, rid)
+                self._tr.instant("shed", tid=self.trace_tid, rid=rid)
         return [key[-1] for key in out]
 
     # ------------------------------------------------------------------
@@ -258,6 +316,24 @@ class Scheduler:
         Returns ``(state, harvested request indices)``; results land in
         ``self.results``.
         """
+        with self._tr.span("tick", tid=self.trace_tid, step=self.steps):
+            return self._tick_inner(
+                state, admit=admit, step=step, can_admit=can_admit,
+                release=release, preempt=preempt, on_tokens=on_tokens,
+                clock=clock)
+
+    def _tick_inner(
+        self,
+        state: dict,
+        *,
+        admit: Callable[[dict, int, int], dict],
+        step: Callable[[dict], dict],
+        can_admit: Optional[Callable[[int], bool]] = None,
+        release: Optional[Callable[[dict, int, int], dict]] = None,
+        preempt: Optional[Callable[[dict, int, int], dict]] = None,
+        on_tokens: Optional[Callable[[int, np.ndarray], None]] = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ) -> tuple:
         while self._pending:
             free_slot = next((s for s in range(self.batch_slots)
                               if self._slots[s] is None), None)
@@ -286,13 +362,20 @@ class Scheduler:
                         break
                     vs = victim[0]
                     vev = self._slots[vs]
-                    state = preempt(state, vs, vev.request_index)
+                    vi = vev.request_index
+                    vrid = self._rid(vi)
+                    with self._tr.span("preempt", tid=self.trace_tid,
+                                       rid=vrid, slot=vs):
+                        state = preempt(state, vs, vi)
                     vev.preempted = True
                     self._slots[vs] = None
                     self.preemptions += 1
-                    self._resume_streamed[vev.request_index] = vev.streamed
-                    heapq.heappush(self._pending,
-                                   self._key(vev.request_index))
+                    self._resume_streamed[vi] = vev.streamed
+                    self._preempted_len[vi] = self._row_len[vs]
+                    self._preempted.add(vi)
+                    self._tr.end_async("running", vrid)
+                    self._tr.begin_async("preempted", vrid, rid=vrid)
+                    heapq.heappush(self._pending, self._key(vi))
                 if not can_admit(i):
                     break
                 free_slot = next(s for s in range(self.batch_slots)
@@ -303,7 +386,17 @@ class Scheduler:
             # stamp (eviction is service disruption, not queueing)
             self._admit_t[free_slot] = \
                 self._first_admit_t.setdefault(i, clock())
-            state = admit(state, free_slot, i)
+            rid = self._rid(i)
+            resumed = i in self._preempted
+            self._tr.end_async("preempted" if resumed else "queued", rid)
+            self._preempted.discard(i)
+            self._tr.begin_async("running", rid, rid=rid, slot=free_slot,
+                                 resumed=resumed)
+            with self._tr.span("admit", tid=self.trace_tid, rid=rid,
+                               slot=free_slot, resumed=resumed):
+                state = admit(state, free_slot, i)
+            self._row_len[free_slot] = self._preempted_len.pop(
+                i, self.requests[i].prompt.size)
             ev = SlotEvent(request_index=i, slot=free_slot,
                            admit_step=self.steps,
                            streamed=self._resume_streamed.pop(i, 0))
@@ -317,13 +410,25 @@ class Scheduler:
                 f"request {self._pending[0][-1]} rejected by can_admit "
                 "with every slot idle — it can never be served")
 
-        state = step(state)
+        occupied = [s for s in range(self.batch_slots)
+                    if self._slots[s] is not None]
+        t_step = clock()
+        with self._tr.span("decode", tid=self.trace_tid, step=self.steps,
+                           rows=len(occupied)):
+            state = step(state)
+        step_s = clock() - t_step
         self.steps += 1
 
         lengths = np.asarray(state["length"])
         targets = np.asarray(state["target"])
-        occupied = [s for s in range(self.batch_slots)
-                    if self._slots[s] is not None]
+        if occupied:
+            accepted = []
+            for s in occupied:
+                cur = int(min(lengths[s], targets[s]))
+                accepted.append(max(0, cur - self._row_len[s]))
+                self._row_len[s] = cur
+            if self.on_step_stats is not None:
+                self.on_step_stats(accepted, step_s, sum(accepted))
         tokens_np = None                       # fetched lazily, once
         if on_tokens is not None:
             for s in occupied:
@@ -346,29 +451,34 @@ class Scheduler:
                 tokens_np = np.asarray(state["tokens"])
             commits = np.asarray(state["stats"]["commits"])
             row_steps = np.asarray(state["stats"]["row_steps"])
-            for s in done:
-                ev = self._slots[s]
-                ev.harvest_step = self.steps
-                i = ev.request_index
-                r = self.requests[i]
-                P = r.prompt.size
-                self.results[i] = RequestResult(
-                    request=r,
-                    tokens=tokens_np[s, P: P + r.max_new_tokens].copy(),
-                    prompt_len=P,
-                    accept_len=float(commits[s])
-                    / max(int(row_steps[s]), 1),
-                    steps=int(row_steps[s]),
-                    queue_s=self._admit_t[s] - self._arrival_t[i],
-                    service_s=now - self._admit_t[s],
-                )
-                harvested.append(i)
-                self._first_admit_t.pop(i, None)
-                if self.on_event is not None:
-                    self.on_event(ev)
-                if release is not None:
-                    state = release(state, s, i)
-                self._slots[s] = None
+            with self._tr.span("harvest", tid=self.trace_tid,
+                               rows=len(done)):
+                for s in done:
+                    ev = self._slots[s]
+                    ev.harvest_step = self.steps
+                    i = ev.request_index
+                    r = self.requests[i]
+                    P = r.prompt.size
+                    self.results[i] = RequestResult(
+                        request=r,
+                        tokens=tokens_np[s, P: P + r.max_new_tokens].copy(),
+                        prompt_len=P,
+                        accept_len=float(commits[s])
+                        / max(int(row_steps[s]), 1),
+                        steps=int(row_steps[s]),
+                        queue_s=self._admit_t[s] - self._arrival_t[i],
+                        service_s=now - self._admit_t[s],
+                    )
+                    harvested.append(i)
+                    self._first_admit_t.pop(i, None)
+                    self._tr.end_async("running", self._rid(i),
+                                       tokens=int(r.max_new_tokens),
+                                       steps=int(row_steps[s]))
+                    if self.on_event is not None:
+                        self.on_event(ev)
+                    if release is not None:
+                        state = release(state, s, i)
+                    self._slots[s] = None
         return state, harvested
 
     # ------------------------------------------------------------------

@@ -81,6 +81,7 @@ from repro.core.spec_engine import init_state
 from repro.serving.metrics import ServerMetrics
 from repro.serving.request import GenerationRequest, RequestResult
 from repro.serving.scheduler import Scheduler
+from repro.serving.trace import NULL_TRACER
 
 _MAX_LANES = 8          # distinct (temperature, degraded) decode loops
 
@@ -174,11 +175,15 @@ class _Lane:
     """One compiled decode loop: a Scheduler + fixed-shape state pytree
     for a given (temperature, degraded?) combination."""
 
-    def __init__(self, loop: "ServingLoop", engine, temperature: float):
+    def __init__(self, loop: "ServingLoop", engine, temperature: float,
+                 tid: int = 0):
         cfg = loop.cfg
+        self.loop = loop
+        self.tid = tid                         # tracer track for this lane
         self.engine = engine
         self.params = engine._prepare_cached(loop._raw_params)
         self.step, self.drafter = engine._step_for_temperature(temperature)
+        self.key = f"{self.drafter.name}:{engine.verifier.name}"
         self.buf = (cfg.max_prompt_len + cfg.max_new_tokens
                     + self.drafter.gamma + 2)
         # one padded prompt length per lane => admission prefill compiles
@@ -186,9 +191,16 @@ class _Lane:
         # generate_requests pads a group to its maximum
         self.pmax = cfg.max_prompt_len
         slots = cfg.batch_slots
+
+        def on_step_stats(accepted, step_s, n_tokens, _key=self.key):
+            loop.metrics.on_decode_step(_key, accepted, step_s)
+            engine.telemetry.on_decode_step(_key, accepted, step_s)
+
         self.sched = Scheduler(
             [], slots, policy=cfg.admission, max_events=cfg.max_events,
-            on_event=loop.metrics.on_slot_event)
+            on_event=loop.metrics.on_slot_event,
+            tracer=loop.tracer, trace_tid=tid,
+            on_step_stats=on_step_stats)
         self.ctx = None                        # paged: PagedGroup context
         cache = None
         scfg = engine.scfg
@@ -217,7 +229,9 @@ class _Lane:
                                      num_blocks, bs)
             self.ctx = engine.paged_group(num_blocks=num_blocks,
                                           block_size=bs,
-                                          gamma=self.drafter.gamma)
+                                          gamma=self.drafter.gamma,
+                                          tracer=loop.tracer,
+                                          trace_tid=tid)
         self.state = init_state(
             engine.model, slots, self.buf,
             jnp.zeros((slots, 2), jnp.uint32),
@@ -245,7 +259,13 @@ class _Lane:
     def step_fn(self, state: dict) -> dict:
         if self.ctx is not None:
             state = self.ctx.prepare_step(state)
-        return self.step(self.params, state)
+        state = self.step(self.params, state)
+        # fires inside the scheduler's "decode" span: a virtual-clock
+        # driver advances time here, so spans get real widths and the
+        # per-step wall time equals the modeled step cost
+        if self.loop.step_hook is not None:
+            self.loop.step_hook()
+        return state
 
 
 class ServingLoop:
@@ -259,7 +279,8 @@ class ServingLoop:
 
     def __init__(self, engine, params, cfg: ServerConfig = ServerConfig(),
                  *, clock=time.perf_counter,
-                 metrics: Optional[ServerMetrics] = None):
+                 metrics: Optional[ServerMetrics] = None,
+                 tracer=None, step_hook=None):
         if engine.model.cfg.arch_type in ("ssm", "hybrid"):
             raise ValueError(
                 f"{engine.model.cfg.arch_type!r} caches are recurrent: "
@@ -269,6 +290,12 @@ class ServingLoop:
         self.cfg = cfg
         self.clock = clock
         self.metrics = metrics if metrics is not None else ServerMetrics()
+        # tracer clock should match `clock` for coherent timelines; the
+        # caller constructs it (Tracer(clock=...)) so it can also carry
+        # spans from outside the loop.  step_hook fires after every
+        # jitted decode step (virtual-clock drivers advance time there).
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.step_hook = step_hook
         self._raw_params = params
         self._ingress: "queue.SimpleQueue" = queue.SimpleQueue()
         self._lanes: Dict[Tuple[float, bool], _Lane] = {}
@@ -330,8 +357,14 @@ class ServingLoop:
                     f"more than {_MAX_LANES} distinct (temperature, lane) "
                     "combinations — each pins a compiled decode step")
             engine = (self._degraded_engine if degraded else self.engine)
-            lane = _Lane(self, engine, temperature)
+            tid = len(self._lanes)
+            lane = _Lane(self, engine, temperature, tid)
             self._lanes[key] = lane
+            label = (f"lane{tid} T={temperature:g} {lane.key}"
+                     + (" degraded" if degraded else ""))
+            self.tracer.thread_name(tid, label)
+            if lane.ctx is not None:
+                self.metrics.add_kv_source(f"lane{tid}", lane.ctx.snapshot)
         return lane
 
     def _route_ingress(self) -> int:
@@ -350,7 +383,7 @@ class ServingLoop:
             lane = self._lane(t, degraded)
             idx = lane.sched.submit(
                 handle.request, arrival_t=handle.submit_t,
-                deadline=handle.deadline_t)
+                deadline=handle.deadline_t, trace_id=handle.rid)
             lane.on_submit(idx, handle)
             self.metrics.on_submit(handle.rid, handle.submit_t,
                                    deadline_t=handle.deadline_t,
@@ -405,6 +438,10 @@ class ServingLoop:
             self.total_steps += 1
             busy = sum(ev is not None for ev in lane.sched._slots)
             self.metrics.on_step(self.clock(), busy, lane.sched.batch_slots)
+            self.tracer.counter("occupancy", busy, tid=lane.tid)
+            if lane.ctx is not None:
+                self.tracer.counter("free_blocks",
+                                    lane.ctx.pool.free_blocks, tid=lane.tid)
             for i in harvested:
                 h = lane.handles.pop(i)
                 self.metrics.on_finish(h.rid, self.clock())
@@ -436,8 +473,10 @@ class StreamingServer:
     """
 
     def __init__(self, engine, params, cfg: ServerConfig = ServerConfig(),
-                 *, poll_idle_s: float = 0.002):
-        self.loop = ServingLoop(engine, params, cfg)
+                 *, poll_idle_s: float = 0.002, tracer=None,
+                 metrics: Optional[ServerMetrics] = None):
+        self.loop = ServingLoop(engine, params, cfg, tracer=tracer,
+                                metrics=metrics)
         self.poll_idle_s = poll_idle_s
         self._stop = threading.Event()
         self._wake = threading.Event()

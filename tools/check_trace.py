@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""Chrome trace-event JSON validator — the ``trace-check`` CI gate.
+
+Validates a trace produced by ``repro.serving.trace.Tracer`` (or any
+Chrome trace-event / Perfetto JSON) structurally, so a malformed export
+fails CI instead of silently rendering wrong in the viewer:
+
+1. top level is ``{"traceEvents": [...]}`` (or a bare event list);
+2. every event has ``name``/``ph``, and non-metadata events carry
+   numeric ``ts`` plus ``pid``/``tid``;
+3. duration events nest properly per ``(pid, tid)`` track: every ``E``
+   closes the innermost open ``B`` of the same name, nothing stays open
+   at EOF, and span ends never precede their begins;
+4. timestamps are non-decreasing per track in file order (Tracer emits
+   in clock order; a violation means a broken clock injection);
+5. async events balance per ``(cat, id, name)`` — no ``e`` without an
+   open ``b``, nothing left open at EOF;
+6. counter events (``C``) carry an ``args`` dict of finite numbers.
+
+Run: ``python tools/check_trace.py TRACE.json [...]``.  Exit code 1
+with a per-event report when anything is malformed.  Importable:
+``validate(trace_dict) -> list[str]`` returns the error report.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from typing import Any, Dict, List
+
+# phases that carry no timestamp/track requirements
+_META = {"M"}
+_KNOWN = {"B", "E", "b", "e", "i", "C", "M", "X"}
+
+
+def validate(trace: Any) -> List[str]:
+    """Validate a parsed trace; returns a list of error strings."""
+    errors: List[str] = []
+    if isinstance(trace, dict):
+        events = trace.get("traceEvents")
+        if not isinstance(events, list):
+            return ["top-level dict has no 'traceEvents' list"]
+    elif isinstance(trace, list):
+        events = trace
+    else:
+        return [f"trace must be a dict or list, got {type(trace).__name__}"]
+
+    open_spans: Dict[tuple, List[dict]] = {}    # (pid,tid) -> B stack
+    last_ts: Dict[tuple, float] = {}            # (pid,tid) -> last ts seen
+    async_depth: Dict[tuple, int] = {}          # (cat,id,name) -> depth
+
+    for n, ev in enumerate(events):
+        where = f"event {n}"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        name, ph = ev.get("name"), ev.get("ph")
+        if not isinstance(name, str) or not name:
+            errors.append(f"{where}: missing/empty 'name'")
+            continue
+        where = f"event {n} ({ph} {name!r})"
+        if ph not in _KNOWN:
+            errors.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if ph in _META:
+            continue
+
+        ts, pid, tid = ev.get("ts"), ev.get("pid"), ev.get("tid")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts):
+            errors.append(f"{where}: non-numeric ts {ts!r}")
+            continue
+        if pid is None or tid is None:
+            errors.append(f"{where}: missing pid/tid")
+            continue
+        track = (pid, tid)
+        if ts < last_ts.get(track, float("-inf")):
+            errors.append(f"{where}: ts {ts} decreases on track {track} "
+                          f"(last {last_ts[track]})")
+        last_ts[track] = max(last_ts.get(track, float("-inf")), ts)
+
+        if ph == "B":
+            open_spans.setdefault(track, []).append(ev)
+        elif ph == "E":
+            stack = open_spans.get(track) or []
+            if not stack:
+                errors.append(f"{where}: E with no open B on track {track}")
+            else:
+                b = stack.pop()
+                if b["name"] != name:
+                    errors.append(
+                        f"{where}: E closes B {b['name']!r} (bad nesting)")
+                if ts < b["ts"]:
+                    errors.append(f"{where}: span ends before it begins")
+        elif ph in ("b", "e"):
+            key = (ev.get("cat", ""), ev.get("id"), name)
+            if ev.get("id") is None:
+                errors.append(f"{where}: async event missing 'id'")
+                continue
+            d = async_depth.get(key, 0) + (1 if ph == "b" else -1)
+            if d < 0:
+                errors.append(f"{where}: async end with no open begin "
+                              f"for {key}")
+                d = 0
+            async_depth[key] = d
+        elif ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args or not all(
+                    isinstance(v, (int, float)) and math.isfinite(v)
+                    for v in args.values()):
+                errors.append(f"{where}: counter args must be a non-empty "
+                              f"dict of finite numbers, got {args!r}")
+
+    for track, stack in open_spans.items():
+        for b in stack:
+            errors.append(f"unclosed B {b['name']!r} on track {track}")
+    for key, d in async_depth.items():
+        if d != 0:
+            errors.append(f"unbalanced async span {key}: depth {d} at EOF")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: check_trace.py TRACE.json [...]", file=sys.stderr)
+        return 2
+    bad = 0
+    for path in argv:
+        try:
+            with open(path) as f:
+                trace = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable: {e}")
+            bad += 1
+            continue
+        errors = validate(trace)
+        n = (len(trace.get("traceEvents", []))
+             if isinstance(trace, dict) else len(trace))
+        if errors:
+            print(f"{path}: {len(errors)} problem(s) in {n} events")
+            for e in errors[:40]:
+                print(f"  - {e}")
+            bad += 1
+        else:
+            print(f"{path}: OK ({n} events)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
