@@ -22,15 +22,24 @@ memory-constrained-serving setting of S3D, arXiv:2405.20314):
 
 Reported per policy: deadline hit-rate, p50/p99 time-to-first-token and
 inter-token latency (from the streaming emissions), occupancy, and the
-conservation counters (``completed + shed == submitted`` is asserted —
-no request silently lost).  Results land in
+conservation counters (``completed + shed + failed == submitted`` is
+asserted — no request silently lost).  Results land in
 ``benchmarks/results/serve_load.json``.
+
+``--chaos`` runs the robustness gate instead (docs/robustness.md): the
+same trace is replayed twice — fault-free, then under a seeded
+:class:`repro.serving.FaultPlan` injecting step crashes, NaN verifier
+logits, allocator failures, swap corruption, stalls and malformed
+submits.  The gate asserts the faulted replay still conserves every
+request, returns every KV block, and leaves requests the faults never
+touched bit-identical to the fault-free twin.
 
 Usage::
 
     python benchmarks/serve_load.py             # full comparison
     python benchmarks/serve_load.py --smoke     # CI: tiny burst, seconds
     python benchmarks/serve_load.py --trace t.json   # replay a trace
+    python benchmarks/serve_load.py --chaos --smoke  # CI chaos gate
 
 A trace file is a JSON list of ``{"arrival_s", "prompt_reps",
 "max_new_tokens", "deadline_s", "seed"}`` rows; ``--export-trace`` writes
@@ -133,22 +142,12 @@ def _requests_from_trace(trace, vocab: int, *, pattern_seed: int = 3) -> list:
 # Replay
 # ---------------------------------------------------------------------------
 
-def replay(engine, params, trace, *, admission: str, shed: bool,
-           batch_slots: int = 2, step_cost_s: float = STEP_COST_S,
-           clock=None, tracer=None) -> dict:
-    """Replay ``trace`` through a ServingLoop on the virtual clock.
-
-    Arrivals are injected exactly at their trace timestamps; every lane
-    decode step advances virtual time by ``step_cost_s`` *inside* the
-    step (``ServingLoop.step_hook``), so scheduler/decode trace spans
-    get real widths and per-step latencies equal the modeled step cost.
-    Returns the metrics summary plus the streaming-equality check.
-
-    ``clock`` / ``tracer`` let the caller share the virtual clock with a
-    ``repro.serving.trace.Tracer(clock=clock.read)`` — the resulting
-    trace is a pure function of (trace, seed, policy): two replays of
-    the same inputs serialize byte-identically.
-    """
+def _replay_loop(engine, params, trace, *, admission: str, shed: bool,
+                 batch_slots: int = 2, step_cost_s: float = STEP_COST_S,
+                 clock=None, tracer=None, faults=None,
+                 request_timeout_s=None):
+    """Replay core: returns ``(loop, handles-by-rid, summary)`` so the
+    chaos gate can inspect handles/pools after the drain."""
     requests = _requests_from_trace(trace, engine.model.cfg.vocab_size)
     if clock is None:
         clock = VirtualClock()
@@ -158,10 +157,12 @@ def replay(engine, params, trace, *, admission: str, shed: bool,
         max_new_tokens=max(r.max_new_tokens for r in requests),
         admission=admission,
         shed_late=shed,
+        request_timeout_s=request_timeout_s,
     )
     loop = ServingLoop(engine, params, cfg, clock=clock.read,
-                       tracer=tracer,
-                       step_hook=lambda: clock.advance(step_cost_s))
+                       tracer=tracer, faults=faults,
+                       step_hook=lambda: clock.advance(step_cost_s),
+                       stall_hook=clock.advance)
 
     events = sorted(zip((row["arrival_s"] for row in trace), requests),
                     key=lambda e: e[0])
@@ -190,6 +191,29 @@ def replay(engine, params, trace, *, admission: str, shed: bool,
     summary["policy"] = {"admission": admission, "shed": shed,
                          "batch_slots": batch_slots,
                          "step_cost_s": step_cost_s}
+    return loop, handles, summary
+
+
+def replay(engine, params, trace, *, admission: str, shed: bool,
+           batch_slots: int = 2, step_cost_s: float = STEP_COST_S,
+           clock=None, tracer=None) -> dict:
+    """Replay ``trace`` through a ServingLoop on the virtual clock.
+
+    Arrivals are injected exactly at their trace timestamps; every lane
+    decode step advances virtual time by ``step_cost_s`` *inside* the
+    step (``ServingLoop.step_hook``), so scheduler/decode trace spans
+    get real widths and per-step latencies equal the modeled step cost.
+    Returns the metrics summary plus the streaming-equality check.
+
+    ``clock`` / ``tracer`` let the caller share the virtual clock with a
+    ``repro.serving.trace.Tracer(clock=clock.read)`` — the resulting
+    trace is a pure function of (trace, seed, policy): two replays of
+    the same inputs serialize byte-identically.
+    """
+    _, _, summary = _replay_loop(
+        engine, params, trace, admission=admission, shed=shed,
+        batch_slots=batch_slots, step_cost_s=step_cost_s, clock=clock,
+        tracer=tracer)
     return summary
 
 
@@ -215,6 +239,65 @@ def _build_engine(smoke: bool, paged: bool = False):
                                    kv_block_size=8, kv_pool_blocks=10)
     engine = SpecEngine(model, scfg, drafter="ngram", verifier=verifier)
     return engine, params
+
+
+# ---------------------------------------------------------------------------
+# Chaos gate (docs/robustness.md)
+# ---------------------------------------------------------------------------
+
+#: Default chaos mix: one scalpel fault per containment class plus
+#: low-probability shotgun rules on the allocator/stall/submit seams.
+DEFAULT_CHAOS_SPEC = ("step@6,nan_verify@4,quant_corrupt@9,alloc~0.04,"
+                      "swap_in~0.25,stall~0.05,submit~0.03")
+
+
+def chaos_rows(quick: bool = False, trace=None, seed: int = 0,
+               spec: str = DEFAULT_CHAOS_SPEC) -> dict:
+    """Fault-free twin vs. seeded-fault replay of the same trace.
+
+    Hard gates (all assert): three-term conservation on the faulted run,
+    zero leaked KV blocks after the drain, at least one fault actually
+    fired, and every request the faults never touched (terminal ``done``
+    with its rid absent from ``loop.affected``) produced tokens
+    bit-identical to the fault-free twin.
+    """
+    from repro.serving import FaultPlan
+    engine, params = _build_engine(smoke=quick, paged=True)
+    if trace is None:
+        n = 12 if quick else 40
+        trace = poisson_trace(n, rate_per_s=6.0, seed=seed)
+    _, clean_handles, clean = _replay_loop(
+        engine, params, trace, admission="edf", shed=True)
+    plan = FaultPlan.parse(spec, seed=seed, stall_s=2.0)
+    loop, handles, faulted = _replay_loop(
+        engine, params, trace, admission="edf", shed=True,
+        faults=plan, request_timeout_s=60.0)
+    assert any(v["fired"] for v in plan.summary().values()), \
+        "chaos gate is vacuous: no fault fired"
+    for lane in loop._lanes.values():
+        if lane.ctx is not None:
+            lane.ctx.pool.check_invariants()
+            assert lane.ctx.pool.unique_allocated == 0, "leaked KV blocks"
+    compared = 0
+    for rid, h in handles.items():
+        twin = clean_handles.get(rid)
+        if (h.status == "done" and rid not in loop.affected
+                and twin is not None and twin.status == "done"):
+            np.testing.assert_array_equal(
+                h.result(0.0).tokens, twin.result(0.0).tokens)
+            compared += 1
+    assert compared >= 1, "chaos gate is vacuous: no untouched request " \
+        "completed in both replays"
+    return {
+        "trace": {"n": len(trace), "seed": seed},
+        "fault_spec": spec,
+        "plan": plan.summary(),
+        "clean": {"counters": clean["counters"]},
+        "faulted": {"counters": faulted["counters"],
+                    "robustness": faulted["robustness"]},
+        "affected": sorted(loop.affected),
+        "bit_identical_untouched": compared,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -277,11 +360,39 @@ def main() -> int:
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the full FIFO/EDF metrics summaries "
                          "(latency, acceptance, kv_cache sections) as JSON")
+    ap.add_argument("--chaos", action="store_true",
+                    help="robustness gate: replay fault-free then under a "
+                         "seeded FaultPlan; assert conservation, zero "
+                         "leaked blocks, untouched-request bit-identity")
+    ap.add_argument("--fault-spec", default=DEFAULT_CHAOS_SPEC,
+                    metavar="SPEC",
+                    help="chaos fault spec (seam@i / seam~p, "
+                         "comma-separated); see repro.serving.FaultPlan")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     smoke = args.smoke or args.quick
     trace = load_trace(args.trace) if args.trace else None
+
+    if args.chaos:
+        out = chaos_rows(quick=smoke, trace=trace, seed=args.seed,
+                         spec=args.fault_spec)
+        from benchmarks.common import save_json
+        path = save_json("serve_load_chaos.json", out)
+        c = out["faulted"]["counters"]
+        rb = out["faulted"]["robustness"]
+        print(f"chaos: submitted={c['submitted']} "
+              f"completed={c['completed']} shed={c['shed']} "
+              f"failed={c['failed']}")
+        fired = {s: v["fired"] for s, v in out["plan"].items()
+                 if v["fired"]}
+        print(f"faults fired: {fired}")
+        print("robustness: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(rb.items()) if v))
+        print(f"untouched bit-identical: "
+              f"{out['bit_identical_untouched']}")
+        print(f"results -> {path}")
+        return 0
     if args.export_trace:
         t = trace or poisson_trace(12 if smoke else 40, 6.0, seed=args.seed)
         with open(args.export_trace, "w") as f:

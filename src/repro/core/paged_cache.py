@@ -316,6 +316,11 @@ class BlockPool:
         self._drawn: Dict[int, int] = {}            # rid -> fresh drawn
         self._swapped: set = set()                  # rids evicted to host
         self.peak_allocated = 0                     # high-water unique blocks
+        # fault-injection seam (serving/faults.py): called with the draw
+        # size before alloc() touches the free list, so an injected
+        # failure is atomic — it may raise, the pool keeps no partial
+        # state.  None (the default) costs one attribute load.
+        self.fault_hook = None
         # monotone event counters (observability: ServerMetrics kv_cache
         # section aggregates these through PagedGroup.snapshot)
         self.counters: Dict[str, int] = {
@@ -423,6 +428,8 @@ class BlockPool:
             raise ValueError(
                 f"request {rid} alloc beyond reservation: "
                 f"{have}+{n_blocks} > {self._reserved[rid]}")
+        if self.fault_hook is not None and n_blocks:
+            self.fault_hook(int(n_blocks))    # may raise InjectedFault
         ids = [self._draw() for _ in range(int(n_blocks))]
         for b in ids:
             self._ref[b] = 1

@@ -39,7 +39,10 @@ the production mesh).  Engine state is a pytree dict:
                                     row samples independently of its
                                     co-batched neighbours — the layout the
                                     continuous-batching scheduler uses
-  stats          {"commits": (B,), "steps": ()}  acceptance bookkeeping
+  stats          {"commits": (B,), "steps": (), "row_steps": (B,),
+                  "bad": (B,) bool}  acceptance bookkeeping + the per-row
+                                    non-finite-logits tripwire the serving
+                                    guardrails read (docs/robustness.md)
 
 ``make_serve_step`` / ``make_vanilla_step`` / ``make_pruned_step`` remain
 as thin deprecated shims over ``make_decode_step``.
@@ -82,6 +85,11 @@ def init_state(model, batch: int, buf_len: int, key,
             # steps during which the row was still below its target —
             # the honest denominator for per-row acceptance length
             "row_steps": jnp.zeros((batch,), jnp.int32),
+            # sticky per-row flag: the verifier produced non-finite
+            # logits for this (active) row — the serving lane's NaN
+            # guardrail reads it host-side and routes the row through
+            # the full-precision fallback step (docs/robustness.md)
+            "bad": jnp.zeros((batch,), jnp.bool_),
         },
     }
     if target is not None:
@@ -162,6 +170,11 @@ def make_decode_step(model, drafter, verifier, scfg,
         window = jnp.concatenate([last, proposal.tokens], axis=1)  # (B, N)
         start = jnp.maximum(length - 1, 0)
 
+        if "target" in state:
+            active_mask = length < state["target"]
+        else:
+            active_mask = jnp.ones(length.shape, jnp.bool_)
+
         key, sub = prng.next_key(key)
         with jax.named_scope("verify"):
             if template is None:
@@ -178,6 +191,15 @@ def make_decode_step(model, drafter, verifier, scfg,
                     tree_mask=template.mask_dev)
                 res = verifier.verify_tree(logits, proposal, template,
                                            scfg.temperature, sub)
+            # per-row losslessness tripwire: non-finite verifier logits
+            # on an *active* row (idle rows attend junk by design — the
+            # scratch block / stale cache — and must not trip it).
+            # Folded into the fused step so it costs one reduction and
+            # zero extra device syncs; the host reads it alongside
+            # `length` after the step.
+            row_bad = jnp.any(
+                ~jnp.isfinite(logits),
+                axis=tuple(range(1, logits.ndim))) & active_mask
         with jax.named_scope("commit"):
             if template is None:
                 cache = model.commit(cand, res.n_accept,
@@ -194,9 +216,7 @@ def make_decode_step(model, drafter, verifier, scfg,
             if "target" in state:
                 # freeze rows that reached their per-request target length
                 n_commit = jnp.clip(n_commit, 0, state["target"] - length)
-                active = (length < state["target"]).astype(jnp.int32)
-            else:
-                active = jnp.ones_like(length)
+            active = active_mask.astype(jnp.int32)
             tokens = _commit_tokens(tokens, length, drafts,
                                     res.next_token, res.n_accept,
                                     n_write=n_commit)
@@ -210,6 +230,8 @@ def make_decode_step(model, drafter, verifier, scfg,
                 "commits": state["stats"]["commits"] + n_commit,
                 "steps": state["stats"]["steps"] + 1,
                 "row_steps": state["stats"]["row_steps"] + active,
+                "bad": state["stats"].get(
+                    "bad", jnp.zeros(length.shape, jnp.bool_)) | row_bad,
             },
         }
         if "target" in state:

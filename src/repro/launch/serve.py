@@ -94,6 +94,29 @@ def main():
     ap.add_argument("--no-shed", action="store_true",
                     help="--serve: keep past-deadline queued work instead "
                          "of shedding it")
+    ap.add_argument("--request-timeout", type=float, default=None,
+                    metavar="S",
+                    help="--serve: fail any request older end-to-end than "
+                         "S seconds (RequestTimeout) — turns a hung lane "
+                         "into per-request failures, never blocked callers")
+    ap.add_argument("--collapse-window", type=int, default=0,
+                    metavar="N",
+                    help="--serve: acceptance-collapse detector window (N "
+                         "decode steps; 0 = off).  A quantized-verifier "
+                         "lane whose mean acceptance sits below "
+                         "--collapse-threshold for a full window is "
+                         "re-prepared (re-quantized) — docs/robustness.md")
+    ap.add_argument("--collapse-threshold", type=float, default=0.05,
+                    metavar="T",
+                    help="--serve: mean accepted tokens per row-step below "
+                         "which the collapse detector trips")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="--serve: inject faults from a seeded FaultPlan "
+                         "spec (seam@i / seam~p, comma-separated, e.g. "
+                         "'step@3,alloc~0.05') to rehearse containment — "
+                         "see repro.serving.faults")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for --fault-plan")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome trace-event / Perfetto JSON of "
                          "the run (request lifecycle, scheduler ticks, "
@@ -186,21 +209,27 @@ def main():
     if args.serve:
         import numpy as np
 
-        from repro.serving import GenerationRequest, ServerConfig, \
-            StreamingServer
+        from repro.serving import FaultPlan, GenerationRequest, \
+            ServerConfig, StreamingServer
         cfg_srv = ServerConfig(
             batch_slots=args.batch,
             max_prompt_len=args.prompt_len,
             max_new_tokens=args.new_tokens,
             admission=args.admission,
             shed_late=not args.no_shed,
+            request_timeout_s=args.request_timeout,
+            collapse_window=args.collapse_window,
+            collapse_threshold=args.collapse_threshold,
         )
+        faults = (FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
+                  if args.fault_plan else None)
         rng = np.random.default_rng(0)
         gaps = rng.exponential(1.0 / max(args.arrival_rate, 1e-9),
                                size=args.requests)
         pool = np.asarray(prompts)
         t0 = time.perf_counter()
-        with StreamingServer(engine, params, cfg_srv, tracer=tracer) as srv:
+        with StreamingServer(engine, params, cfg_srv, tracer=tracer,
+                             faults=faults) as srv:
             handles = []
             for i in range(args.requests):
                 time.sleep(gaps[i])
@@ -210,10 +239,15 @@ def main():
                 handles.append(h)
             for h in handles:
                 toks = list(h.tokens())       # blocking per-token stream
-                res = h.result(timeout=60.0)
-                tag = h.status
-                print(f"req {h.rid}: {tag}, {len(toks)} chunks, "
-                      f"{res.new_tokens if res else 0} tokens")
+                try:
+                    res = h.result(timeout=60.0)
+                except Exception as exc:      # failed request: contained
+                    res = None
+                    print(f"req {h.rid}: failed "
+                          f"({type(exc).__name__}: {exc})")
+                else:
+                    print(f"req {h.rid}: {h.status}, {len(toks)} chunks, "
+                          f"{res.new_tokens if res else 0} tokens")
             summary = srv.loop.metrics.summary()
         wall = time.perf_counter() - t0
         srv.loop.metrics.check_conservation()
@@ -221,7 +255,12 @@ def main():
         c = summary["counters"]
         lat = summary["latency"]
         print(f"served {c['completed']}/{c['submitted']} "
-              f"(shed {c['shed']}) in {wall:.2f}s wall")
+              f"(shed {c['shed']}, failed {c['failed']}) "
+              f"in {wall:.2f}s wall")
+        rb = {k: v for k, v in summary["robustness"].items() if v}
+        if rb:
+            print("robustness: "
+                  + ", ".join(f"{k}={v}" for k, v in sorted(rb.items())))
         ttft, itl = lat["ttft_s"], lat["itl_s"]
         if ttft.get("n"):
             print(f"ttft p50={ttft['p50']:.3f}s p99={ttft['p99']:.3f}s  "

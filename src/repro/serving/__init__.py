@@ -2,6 +2,19 @@ from repro.serving.engine import (  # noqa: F401
     DEFAULT_BATCH_SLOTS,
     GenResult,
     SpecEngine,
+    merge_state_rows,
+)
+from repro.serving.faults import (  # noqa: F401
+    NULL_FAULTS,
+    FaultPlan,
+    FaultRule,
+    InjectedFault,
+    LaneCrashed,
+    NullFaultPlan,
+    RequestCancelled,
+    RequestFault,
+    RequestTimeout,
+    VerifierNaNError,
 )
 from repro.serving.histogram import Histogram  # noqa: F401
 from repro.serving.metrics import (  # noqa: F401

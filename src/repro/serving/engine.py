@@ -131,6 +131,7 @@ class SpecEngine:
         self._step = self._jit_counted(
             make_decode_step(model, self.drafter, self.verifier, scfg))
         self._steps_by_temp = {}                   # temperature overrides
+        self._fallback_steps = {}                  # bf16 guardrail twins
         self._prepared = None                      # (params ref, prepared)
 
     def _jit_counted(self, step_fn):
@@ -171,6 +172,30 @@ class SpecEngine:
                 make_decode_step(self.model, drafter, self.verifier, scfg_t))
             self._steps_by_temp[t] = (step, drafter)
         return self._steps_by_temp[t]
+
+    def fallback_step_for(self, t: float):
+        """Full-precision twin of the compiled step at temperature
+        ``t``: same model and drafter, bf16 (passthrough) verifier.
+
+        The serving lane's NaN guardrail retries a tripped step through
+        it with the *raw* (unprepared) params — quantized-verification
+        graceful degradation: the losslessness contract enforced at
+        runtime instead of assumed (docs/robustness.md).  Lazily
+        compiled on first trip and cached per temperature; compilation
+        bumps ``step_traces``, but only ever after a fault, so the
+        no-retrace-on-admission invariant is untouched.
+        """
+        t = float(t)
+        if t not in self._fallback_steps:
+            if len(self._fallback_steps) >= _MAX_TEMP_STEPS:
+                self._fallback_steps.pop(next(iter(self._fallback_steps)))
+            drafter = (self.drafter if t == self.scfg.temperature
+                       else self.drafter.with_temperature(t))
+            scfg_t = dataclasses.replace(self.scfg, temperature=t,
+                                         verifier="bf16")
+            self._fallback_steps[t] = self._jit_counted(
+                make_decode_step(self.model, drafter, "bf16", scfg_t))
+        return self._fallback_steps[t]
 
     # ------------------------------------------------------------------
     def _init_state(self, params, prompts, lengths, targets, buf, key, *,
@@ -325,6 +350,9 @@ class SpecEngine:
         state["stats"]["commits"] = state["stats"]["commits"].at[row].set(0)
         state["stats"]["row_steps"] = \
             state["stats"]["row_steps"].at[row].set(0)
+        if "bad" in state["stats"]:
+            state["stats"]["bad"] = \
+                state["stats"]["bad"].at[row].set(False)
 
         # KV/SSM cache row: fresh init + single-row prefill, scattered in.
         # The padded prefill writes junk K/V at positions [P-1, pmax-1),
@@ -438,37 +466,64 @@ class SpecEngine:
         """Append-on-commit: before each decode step, top every live
         row's blocks up to its next verify window's reach
         (``length + gamma + 1`` rows, capped at the request's demand).
-        Draws against the admission-time reservation, so it cannot fail;
-        host-side ``.at[].set`` on the block table only — the jitted
-        step never retraces."""
+        Draws against the admission-time reservation, so it cannot fail
+        absent fault injection; host-side ``.at[].set`` on the block
+        table only — the jitted step never retraces.
+
+        Containment: a per-slot allocation failure (the pool's
+        fault-injection hook, or a genuinely broken reservation) is
+        collected instead of aborting the sweep — every *other* row's
+        top-up still lands, then a single
+        :class:`~repro.serving.faults.RequestFault` carries the failing
+        slots plus the partially-topped-up state, so the scheduler
+        adopts a pool-consistent state and fails only the rows it
+        names.  Partial side effects on a failing row itself are
+        impossible: ``BlockPool.alloc`` is atomic (the injection hook
+        runs before the free list is touched).
+        """
         if not live:
             return state
         lengths = np.asarray(state["length"])
         bt = state["cache"]["bt"]
         changed = False
+        failures = []
         for slot, (rid, demand_tokens) in live.items():
             need = pool.blocks_for(
                 min(int(lengths[slot]) + gamma + 1, demand_tokens))
             have = len(pool.owned(rid))
             if need > have:
-                ids = pool.alloc(rid, need - have)
+                try:
+                    ids = pool.alloc(rid, need - have)
+                except Exception as exc:  # noqa: BLE001 — containment seam
+                    failures.append((slot, exc))
+                    continue
                 bt = bt.at[slot, have:need].set(jnp.asarray(ids, jnp.int32))
                 changed = True
         if changed:
             state = dict(state)
             state["cache"] = dict(state["cache"])
             state["cache"]["bt"] = bt
+        if failures:
+            from repro.serving.faults import RequestFault
+            raise RequestFault(
+                f"block append failed for slots "
+                f"{[s for s, _ in failures]}: {failures[0][1]}",
+                slots=[s for s, _ in failures], state=state,
+                cause=failures[0][1])
         return state
 
     def paged_group(self, *, num_blocks: int, block_size: int,
                     gamma: int, tracer=None,
-                    trace_tid: int = 0) -> "PagedGroup":
+                    trace_tid: int = 0, faults=None) -> "PagedGroup":
         """Build the per-group paged-serving context (allocator + prefix
-        index + swap pool) honouring ``SpecConfig.kv_prefix_sharing``."""
+        index + swap pool) honouring ``SpecConfig.kv_prefix_sharing``.
+        ``faults`` installs a :class:`~repro.serving.faults.FaultPlan`
+        on the group's allocation and swap-in seams."""
         return PagedGroup(self, num_blocks=num_blocks,
                           block_size=block_size, gamma=gamma,
                           sharing=self.scfg.kv_prefix_sharing,
-                          tracer=tracer, trace_tid=trace_tid)
+                          tracer=tracer, trace_tid=trace_tid,
+                          faults=faults)
 
     def generate_requests(
         self,
@@ -667,6 +722,54 @@ class SpecEngine:
         return results
 
 
+def merge_state_rows(dst: dict, src: dict, rows: Sequence[int]) -> dict:
+    """Graft ``rows`` of engine state ``src`` onto ``dst`` (row-sparse
+    state merge — the NaN guardrail's rescue primitive).
+
+    Contract: both states descend from the *same* pre-step state via one
+    decode step each (the primary vs. the fallback execution).  Batch-
+    leading leaves (tokens, length, target, key, per-row stats, drafter
+    state) merge row-wise; scalar stats (``steps``) are equal in both by
+    construction and kept from ``dst``.  For a paged cache the block
+    table is identical in both (the jitted step never writes it), so
+    the merge copies exactly the physical blocks the merged rows' table
+    entries name — rows own disjoint block sets, so untouched rows'
+    cache writes are preserved bit-for-bit.  Neither input is mutated.
+    """
+    rows = [int(r) for r in rows]
+    if not rows:
+        return dst
+    B = dst["length"].shape[0]
+    idx = jnp.asarray(rows, jnp.int32)
+
+    def rowmerge(d, s):
+        if d is s or getattr(d, "ndim", 0) < 1 or d.shape[0] != B:
+            return d
+        return d.at[idx].set(s[idx])
+
+    out = dict(dst)
+    for k in ("tokens", "length", "target", "key"):
+        if k in dst:
+            out[k] = rowmerge(dst[k], src[k])
+    out["stats"] = {k: rowmerge(d, src["stats"][k])
+                    for k, d in dst["stats"].items()}
+    out["drafter_state"] = jax.tree.map(
+        rowmerge, dst["drafter_state"], src["drafter_state"])
+    if "bt" in dst["cache"]:
+        bt_rows = np.asarray(dst["cache"]["bt"])[rows]
+        ids = np.unique(bt_rows[bt_rows != SCRATCH_BLOCK])
+        cache = dict(dst["cache"])
+        if ids.size:
+            bidx = jnp.asarray(ids, jnp.int32)
+            cache["layers"] = jax.tree.map(
+                lambda d, s: d.at[bidx].set(s[bidx]),
+                dst["cache"]["layers"], src["cache"]["layers"])
+        out["cache"] = cache
+    else:
+        out["cache"] = jax.tree.map(rowmerge, dst["cache"], src["cache"])
+    return out
+
+
 class PagedGroup:
     """Paged-serving context for one scheduler group: the refcounting
     :class:`~repro.core.paged_cache.BlockPool`, the prefix-cache
@@ -705,11 +808,19 @@ class PagedGroup:
 
     def __init__(self, engine: SpecEngine, *, num_blocks: int,
                  block_size: int, gamma: int, sharing: bool = True,
-                 tracer=None, trace_tid: int = 0):
+                 tracer=None, trace_tid: int = 0, faults=None):
+        from repro.serving.faults import NULL_FAULTS, InjectedFault
         self.engine = engine
         self.gamma = int(gamma)
         self.index = PrefixIndex(block_size) if sharing else None
         self.pool = BlockPool(num_blocks, block_size, prefix=self.index)
+        self.faults = faults if faults is not None else NULL_FAULTS
+        if self.faults.enabled:
+            def _alloc_fault(n, _f=self.faults):
+                if _f.fire("alloc", blocks=int(n)):
+                    raise InjectedFault(
+                        f"injected BlockPool alloc failure ({n} blocks)")
+            self.pool.fault_hook = _alloc_fault
         self.live: dict = {}       # slot -> (rid, demand_tokens)
         self.swap: dict = {}       # rid  -> host snapshot
         self._reqs: dict = {}      # rid  -> (request, aux_embeds)
@@ -899,6 +1010,20 @@ class PagedGroup:
 
     def _resume_inner(self, state: dict, slot: int, rid: int) -> dict:
         snap = self.swap.pop(rid)
+        if self.faults.fire("swap_in", rid=rid):
+            # corrupt the host snapshot's KV payload (float leaves →
+            # NaN): the resumed row decodes against poisoned state, the
+            # verify-path NaN tripwire flags it, and — since the
+            # corruption lives in the cache, not the params — every
+            # fallback stage reproduces it, so the request fails
+            # (contained) rather than silently emitting garbage.
+            # int8 KV snapshots have no float leaves; the injection is
+            # a no-op there (documented in docs/robustness.md).
+            snap = dict(snap)
+            snap["blocks"] = jax.tree.map(
+                lambda x: np.full_like(x, np.nan)
+                if np.issubdtype(np.asarray(x).dtype, np.floating) else x,
+                snap["blocks"])
         self.pool.reserve(rid, self.demand_blocks(rid))
         ids = self.pool.alloc(rid, snap["n_blocks"])
         self.swap_in_bytes += int(sum(
@@ -915,6 +1040,9 @@ class PagedGroup:
             state["stats"]["commits"].at[slot].set(snap["commits"])
         state["stats"]["row_steps"] = \
             state["stats"]["row_steps"].at[slot].set(snap["row_steps"])
+        if "bad" in state["stats"]:
+            state["stats"]["bad"] = \
+                state["stats"]["bad"].at[slot].set(False)
         state["drafter_state"] = jax.tree.map(
             lambda full, one: full.at[slot].set(
                 jnp.asarray(one).astype(full.dtype)),

@@ -13,6 +13,7 @@ front-end (``repro.serving.server``) calls as requests flow through:
 
     on_submit → on_admit → on_tokens* → on_finish      (served)
     on_submit → on_shed                                (deadline shed)
+    on_submit → [on_admit → on_tokens*] → on_failed    (fault/cancel/timeout)
 
 plus ``on_step`` (per scheduler tick: the occupancy gauge),
 ``on_slot_event`` (the drain target for ``Scheduler.on_event`` — every
@@ -31,6 +32,13 @@ timelines are kept in full by default — pass ``keep_timelines=False``
 for a months-lived process where only the aggregates should stay
 resident; finished/shed timelines are then dropped on fold and memory
 stays flat.
+
+Failure containment (``docs/robustness.md``) adds a third terminal
+state: ``on_failed`` counts requests that ended in the terminal
+``failed`` status, and ``on_guardrail`` accumulates the named
+robustness event counters (NaN trips, bf16 rescues, lane restarts,
+timeouts, …).  The conservation law becomes three-term:
+``completed + shed + failed == submitted``.
 
 ``summary()`` returns the JSON-ready schema (documented in
 ``docs/observability.md``); ``save()`` writes it;
@@ -95,7 +103,7 @@ class RequestTimeline:
     deadline_t: Optional[float] = None     # absolute; None = no SLO
     admit_t: Optional[float] = None
     finish_t: Optional[float] = None
-    status: str = "queued"                 # queued|running|done|shed
+    status: str = "queued"                 # queued|running|done|shed|failed
     degraded: bool = False                 # served by the degraded lane
     emits: List[Tuple[float, int]] = field(default_factory=list)
 
@@ -118,10 +126,11 @@ class RequestTimeline:
 
     @property
     def deadline_hit(self) -> Optional[bool]:
-        """None when the request has no deadline; shed counts as a miss."""
+        """None when the request has no deadline; any terminal state
+        other than ``done`` (shed, failed) counts as a miss."""
         if self.deadline_t is None:
             return None
-        if self.status == "shed" or self.finish_t is None:
+        if self.status != "done" or self.finish_t is None:
             return False
         return self.finish_t <= self.deadline_t
 
@@ -220,8 +229,24 @@ class ServerMetrics:
     def __init__(self, *, keep_timelines: bool = True):
         self.counters: Dict[str, int] = {
             "submitted": 0, "admitted": 0, "completed": 0, "shed": 0,
-            "degraded": 0, "slot_events": 0, "stream_tokens": 0,
-            "decode_steps": 0,
+            "failed": 0, "degraded": 0, "slot_events": 0,
+            "stream_tokens": 0, "decode_steps": 0,
+        }
+        # robustness event counters (docs/robustness.md) — pre-seeded so
+        # the zero baseline is visible in every summary/scrape
+        self.robustness: Dict[str, int] = {
+            "verify_nan_trips": 0,     # steps with non-finite verifier
+            #                            logits on an active row
+            "retry_rescued_rows": 0,   # rows saved by same-precision retry
+            "bf16_rescued_rows": 0,    # rows saved by the bf16 fallback
+            "unrescued_rows": 0,       # rows failed after the full ladder
+            "collapse_trips": 0,       # acceptance-collapse detections
+            "reprepares": 0,           # lane params re-quantized (repair)
+            "lane_restarts": 0,        # serving-loop supervisor restarts
+            "request_faults": 0,       # requests failed by step/admit fault
+            "timeouts": 0,             # requests failed by request_timeout_s
+            "cancelled": 0,            # requests failed by client cancel
+            "rejected": 0,             # malformed/unservable at submit
         }
         self.keep_timelines = keep_timelines
         self.timelines: Dict[int, RequestTimeline] = {}
@@ -240,7 +265,9 @@ class ServerMetrics:
         self._deadline_total = 0
         self._deadline_hits = 0
         self.acceptance = AcceptanceStats()
-        self._kv_sources: List[Tuple[str, Callable[[], dict]]] = []
+        # keyed by name: a lane rebuilt after a supervisor restart
+        # re-registers under the same name and replaces its dead source
+        self._kv_sources: Dict[str, Callable[[], dict]] = {}
 
     # -- lifecycle hooks ------------------------------------------------
     def on_submit(self, rid: int, t: float,
@@ -285,6 +312,23 @@ class ServerMetrics:
         tl.status = "shed"
         self._fold(tl)
 
+    def on_failed(self, rid: int, t: float) -> None:
+        """Terminal ``failed`` state (fault, cancel, timeout, crash)."""
+        self.counters["failed"] += 1
+        tl = self.timelines.pop(rid) if not self.keep_timelines \
+            else self.timelines.get(rid)
+        if tl is None:
+            return
+        tl.finish_t = t
+        tl.status = "failed"
+        self._fold(tl)
+
+    def on_guardrail(self, name: str, n: int = 1) -> None:
+        """Bump a named robustness event counter (see ``self.robustness``
+        for the pre-seeded vocabulary; unknown names are accepted so
+        callers can add events without a schema change here)."""
+        self.robustness[name] = self.robustness.get(name, 0) + int(n)
+
     def on_step(self, t: float, busy_slots: int, total_slots: int) -> None:
         """Occupancy gauge sample: one scheduler tick."""
         self._occ_samples += 1
@@ -306,8 +350,10 @@ class ServerMetrics:
 
     def add_kv_source(self, name: str, snapshot: Callable[[], dict]) -> None:
         """Register a KV-cache gauge source (e.g. one paged lane's
-        ``PagedGroup.snapshot``); polled lazily at summary time."""
-        self._kv_sources.append((name, snapshot))
+        ``PagedGroup.snapshot``); polled lazily at summary time.
+        Re-registering a name replaces the previous source (lane
+        restart), so monotone counters restart from the new pool."""
+        self._kv_sources[name] = snapshot
 
     # -- aggregation ----------------------------------------------------
     def _fold(self, tl: RequestTimeline) -> None:
@@ -333,19 +379,21 @@ class ServerMetrics:
         return self._deadline_hits / self._deadline_total
 
     def check_conservation(self) -> None:
-        """No request silently lost: completed + shed == submitted."""
+        """No request silently lost: every submitted request reached
+        exactly one terminal state — completed + shed + failed."""
         c = self.counters
-        if c["completed"] + c["shed"] != c["submitted"]:
+        if c["completed"] + c["shed"] + c["failed"] != c["submitted"]:
             raise AssertionError(
                 f"conservation violated: completed={c['completed']} + "
-                f"shed={c['shed']} != submitted={c['submitted']}")
+                f"shed={c['shed']} + failed={c['failed']} "
+                f"!= submitted={c['submitted']}")
 
     def kv_cache_summary(self) -> dict:
         """Aggregate of all registered KV sources (counters summed,
         pool gauges listed per source) + the derived prefix hit rate."""
         out = {k: 0 for k in _KV_SUMMED}
         pools = {}
-        for name, snap in self._kv_sources:
+        for name, snap in self._kv_sources.items():
             s = snap()
             for k in _KV_SUMMED:
                 out[k] += int(s.get(k, 0))
@@ -382,6 +430,7 @@ class ServerMetrics:
                 "hit_rate": self.deadline_hit_rate,
             },
             "acceptance": self.acceptance.summary(),
+            "robustness": dict(self.robustness),
             "kv_cache": self.kv_cache_summary(),
         }
         if include_requests and self.keep_timelines:
@@ -426,6 +475,10 @@ class ServerMetrics:
             emit(name, "gauge", f"Latency summary ({kind}).",
                  [([("stat", st)], d.get(st))
                   for st in ("n", "mean", "p50", "p99", "max")])
+        emit("serve_robustness_total", "counter",
+             "Fault-containment and guardrail event counters.",
+             [([("event", k)], v)
+              for k, v in sorted(s["robustness"].items())])
         dl = s["deadlines"]
         emit("serve_deadline_hit_rate", "gauge",
              "Deadline hit rate over requests with an SLO.",

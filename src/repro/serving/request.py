@@ -73,6 +73,21 @@ class GenerationRequest:
         if self.deadline_s is not None and not self.deadline_s > 0.0:
             raise ValueError("deadline_s must be positive (or None)")
 
+    def violation(self, max_prompt_len: int,
+                  max_new_tokens: int) -> Optional[str]:
+        """Why this request cannot be served under the given server caps
+        (None if it can).  The serving front-end rejects a violating
+        request as terminally ``failed`` instead of raising into the
+        caller — one bad request never takes down the submit path
+        (docs/robustness.md)."""
+        if self.prompt.size > max_prompt_len:
+            return (f"prompt length {self.prompt.size} exceeds the "
+                    f"server's max_prompt_len={max_prompt_len}")
+        if self.max_new_tokens > max_new_tokens:
+            return (f"max_new_tokens {self.max_new_tokens} exceeds the "
+                    f"server's cap {max_new_tokens}")
+        return None
+
 
 @dataclass
 class RequestResult:

@@ -62,6 +62,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.serving.faults import RequestFault
 from repro.serving.request import GenerationRequest, RequestResult
 from repro.serving.trace import NULL_TRACER
 
@@ -76,6 +77,7 @@ class SlotEvent:
     harvest_step: int = -1     # step count when the row was harvested
     streamed: int = 0          # new tokens already forwarded via on_tokens
     preempted: bool = False    # occupancy ended by eviction, not harvest
+    failed: bool = False       # occupancy ended by a contained failure
 
 
 @dataclass
@@ -108,8 +110,10 @@ class Scheduler:
     Conservation counters for the open-loop mode: ``submitted`` (all
     requests ever accepted), ``results`` (request index → result) and
     ``shed_indices`` (requests dropped by :meth:`shed_pending` before
-    ever holding a slot).  ``completed + shed == submitted`` once idle —
-    no request is silently lost (property-tested).
+    ever holding a slot) and ``failed`` (request index → exception: the
+    terminal state of requests killed by a contained failure).
+    ``completed + shed + failed == submitted`` once idle — no request
+    is silently lost (property-tested; :meth:`check_conservation`).
 
     **Observability** (all optional, zero-cost when unset):
 
@@ -156,6 +160,10 @@ class Scheduler:
         self.requests = []
         self.results: Dict[int, RequestResult] = {}
         self.shed_indices: List[int] = []
+        # terminal `failed` state: request index -> the exception that
+        # killed it.  Conservation becomes
+        # completed + shed + failed == submitted (check_conservation)
+        self.failed: Dict[int, BaseException] = {}
         self._deadlines: List[float] = []      # absolute, math.inf = none
         self._arrival_t: List[float] = []
         self._pending: List[tuple] = []
@@ -200,6 +208,20 @@ class Scheduler:
     @property
     def shed(self) -> int:
         return len(self.shed_indices)
+
+    @property
+    def failed_count(self) -> int:
+        return len(self.failed)
+
+    def check_conservation(self) -> None:
+        """Assert the terminal-state conservation law: every submitted
+        request is exactly one of completed / shed / failed (meaningful
+        once ``busy`` is False)."""
+        got = self.completed + self.shed + self.failed_count
+        assert got == self.submitted, (
+            f"conservation broken: completed {self.completed} + shed "
+            f"{self.shed} + failed {self.failed_count} = {got} "
+            f"!= submitted {self.submitted}")
 
     def _key(self, i: int) -> tuple:
         pr = int(getattr(self.requests[i], "priority", 0))
@@ -258,8 +280,8 @@ class Scheduler:
         *pending* requests are shed — a request already holding a slot
         runs to completion (its tokens are already partially committed).
         Returns the shed request indices; they are recorded in
-        ``shed_indices`` so ``completed + shed == submitted`` stays an
-        invariant.  Never called by the batch :meth:`run` path —
+        ``shed_indices`` so ``completed + shed + failed == submitted``
+        stays an invariant.  Never called by the batch :meth:`run` path —
         ``generate_requests`` serves every request.
         """
         cut = now + slack
@@ -297,6 +319,8 @@ class Scheduler:
         release: Optional[Callable[[dict, int, int], dict]] = None,
         preempt: Optional[Callable[[dict, int, int], dict]] = None,
         on_tokens: Optional[Callable[[int, np.ndarray], None]] = None,
+        on_fail: Optional[
+            Callable[[dict, Optional[int], int, BaseException], dict]] = None,
         clock: Callable[[], float] = time.perf_counter,
     ) -> tuple:
         """One admission wave + one batch step + harvest.
@@ -309,9 +333,25 @@ class Scheduler:
           new tokens, with the newly-committed ``np.int32`` slice
           (clipped to the request's budget).  Deltas concatenate
           bit-identically to the final ``RequestResult.tokens``.
+        * ``on_fail(state, slot, request_index, exc) -> state`` —
+          failure-containment hook, called after a request transitions
+          to the terminal ``failed`` state (``slot`` is None when it
+          never held one this occupancy).  The serving front-end idles
+          the engine row and finishes the stream handle here; ``release``
+          has already returned the request's blocks.
         * ``clock`` — timestamp source for queue/service accounting
           (injectable so load-replay benchmarks can run on a virtual
           clock).
+
+        **Failure containment**: an exception escaping the ``admit``
+        hook fails only the request being admitted; an exception
+        escaping ``step`` fails the occupied slots it is attributable to
+        (a :class:`~repro.serving.faults.RequestFault` names them and
+        may carry a coherent post-fault state to adopt — any other
+        exception conservatively fails every occupied slot, since the
+        batch step is all-or-nothing) and the tick returns with no
+        harvest.  Queued work and the scheduler itself survive either
+        way.
 
         Returns ``(state, harvested request indices)``; results land in
         ``self.results``.
@@ -320,7 +360,7 @@ class Scheduler:
             return self._tick_inner(
                 state, admit=admit, step=step, can_admit=can_admit,
                 release=release, preempt=preempt, on_tokens=on_tokens,
-                clock=clock)
+                on_fail=on_fail, clock=clock)
 
     def _tick_inner(
         self,
@@ -332,6 +372,8 @@ class Scheduler:
         release: Optional[Callable[[dict, int, int], dict]] = None,
         preempt: Optional[Callable[[dict, int, int], dict]] = None,
         on_tokens: Optional[Callable[[int, np.ndarray], None]] = None,
+        on_fail: Optional[
+            Callable[[dict, Optional[int], int, BaseException], dict]] = None,
         clock: Callable[[], float] = time.perf_counter,
     ) -> tuple:
         while self._pending:
@@ -392,9 +434,27 @@ class Scheduler:
             self._preempted.discard(i)
             self._tr.begin_async("running", rid, rid=rid, slot=free_slot,
                                  resumed=resumed)
-            with self._tr.span("admit", tid=self.trace_tid, rid=rid,
-                               slot=free_slot, resumed=resumed):
-                state = admit(state, free_slot, i)
+            try:
+                with self._tr.span("admit", tid=self.trace_tid, rid=rid,
+                                   slot=free_slot, resumed=resumed):
+                    state = admit(state, free_slot, i)
+            except Exception as exc:  # noqa: BLE001 — containment seam
+                # the failure is the admitted request's alone: release
+                # whatever partial pool state admission left behind
+                # (exactly-once release machinery makes this safe), fail
+                # the request, and keep admitting the rest of the wave
+                self.failed[i] = exc
+                self._resume_streamed.pop(i, None)
+                self._preempted_len.pop(i, None)
+                self._first_admit_t.pop(i, None)
+                self._tr.end_async("running", rid, failed=True)
+                self._tr.instant("failed", tid=self.trace_tid, rid=rid,
+                                 where="admit", error=type(exc).__name__)
+                if release is not None:
+                    state = release(state, free_slot, i)
+                if on_fail is not None:
+                    state = on_fail(state, free_slot, i, exc)
+                continue
             self._row_len[free_slot] = self._preempted_len.pop(
                 i, self.requests[i].prompt.size)
             ev = SlotEvent(request_index=i, slot=free_slot,
@@ -404,18 +464,53 @@ class Scheduler:
             self._record_admit(ev)
 
         if self._pending and all(ev is None for ev in self._slots):
-            # every slot idle yet the head was denied: it can never
-            # be admitted (e.g. demand larger than the whole pool)
-            raise RuntimeError(
-                f"request {self._pending[0][-1]} rejected by can_admit "
-                "with every slot idle — it can never be served")
+            # every slot idle yet the head was denied: it can never be
+            # admitted (e.g. demand larger than the whole pool).  Fail
+            # it — terminal, carrying the reason — instead of wedging
+            # the lane behind an unservable request; the wave resumes
+            # next tick.  (One per tick keeps the drain bound honest.)
+            i = heapq.heappop(self._pending)[-1]
+            state = self._fail_unqueued(
+                state, i,
+                RuntimeError(
+                    f"request {i} rejected by can_admit with every slot "
+                    "idle — it can never be served"),
+                on_fail=on_fail)
 
         occupied = [s for s in range(self.batch_slots)
                     if self._slots[s] is not None]
         t_step = clock()
-        with self._tr.span("decode", tid=self.trace_tid, step=self.steps,
-                           rows=len(occupied)):
-            state = step(state)
+        try:
+            with self._tr.span("decode", tid=self.trace_tid, step=self.steps,
+                               rows=len(occupied)):
+                state = step(state)
+        except RequestFault as rf:
+            # attributable step failure: adopt the coherent state the
+            # raiser carries (when it has one) and fail only the named
+            # slots; everyone else continues next tick
+            self.steps += 1
+            if rf.state is not None:
+                state = rf.state
+            cause = rf.cause if rf.cause is not None else rf
+            slots = rf.slots if rf.slots is not None else list(occupied)
+            for s in slots:
+                if self._slots[s] is not None:
+                    state = self.fail_running(state, s, cause,
+                                              release=release,
+                                              on_fail=on_fail)
+            return state, []
+        except Exception as exc:  # noqa: BLE001 — containment seam
+            # unattributable step failure: the batch step is
+            # all-or-nothing, so conservatively fail every occupied
+            # slot (their blocks release exactly-once; queued and
+            # preempted requests are untouched)
+            self.steps += 1
+            for s in occupied:
+                if self._slots[s] is not None:
+                    state = self.fail_running(state, s, exc,
+                                              release=release,
+                                              on_fail=on_fail)
+            return state, []
         step_s = clock() - t_step
         self.steps += 1
 
@@ -482,6 +577,81 @@ class Scheduler:
         return state, harvested
 
     # ------------------------------------------------------------------
+    # Failure containment (terminal `failed` state)
+    # ------------------------------------------------------------------
+    def _fail_unqueued(self, state, i: int, exc: BaseException, *,
+                       on_fail=None):
+        """Record request ``i`` (already removed from the pending heap)
+        as failed and fire the containment hook."""
+        rid = self._rid(i)
+        self.failed[i] = exc
+        phase = "preempted" if i in self._preempted else "queued"
+        self._preempted.discard(i)
+        self._preempted_len.pop(i, None)
+        self._resume_streamed.pop(i, None)
+        self._first_admit_t.pop(i, None)
+        self._tr.end_async(phase, rid, failed=True)
+        self._tr.instant("failed", tid=self.trace_tid, rid=rid,
+                         where="queue", error=type(exc).__name__)
+        if on_fail is not None:
+            state = on_fail(state, None, i, exc)
+        return state
+
+    def fail_pending(self, state, i: int, exc: BaseException, *,
+                     on_fail=None):
+        """Fail a still-queued (or preempted-and-requeued) request:
+        remove it from the pending heap and record the terminal
+        ``failed`` state.  The serving front-end drives client cancels
+        and queue timeouts through this.  Returns the (unchanged
+        engine) state, for symmetry with :meth:`fail_running`."""
+        keep = [k for k in self._pending if k[-1] != i]
+        if len(keep) == len(self._pending):
+            raise KeyError(f"request {i} is not pending")
+        heapq.heapify(keep)
+        self._pending = keep
+        return self._fail_unqueued(state, i, exc, on_fail=on_fail)
+
+    def fail_running(self, state, slot: int, exc: BaseException, *,
+                     release=None, on_fail=None):
+        """Fail the request occupying ``slot``: record the terminal
+        state, stream the audit event, release its blocks (``release``
+        hook — exactly-once safe) and idle the slot.  Used by the tick's
+        step containment and by the front-end's running-request
+        timeout/cancel paths."""
+        ev = self._slots[slot]
+        if ev is None:
+            raise KeyError(f"slot {slot} is idle")
+        i = ev.request_index
+        rid = self._rid(i)
+        self.failed[i] = exc
+        ev.harvest_step = self.steps
+        ev.failed = True
+        self._first_admit_t.pop(i, None)
+        self._tr.end_async("running", rid, failed=True)
+        self._tr.instant("failed", tid=self.trace_tid, rid=rid,
+                         where="slot", error=type(exc).__name__)
+        if self.on_event is not None:
+            self.on_event(ev)
+        if release is not None:
+            state = release(state, slot, i)
+        if on_fail is not None:
+            state = on_fail(state, slot, i, exc)
+        self._slots[slot] = None
+        return state
+
+    def pending_indices(self) -> List[int]:
+        """Request indices currently queued (including preempted ones
+        waiting to resume), in no particular order."""
+        return [k[-1] for k in self._pending]
+
+    def find_slot(self, i: int) -> Optional[int]:
+        """Slot currently held by request ``i`` (None if not running)."""
+        for s, ev in enumerate(self._slots):
+            if ev is not None and ev.request_index == i:
+                return s
+        return None
+
+    # ------------------------------------------------------------------
     def run(
         self,
         state: dict,
@@ -493,6 +663,8 @@ class Scheduler:
         release: Optional[Callable[[dict, int, int], dict]] = None,
         preempt: Optional[Callable[[dict, int, int], dict]] = None,
         on_tokens: Optional[Callable[[int, np.ndarray], None]] = None,
+        on_fail: Optional[
+            Callable[[dict, Optional[int], int, BaseException], dict]] = None,
     ) -> tuple:
         """Drive the loop until the queue drains.
 
@@ -542,10 +714,12 @@ class Scheduler:
         ``t0`` is the arrival timestamp the requests' ``queue_s`` is
         measured from (``time.perf_counter`` clock) — callers serving
         several scheduler loops sequentially pass the call-level start so
-        later loops report the full wait.  Raises ``RuntimeError`` if
-        ``can_admit`` permanently rejects the queue head while every
-        slot is idle (a request that can never be served).  Returns
-        ``(state, results)`` with ``results`` in request order.
+        later loops report the full wait.  A request ``can_admit``
+        permanently rejects while every slot is idle (one that can
+        never be served) transitions to the terminal ``failed`` state —
+        its entry in the returned results is ``None`` and ``failed``
+        carries the reason.  Returns ``(state, results)`` with
+        ``results`` in request order.
         """
         t0 = time.perf_counter() if t0 is None else t0
         self._arrival_t = [t0] * len(self.requests)
@@ -557,7 +731,8 @@ class Scheduler:
         while self.busy:
             state, _ = self.tick(
                 state, admit=admit, step=step, can_admit=can_admit,
-                release=release, preempt=preempt, on_tokens=on_tokens)
+                release=release, preempt=preempt, on_tokens=on_tokens,
+                on_fail=on_fail)
             if self.steps > max_steps:
                 stuck = [ev.request_index for ev in self._slots
                          if ev is not None]

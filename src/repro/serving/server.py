@@ -46,6 +46,22 @@ SLO-aware admission, in order of application:
    from the tree lane's (different PRNG consumption), which is why
    degrade is opt-in.
 
+4. **Failure containment** (``docs/robustness.md``): every request
+   ends in exactly one of ``done | shed | failed`` — a malformed
+   submit, an admission fault, a decode-step fault, a timeout
+   (``request_timeout_s``) or a client cancel fails *that request
+   only*, with the terminal ``failed`` status carrying the exception
+   (re-raised by ``handle.result()``) and the slot + KV blocks
+   reclaimed through the same exactly-once release machinery as
+   preemption.  ``completed + shed + failed == submitted`` is the
+   checked conservation law.  The verify path runs under a NaN/Inf
+   guardrail (retry, then a full-precision bf16 verification lane,
+   then fail — see ``_Lane._guard``) plus an acceptance-collapse
+   detector; the :class:`StreamingServer` thread runs under a
+   supervisor that restarts the loop with capped backoff instead of
+   dying silently.  ``repro.serving.faults`` injects deterministic
+   faults at every seam above.
+
 With ``SpecConfig(kv_layout="paged")`` each lane owns a block pool
 sized for its slot count's worst-case demand, a prefix-cache index
 (shared system prompts are stored once across requests,
@@ -61,12 +77,14 @@ construction.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import queue
 import threading
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -78,6 +96,16 @@ from repro.core.paged_cache import (
     request_demand_tokens,
 )
 from repro.core.spec_engine import init_state
+from repro.serving.faults import (
+    NULL_FAULTS,
+    InjectedFault,
+    LaneCrashed,
+    RequestCancelled,
+    RequestFault,
+    RequestTimeout,
+    VerifierNaNError,
+    poison_params,
+)
 from repro.serving.metrics import ServerMetrics
 from repro.serving.request import GenerationRequest, RequestResult
 from repro.serving.scheduler import Scheduler
@@ -100,12 +128,27 @@ class ServerConfig:
     degrade_drafter: str = "ngram"     # chain drafter for the degraded lane
     overload_factor: float = 2.0       # pending > factor*slots = overload
     max_events: Optional[int] = 1024   # scheduler audit-trail cap per lane
+    request_timeout_s: Optional[float] = None  # end-to-end per-request cap
+    #                                    (queued + running); None = no cap.
+    #                                    Contains slow/hung ticks: a stalled
+    #                                    lane fails its requests instead of
+    #                                    wedging callers forever
+    collapse_window: int = 0           # acceptance-collapse detector: steps
+    #                                    in the sliding window (0 disables)
+    collapse_threshold: float = 0.05   # mean accepted tokens/row-step below
+    #                                    which a full window trips a lane
+    #                                    repair (re-quantize the params)
 
     def __post_init__(self):
         if self.admission not in ("fifo", "edf"):
             raise ValueError(f"unknown admission {self.admission!r}")
         if self.batch_slots < 1:
             raise ValueError("batch_slots must be >= 1")
+        if self.request_timeout_s is not None \
+                and not self.request_timeout_s > 0.0:
+            raise ValueError("request_timeout_s must be positive (or None)")
+        if self.collapse_window < 0:
+            raise ValueError("collapse_window must be >= 0")
 
 
 _EOS = None                            # stream terminator sentinel
@@ -115,29 +158,45 @@ class StreamHandle:
     """Caller-side view of one in-flight request.
 
     * :meth:`tokens` — blocking iterator over newly-committed token
-      deltas (``np.int32`` arrays); ends when the request finishes or is
-      shed.  Safe to consume from a different thread than the server's.
+      deltas (``np.int32`` arrays); ends when the request reaches any
+      terminal state.  Safe to consume from a different thread than the
+      server's.
     * :attr:`chunks` — the deltas accumulated so far (non-blocking; the
       inline/virtual-clock driver reads this after :meth:`ServingLoop.
       drain`).  ``np.concatenate(chunks)`` is bit-identical to
       ``result().tokens`` — the streaming contract.
-    * :meth:`result` — blocks until completion; returns the
-      :class:`RequestResult`, or ``None`` if the request was shed.
-    * :attr:`status` — ``queued | running | done | shed``.
+    * :meth:`result` — blocks until a terminal state; returns the
+      :class:`RequestResult`, ``None`` if the request was shed, or
+      **re-raises** the terminal exception if the request ``failed``
+      (also carried on :attr:`error`).  The timeout path tells a
+      still-working loop apart from a dead one.
+    * :meth:`cancel` — thread-safe, idempotent, best-effort client
+      cancellation; resolves to ``failed`` with
+      :class:`~repro.serving.faults.RequestCancelled` unless the
+      request already reached a terminal state.
+    * :attr:`status` — ``queued | running | done | shed | failed``.
     """
 
     def __init__(self, rid: int, request: GenerationRequest,
-                 submit_t: float, deadline_t: Optional[float]):
+                 submit_t: float, deadline_t: Optional[float],
+                 loop: Optional["ServingLoop"] = None):
         self.rid = rid
         self.request = request
         self.submit_t = submit_t
         self.deadline_t = deadline_t
         self.status = "queued"
         self.degraded = False
+        self.error: Optional[BaseException] = None
         self.chunks: List[np.ndarray] = []
         self._q: "queue.SimpleQueue" = queue.SimpleQueue()
         self._done = threading.Event()
         self._result: Optional[RequestResult] = None
+        self._loop = loop
+        self._lane: Optional["_Lane"] = None   # routing target (loop thread)
+        self._idx: Optional[int] = None        # scheduler-local index
+        self._routed = False                   # metrics submit fired once
+        self._reject: Optional[BaseException] = None  # submit validation
+        self._cancelled = False
 
     def tokens(self):
         while True:
@@ -149,9 +208,27 @@ class StreamHandle:
     def result(self, timeout: Optional[float] = None
                ) -> Optional[RequestResult]:
         if not self._done.wait(timeout):
+            loop = self._loop
+            if loop is not None and loop.dead is not None:
+                raise TimeoutError(
+                    f"request {self.rid} will never finish: the serving "
+                    f"loop is dead ({type(loop.dead).__name__})"
+                ) from loop.dead
             raise TimeoutError(
                 f"request {self.rid} still {self.status} after {timeout}s")
+        if self.error is not None:
+            raise self.error
         return self._result
+
+    def cancel(self) -> None:
+        """Ask the loop to fail this request with ``RequestCancelled``
+        at its next poll (no-op once terminal).  A running request's
+        slot and KV blocks are reclaimed through the same exactly-once
+        release machinery as preemption."""
+        self._cancelled = True
+        loop = self._loop
+        if loop is not None:
+            loop._control.put(self)
 
     def collected(self) -> np.ndarray:
         """All streamed tokens so far, concatenated (non-blocking)."""
@@ -164,8 +241,10 @@ class StreamHandle:
         self.chunks.append(toks)
         self._q.put(toks)
 
-    def _finish(self, result: Optional[RequestResult], status: str) -> None:
+    def _finish(self, result: Optional[RequestResult], status: str,
+                error: Optional[BaseException] = None) -> None:
         self._result = result
+        self.error = error
         self.status = status
         self._q.put(_EOS)
         self._done.set()
@@ -181,9 +260,19 @@ class _Lane:
         self.loop = loop
         self.tid = tid                         # tracer track for this lane
         self.engine = engine
+        self.temperature = temperature
         self.params = engine._prepare_cached(loop._raw_params)
         self.step, self.drafter = engine._step_for_temperature(temperature)
         self.key = f"{self.drafter.name}:{engine.verifier.name}"
+        # guardrail state (docs/robustness.md): the raw (unprepared)
+        # params feed the bf16 fallback step and lane repairs; the
+        # fallback step itself compiles lazily on first trip
+        self.fallback_params = loop._raw_params
+        self.fallback_step = None
+        self._bf16_streak = 0
+        self._collapse_hist = (
+            collections.deque(maxlen=cfg.collapse_window)
+            if cfg.collapse_window else None)
         self.buf = (cfg.max_prompt_len + cfg.max_new_tokens
                     + self.drafter.gamma + 2)
         # one padded prompt length per lane => admission prefill compiles
@@ -195,6 +284,8 @@ class _Lane:
         def on_step_stats(accepted, step_s, n_tokens, _key=self.key):
             loop.metrics.on_decode_step(_key, accepted, step_s)
             engine.telemetry.on_decode_step(_key, accepted, step_s)
+            if self._collapse_hist is not None and accepted:
+                self._note_acceptance(sum(accepted) / len(accepted))
 
         self.sched = Scheduler(
             [], slots, policy=cfg.admission, max_events=cfg.max_events,
@@ -231,7 +322,8 @@ class _Lane:
                                           block_size=bs,
                                           gamma=self.drafter.gamma,
                                           tracer=loop.tracer,
-                                          trace_tid=tid)
+                                          trace_tid=tid,
+                                          faults=loop.faults)
         self.state = init_state(
             engine.model, slots, self.buf,
             jnp.zeros((slots, 2), jnp.uint32),
@@ -257,15 +349,134 @@ class _Lane:
             pmax=self.pmax, drafter=self.drafter)
 
     def step_fn(self, state: dict) -> dict:
+        loop = self.loop
+        faults = loop.faults
+        params = self.params
+        if faults.enabled:
+            if faults.fire("step", lane=self.tid):
+                raise InjectedFault(
+                    f"injected step failure (lane {self.tid})")
+            if faults.fire("quant_corrupt", lane=self.tid):
+                # sticky: the lane's *prepared* params are poisoned in
+                # place, as a real quantization corruption would be —
+                # every later step reproduces it until the guardrail
+                # repairs the lane (re-prepare from the raw tree)
+                self.params = params = poison_params(self.params)
+            if faults.fire("nan_verify", lane=self.tid):
+                # transient: poison only this step's local view
+                params = poison_params(self.params)
         if self.ctx is not None:
             state = self.ctx.prepare_step(state)
-        state = self.step(self.params, state)
+        pre = state                    # pure step: intact on any failure
+        state = self.step(params, state)
         # fires inside the scheduler's "decode" span: a virtual-clock
         # driver advances time here, so spans get real widths and the
         # per-step wall time equals the modeled step cost
-        if self.loop.step_hook is not None:
-            self.loop.step_hook()
-        return state
+        if loop.step_hook is not None:
+            loop.step_hook()
+        if faults.enabled:
+            d = faults.delay("stall")
+            if d > 0.0:
+                # slow/hung tick: request_timeout_s is the containment
+                loop._stall(d)
+        return self._guard(pre, state)
+
+    def _guard(self, pre: dict, state: dict) -> dict:
+        """Verify-path NaN/Inf guardrail (docs/robustness.md).
+
+        The fused step folds a per-row non-finite-logits flag into
+        ``stats["bad"]``.  When any *occupied* row trips, escalate
+        through a three-stage ladder, each stage re-running from the
+        intact pre-step state (the decode step is pure):
+
+        1. **same-precision retry** — a transient fault replays to the
+           exact fault-free output: per-request PRNG streams make the
+           retried step bit-identical to an untripped one;
+        2. **full-precision fallback** — the bf16 twin of this lane's
+           step on the *raw* params rescues persistent quantized-weight
+           corruption losslessly (the bf16 verifier IS the target
+           distribution).  Rescued rows merge back row-sparsely
+           (``merge_state_rows``) and their requests are recorded in
+           ``loop.affected``; three consecutive bf16-rescued steps
+           trigger a lane repair — re-prepare (re-quantize) the params
+           from the raw tree, restoring the fast path;
+        3. rows still non-finite under bf16 (e.g. KV blocks corrupted
+           by a faulty swap-in) are unrescuable: **fail exactly those
+           requests** via :class:`RequestFault`, carrying the merged
+           state so every other row's progress survives the tick.
+        """
+        bad = np.asarray(state["stats"]["bad"])
+        sched = self.sched
+        rows = [s for s in range(sched.batch_slots)
+                if bad[s] and sched._slots[s] is not None]
+        if not rows:
+            self._bf16_streak = 0
+            return state
+        loop = self.loop
+        loop.metrics.on_guardrail("verify_nan_trips")
+        with loop.tracer.span("guardrail", tid=self.tid, rows=len(rows)):
+            retry = self.step(self.params, pre)
+            rbad = np.asarray(retry["stats"]["bad"])
+            still = [s for s in rows if rbad[s]]
+            if len(still) < len(rows):
+                loop.metrics.on_guardrail("retry_rescued_rows",
+                                          len(rows) - len(still))
+            if not still:
+                self._bf16_streak = 0
+                return retry
+            if self.fallback_step is None:
+                self.fallback_step = self.engine.fallback_step_for(
+                    self.temperature)
+            fb = self.fallback_step(self.fallback_params, pre)
+            fbad = np.asarray(fb["stats"]["bad"])
+            saved = [s for s in still if not fbad[s]]
+            doomed = [s for s in still if fbad[s]]
+            out = retry
+            if saved:
+                from repro.serving.engine import merge_state_rows
+                out = merge_state_rows(retry, fb, saved)
+                loop.metrics.on_guardrail("bf16_rescued_rows", len(saved))
+                for s in saved:
+                    h = self.handles.get(sched._slots[s].request_index)
+                    if h is not None:
+                        loop.affected.add(h.rid)
+                self._bf16_streak += 1
+                if self._bf16_streak >= 3:
+                    # the quantized weights themselves are the prime
+                    # suspect: re-quantizing from the raw tree clears
+                    # real and injected corruption alike
+                    self.params = self.engine.prepare_params(
+                        self.fallback_params)
+                    self._bf16_streak = 0
+                    loop.metrics.on_guardrail("reprepares")
+            if doomed:
+                loop.metrics.on_guardrail("unrescued_rows", len(doomed))
+                raise RequestFault(
+                    f"verifier logits non-finite for slots {doomed} even "
+                    "through the full-precision fallback",
+                    slots=doomed, state=out,
+                    cause=VerifierNaNError(
+                        "non-finite verifier logits survived retry and "
+                        "bf16 fallback (suspect corrupted KV state)"))
+        return out
+
+    def _note_acceptance(self, mean_accept: float) -> None:
+        """Acceptance-collapse detector: quantized-weight damage that
+        does NOT produce NaNs still shows up as acceptance falling to
+        ~zero (every draft rejected — the Table-1 signal inverted).
+        When the whole sliding window sits below ``collapse_threshold``
+        on a quantized-verifier lane, trip a lane repair and reset."""
+        hist = self._collapse_hist
+        hist.append(mean_accept)
+        if len(hist) < hist.maxlen:
+            return
+        if sum(hist) / len(hist) >= self.loop.cfg.collapse_threshold:
+            return
+        self.loop.metrics.on_guardrail("collapse_trips")
+        hist.clear()
+        if self.engine.verifier.name != "bf16":
+            self.params = self.engine.prepare_params(self.fallback_params)
+            self.loop.metrics.on_guardrail("reprepares")
 
 
 class ServingLoop:
@@ -280,7 +491,8 @@ class ServingLoop:
     def __init__(self, engine, params, cfg: ServerConfig = ServerConfig(),
                  *, clock=time.perf_counter,
                  metrics: Optional[ServerMetrics] = None,
-                 tracer=None, step_hook=None):
+                 tracer=None, step_hook=None, faults=None,
+                 stall_hook=None):
         if engine.model.cfg.arch_type in ("ssm", "hybrid"):
             raise ValueError(
                 f"{engine.model.cfg.arch_type!r} caches are recurrent: "
@@ -296,8 +508,23 @@ class ServingLoop:
         # jitted decode step (virtual-clock drivers advance time there).
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.step_hook = step_hook
+        # fault-injection plan (NULL_FAULTS = zero-overhead off, the
+        # NULL_TRACER pattern) and the stall hook a virtual-clock driver
+        # installs so injected slow ticks advance modeled time instead
+        # of sleeping
+        self.faults = faults if faults is not None else NULL_FAULTS
+        self.stall_hook = stall_hook
+        # rids whose tokens were (partly) produced by the bf16 fallback
+        # lane: lossless w.r.t. the target distribution, but at T>0
+        # possibly divergent from the fault-free quantized stream — the
+        # chaos harness scopes its bit-identity assertion with this
+        self.affected: Set[int] = set()
+        # terminal error once the supervisor gives up; submit() fails
+        # fast and handle.result() timeouts explain themselves
+        self.dead: Optional[BaseException] = None
         self._raw_params = params
         self._ingress: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._control: "queue.SimpleQueue" = queue.SimpleQueue()
         self._lanes: Dict[Tuple[float, bool], _Lane] = {}
         self._rid = 0
         self._rid_lock = threading.Lock()
@@ -325,22 +552,38 @@ class ServingLoop:
         return sum(len(lane.sched._pending) for lane in self._lanes.values())
 
     def submit(self, request: GenerationRequest) -> StreamHandle:
-        """Thread-safe ingestion; returns the request's stream handle."""
-        if request.prompt.size > self.cfg.max_prompt_len:
-            raise ValueError(
-                f"prompt length {request.prompt.size} exceeds the server's "
-                f"max_prompt_len={self.cfg.max_prompt_len}")
-        if request.max_new_tokens > self.cfg.max_new_tokens:
-            raise ValueError(
-                f"max_new_tokens {request.max_new_tokens} exceeds the "
-                f"server's cap {self.cfg.max_new_tokens}")
+        """Thread-safe ingestion; returns the request's stream handle.
+
+        Never raises for a bad request: one violating the server caps
+        comes back as a handle that terminally **fails** at the next
+        poll (the ``ValueError`` rides on ``handle.error`` and
+        re-raises from ``result()``), so a single malformed request
+        cannot take down the submit path or the callers sharing it."""
         now = self.clock()
         with self._rid_lock:
             rid = self._rid
             self._rid += 1
         deadline_t = (None if request.deadline_s is None
                       else now + request.deadline_s)
-        handle = StreamHandle(rid, request, now, deadline_t)
+        handle = StreamHandle(rid, request, now, deadline_t, loop=self)
+        msg = request.violation(self.cfg.max_prompt_len,
+                                self.cfg.max_new_tokens)
+        if msg is not None:
+            handle._reject = ValueError(msg)
+        if self.dead is not None:
+            # no poll will ever run again: resolve here, still counted
+            # (the lock serializes concurrent submitters on metrics —
+            # the loop thread that normally owns them is gone)
+            err = LaneCrashed(
+                f"serving loop is dead: {type(self.dead).__name__}")
+            err.__cause__ = self.dead
+            handle._routed = True
+            with self._rid_lock:
+                self.metrics.on_submit(rid, now, deadline_t=deadline_t)
+                self.metrics.on_guardrail("rejected")
+                self.metrics.on_failed(rid, now)
+            handle._finish(None, "failed", error=err)
+            return handle
         self._ingress.put(handle)
         return handle
 
@@ -367,6 +610,21 @@ class ServingLoop:
                 self.metrics.add_kv_source(f"lane{tid}", lane.ctx.snapshot)
         return lane
 
+    def _reject_handle(self, handle: StreamHandle, exc: BaseException,
+                       first: bool) -> None:
+        """Resolve a handle as terminally failed before it ever reaches
+        a scheduler (malformed submit, lane overflow, pre-route cancel).
+        ``first`` guards the submitted count: a handle re-entering the
+        ingress queue after a crash recovery is not re-counted."""
+        if first:
+            self.metrics.on_submit(handle.rid, handle.submit_t,
+                                   deadline_t=handle.deadline_t)
+        self.metrics.on_guardrail(
+            "cancelled" if isinstance(exc, RequestCancelled)
+            else "rejected")
+        self.metrics.on_failed(handle.rid, self.clock())
+        handle._finish(None, "failed", error=exc)
+
     def _route_ingress(self) -> int:
         routed = 0
         while True:
@@ -374,29 +632,68 @@ class ServingLoop:
                 handle = self._ingress.get_nowait()
             except queue.Empty:
                 return routed
+            routed += 1
+            first = not handle._routed
+            handle._routed = True
+            if handle._reject is None \
+                    and self.faults.fire("submit", rid=handle.rid):
+                handle._reject = ValueError(
+                    f"injected malformed request {handle.rid}")
+            if handle._reject is not None:
+                self._reject_handle(handle, handle._reject, first)
+                continue
+            if handle._cancelled:
+                self._reject_handle(
+                    handle,
+                    RequestCancelled(
+                        f"request {handle.rid} cancelled before routing"),
+                    first)
+                continue
             degraded = (self._degraded_engine is not None
                         and self._overloaded())
             handle.degraded = degraded
             t = (self.engine.scfg.temperature
                  if handle.request.temperature is None
                  else float(handle.request.temperature))
-            lane = self._lane(t, degraded)
+            try:
+                lane = self._lane(t, degraded)
+            except RuntimeError as exc:
+                # _MAX_LANES overflow: the request asking for the novel
+                # temperature fails alone; existing lanes keep serving
+                self._reject_handle(handle, exc, first)
+                continue
             idx = lane.sched.submit(
                 handle.request, arrival_t=handle.submit_t,
                 deadline=handle.deadline_t, trace_id=handle.rid)
+            handle._lane = lane
+            handle._idx = idx
             lane.on_submit(idx, handle)
-            self.metrics.on_submit(handle.rid, handle.submit_t,
-                                   deadline_t=handle.deadline_t,
-                                   degraded=degraded)
-            routed += 1
+            if first:
+                self.metrics.on_submit(handle.rid, handle.submit_t,
+                                       deadline_t=handle.deadline_t,
+                                       degraded=degraded)
 
     def poll(self) -> bool:
-        """One serving iteration: route arrivals, shed late queued work,
-        advance every busy lane one decode step (streaming tokens as
-        they commit), harvest.  Returns True if any lane did work."""
+        """One serving iteration: route arrivals, apply cancels and
+        request timeouts, shed late queued work, advance every busy lane
+        one decode step (streaming tokens as they commit), harvest.
+        Returns True if any lane did work."""
+        if self.faults.fire("poll"):
+            raise InjectedFault("injected poll failure (supervisor seam)")
         self._route_ingress()
+        # client cancels land on a control queue (thread-safe); apply
+        # them before admission so a cancelled queued request never
+        # takes a slot
+        while True:
+            try:
+                h = self._control.get_nowait()
+            except queue.Empty:
+                break
+            self._cancel_now(h)
         worked = False
         now = self.clock()
+        if self.cfg.request_timeout_s is not None:
+            self._check_timeouts(now)
         for lane in self._lanes.values():
             if self.cfg.shed_late:
                 for i in lane.sched.shed_pending(
@@ -434,7 +731,8 @@ class ServingLoop:
             lane.state, harvested = lane.sched.tick(
                 lane.state, admit=admit, step=lane.step_fn,
                 can_admit=can_admit, release=release, preempt=preempt,
-                on_tokens=on_tokens, clock=self.clock)
+                on_tokens=on_tokens, on_fail=self._make_on_fail(lane),
+                clock=self.clock)
             self.total_steps += 1
             busy = sum(ev is not None for ev in lane.sched._slots)
             self.metrics.on_step(self.clock(), busy, lane.sched.batch_slots)
@@ -449,13 +747,179 @@ class ServingLoop:
         return worked
 
     def drain(self, max_polls: int = 10_000_000) -> None:
-        """Poll until every submitted request is finished or shed."""
+        """Poll until every submitted request reached a terminal state."""
         polls = 0
         while self.busy:
             self.poll()
             polls += 1
             if polls > max_polls:
                 raise RuntimeError("ServingLoop.drain: poll budget exhausted")
+
+    # -- failure containment (docs/robustness.md) ----------------------
+    def _stall(self, seconds: float) -> None:
+        """Model a slow/hung tick: virtual-clock drivers advance their
+        clock via ``stall_hook``; a real server genuinely sleeps."""
+        if self.stall_hook is not None:
+            self.stall_hook(seconds)
+        else:
+            time.sleep(seconds)
+
+    def _make_on_fail(self, lane: _Lane):
+        """Scheduler ``on_fail`` hook for ``lane``: by the time it
+        fires, the scheduler has recorded the terminal state and run
+        ``release`` (blocks returned exactly once) — this closure idles
+        the engine row, drops paged bookkeeping, and resolves the
+        caller-facing handle."""
+        def on_fail(st, slot, i, exc, _lane=lane):
+            h = _lane.handles.pop(i, None)
+            if slot is not None:
+                # a dead request must stop decoding: zero the row's
+                # length/target (the next admit re-prefills both)
+                st = dict(st)
+                st["length"] = st["length"].at[slot].set(0)
+                st["target"] = st["target"].at[slot].set(0)
+            if _lane.ctx is not None:
+                _lane.ctx.drop(i)
+            if h is not None:
+                if isinstance(exc, RequestCancelled):
+                    self.metrics.on_guardrail("cancelled")
+                elif isinstance(exc, RequestTimeout):
+                    self.metrics.on_guardrail("timeouts")
+                else:
+                    self.metrics.on_guardrail("request_faults")
+                self.metrics.on_failed(h.rid, self.clock())
+                h._finish(None, "failed", error=exc)
+            return st
+        return on_fail
+
+    def _cancel_now(self, h: StreamHandle) -> None:
+        """Apply a queued cancel request (loop thread only)."""
+        if h.status in ("done", "shed", "failed"):
+            return
+        lane = h._lane
+        if lane is None:
+            # still in the ingress queue: the _cancelled flag makes
+            # routing fail it on arrival
+            return
+        i = h._idx
+        exc = RequestCancelled(f"request {h.rid} cancelled by client")
+        onf = self._make_on_fail(lane)
+        slot = lane.sched.find_slot(i)
+        if slot is not None:
+            release = lane.ctx.release if lane.ctx is not None else None
+            lane.state = lane.sched.fail_running(
+                lane.state, slot, exc, release=release, on_fail=onf)
+        elif i in lane.sched.pending_indices():
+            lane.state = lane.sched.fail_pending(
+                lane.state, i, exc, on_fail=onf)
+
+    def _check_timeouts(self, now: float) -> None:
+        """Fail every request older end-to-end than
+        ``request_timeout_s`` — queued or running.  This is what turns
+        a slow/hung lane (injected stalls, a wedged device) into
+        per-request failures instead of callers blocked forever."""
+        cut = self.cfg.request_timeout_s
+        for lane in self._lanes.values():
+            onf = self._make_on_fail(lane)
+            for i in lane.sched.pending_indices():
+                h = lane.handles.get(i)
+                if h is not None and now - h.submit_t > cut:
+                    lane.state = lane.sched.fail_pending(
+                        lane.state, i,
+                        RequestTimeout(
+                            f"request {h.rid} exceeded "
+                            f"request_timeout_s={cut} while queued"),
+                        on_fail=onf)
+            release = lane.ctx.release if lane.ctx is not None else None
+            for s in range(lane.sched.batch_slots):
+                ev = lane.sched._slots[s]
+                if ev is None:
+                    continue
+                h = lane.handles.get(ev.request_index)
+                if h is not None and now - h.submit_t > cut:
+                    lane.state = lane.sched.fail_running(
+                        lane.state, s,
+                        RequestTimeout(
+                            f"request {h.rid} exceeded "
+                            f"request_timeout_s={cut} while running"),
+                        release=release, on_fail=onf)
+
+    def recover(self, exc: BaseException) -> None:
+        """Containment after an exception escaped :meth:`poll` (the
+        supervisor path): running requests fail (their lane state can no
+        longer be trusted), queued handles re-enter the ingress queue,
+        and all lanes are torn down — the next poll rebuilds them
+        (compiled steps are cached on the engine, so a rebuild does not
+        retrace).  Conservation holds: requeued work is not re-counted
+        as submitted."""
+        requeue: List[StreamHandle] = []
+        for lane in self._lanes.values():
+            for i, h in list(lane.handles.items()):
+                if h.status == "running":
+                    err = LaneCrashed(
+                        f"serving lane crashed under request {h.rid}: "
+                        f"{type(exc).__name__}")
+                    err.__cause__ = exc
+                    self.metrics.on_guardrail("request_faults")
+                    self.metrics.on_failed(h.rid, self.clock())
+                    h._finish(None, "failed", error=err)
+                else:
+                    # still queued: nothing of it lives on-device yet
+                    requeue.append(h)
+            lane.handles.clear()
+        self._lanes.clear()
+        for h in requeue:
+            h._lane = h._idx = None
+            self._ingress.put(h)
+
+    def abort(self, exc: BaseException) -> None:
+        """Terminal failure: mark the loop dead and fail everything in
+        flight.  Nothing hangs; conservation still holds."""
+        self.dead = exc
+        while True:
+            try:
+                h = self._ingress.get_nowait()
+            except queue.Empty:
+                break
+            if not h._routed:
+                h._routed = True
+                self.metrics.on_submit(h.rid, h.submit_t,
+                                       deadline_t=h.deadline_t)
+            self.metrics.on_guardrail("request_faults")
+            self.metrics.on_failed(h.rid, self.clock())
+            h._finish(None, "failed", error=exc)
+        for lane in self._lanes.values():
+            for i, h in list(lane.handles.items()):
+                self.metrics.on_guardrail("request_faults")
+                self.metrics.on_failed(h.rid, self.clock())
+                h._finish(None, "failed", error=exc)
+            lane.handles.clear()
+        self._lanes.clear()
+
+    def shutdown(self) -> None:
+        """Deterministic non-drain teardown: everything already
+        submitted resolves now — queued work is shed
+        (``shed_pending(inf)`` takes every pending request: no-deadline
+        requests carry an ``inf`` deadline), running work fails with
+        ``RequestCancelled``.  The loop ends idle with conservation
+        intact; it is NOT dead (submit keeps working)."""
+        self._route_ingress()
+        now = self.clock()
+        for lane in self._lanes.values():
+            onf = self._make_on_fail(lane)
+            for i in lane.sched.shed_pending(math.inf):
+                h = lane.handles.pop(i)
+                if lane.ctx is not None:
+                    lane.ctx.drop(i)
+                self.metrics.on_shed(h.rid, now)
+                h._finish(None, "shed")
+            release = lane.ctx.release if lane.ctx is not None else None
+            for s in range(lane.sched.batch_slots):
+                if lane.sched._slots[s] is not None:
+                    lane.state = lane.sched.fail_running(
+                        lane.state, s,
+                        RequestCancelled("server shutdown"),
+                        release=release, on_fail=onf)
 
 
 class StreamingServer:
@@ -474,10 +938,13 @@ class StreamingServer:
 
     def __init__(self, engine, params, cfg: ServerConfig = ServerConfig(),
                  *, poll_idle_s: float = 0.002, tracer=None,
-                 metrics: Optional[ServerMetrics] = None):
+                 metrics: Optional[ServerMetrics] = None, faults=None,
+                 restart_backoff_s: float = 0.05, max_restarts: int = 3):
         self.loop = ServingLoop(engine, params, cfg, tracer=tracer,
-                                metrics=metrics)
+                                metrics=metrics, faults=faults)
         self.poll_idle_s = poll_idle_s
+        self.restart_backoff_s = restart_backoff_s
+        self.max_restarts = max_restarts       # consecutive, then abort
         self._stop = threading.Event()
         self._wake = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -504,19 +971,56 @@ class StreamingServer:
         return handle
 
     def _run(self) -> None:
+        """Serving-thread body: poll under a supervisor.
+
+        An exception escaping ``poll()`` used to kill this thread
+        silently — in-flight requests hung forever while the server
+        looked healthy.  Now each crash is contained
+        (``ServingLoop.recover``: running requests fail loudly, queued
+        work requeues, lanes rebuild) and the loop restarts with capped
+        exponential backoff; ``max_restarts`` *consecutive* crashes
+        abort the loop — every in-flight request fails with the
+        terminal error, which also re-raises from :meth:`stop`."""
+        crashes = 0
+        backoff = self.restart_backoff_s
         while not self._stop.is_set():
-            if not self.loop.poll():
+            try:
+                worked = self.loop.poll()
+            except Exception as exc:  # noqa: BLE001 — supervisor seam
+                crashes += 1
+                self.metrics.on_guardrail("lane_restarts")
+                if crashes > self.max_restarts:
+                    err = LaneCrashed(
+                        f"serving loop crashed {crashes} consecutive "
+                        f"times; giving up: {type(exc).__name__}: {exc}")
+                    err.__cause__ = exc
+                    self.loop.abort(err)
+                    return
+                self.loop.recover(exc)
+                self._stop.wait(backoff)
+                backoff = min(backoff * 2.0, 5.0)
+                continue
+            crashes = 0
+            backoff = self.restart_backoff_s
+            if not worked:
                 # idle: sleep until a submit wakes us (bounded, so
                 # deadline shedding still fires for queued work)
                 self._wake.wait(self.poll_idle_s)
                 self._wake.clear()
 
     def stop(self, *, drain: bool = True, timeout: float = 600.0) -> None:
+        """Stop the serving thread (draining first by default).
+
+        If the supervisor gave up (``loop.dead``), the terminal error
+        re-raises here — a crashed server is loud at shutdown, never
+        silent."""
         if self._thread is None:
+            if self.loop.dead is not None:
+                raise self.loop.dead
             return
         if drain:
             t0 = time.monotonic()
-            while self.loop.busy:
+            while self.loop.busy and self.loop.dead is None:
                 if time.monotonic() - t0 > timeout:
                     raise RuntimeError("StreamingServer.stop: drain timeout")
                 time.sleep(self.poll_idle_s)
@@ -524,9 +1028,17 @@ class StreamingServer:
         self._wake.set()
         self._thread.join(timeout=timeout)
         self._thread = None
+        if self.loop.dead is not None:
+            raise self.loop.dead
 
     def __enter__(self) -> "StreamingServer":
         return self.start()
 
     def __exit__(self, exc_type, exc, tb) -> None:
-        self.stop(drain=exc_type is None)
+        try:
+            self.stop(drain=exc_type is None)
+        except BaseException:
+            if exc_type is None:
+                raise
+            # an exception is already in flight from the with-body:
+            # don't mask it with the teardown's

@@ -133,8 +133,12 @@ class _Span:
         if self._recorded:
             # E must pair with its B: only emit if the B made it in
             # (the max_events cap can drop the B but never orphan an E)
-            self._tr._emit({"ph": "E", "name": self._name,
-                            "tid": self._tid}, force=True)
+            ev = {"ph": "E", "name": self._name, "tid": self._tid}
+            if exc and exc[0] is not None:
+                # span ended by an exception — tag the closing event so
+                # fault-containment paths are visible in the trace
+                ev["args"] = {"error": exc[0].__name__}
+            self._tr._emit(ev, force=True)
         return False
 
 

@@ -49,6 +49,7 @@ from repro.core.paged_cache import (
 from repro.core.spec_engine import init_state
 from repro.models import Model
 from repro.serving import GenerationRequest, SpecEngine
+from repro.serving.faults import FaultPlan, InjectedFault
 from repro.serving.scheduler import Scheduler
 
 
@@ -328,6 +329,84 @@ def test_serving_loop_paged_lane_preempts_and_stays_exact(model, params):
         np.testing.assert_array_equal(h.collected(), got.tokens)
 
 
+def _faulted_paged_loop(model, params, *, spec, batch_slots):
+    from repro.serving.server import ServerConfig, ServingLoop
+    scp = dataclasses.replace(BASE_SCFG, kv_layout="paged",
+                              kv_block_size=BS, kv_pool_blocks=12)
+    eng = SpecEngine(model, scp, drafter="ngram", verifier="bf16")
+    clock = [0.0]
+    loop = ServingLoop(eng, params,
+                       ServerConfig(batch_slots=batch_slots,
+                                    max_prompt_len=24, max_new_tokens=16),
+                       clock=lambda: clock[0],
+                       faults=FaultPlan.parse(spec, seed=0))
+    return eng, loop, clock
+
+
+def _drain_loop(loop, clock):
+    polls = 0
+    while loop.busy:
+        loop.poll()
+        clock[0] += 0.25
+        polls += 1
+        assert polls < 500, "loop failed to drain (deadlock?)"
+
+
+def test_alloc_failure_mid_admission_is_contained(model, params):
+    """Injected ``BlockPool.alloc`` failure during the *first* admission
+    fails that request alone: the second request's tokens are
+    bit-identical to a fault-free run, the pool conserves exactly (no
+    leaked blocks from the aborted admission), and the failure is
+    visible in the robustness counters."""
+    rng = np.random.default_rng(5)
+    reqs = [GenerationRequest(rng.integers(0, model.cfg.vocab_size, 9),
+                              max_new_tokens=8, seed=s) for s in (1, 2)]
+    eng, loop, clock = _faulted_paged_loop(model, params, spec="alloc@0",
+                                           batch_slots=2)
+    handles = [loop.submit(r) for r in reqs]
+    _drain_loop(loop, clock)
+    assert handles[0].status == "failed"
+    with pytest.raises(InjectedFault, match="alloc failure"):
+        handles[0].result(timeout=0.0)
+    ref = _reference(model, params, reqs, drafter="ngram",
+                     verifier="bf16", temp=0.0)
+    np.testing.assert_array_equal(handles[1].result(timeout=0.0).tokens,
+                                  ref[1].tokens)
+    lane = next(iter(loop._lanes.values()))
+    lane.ctx.pool.check_invariants()
+    assert lane.ctx.pool.unique_allocated == 0          # nothing leaked
+    loop.metrics.check_conservation()
+    assert loop.metrics.summary()["robustness"]["request_faults"] == 1
+
+
+def test_alloc_failure_mid_append_is_contained(model, params):
+    """Injected alloc failure during the decode-growth top-up
+    (``_append_paged_blocks``): the growing request fails mid-service
+    with its blocks returned (including the admission-time ones), and a
+    queued request then runs to a bit-identical completion in the same
+    lane."""
+    rng = np.random.default_rng(6)
+    reqs = [GenerationRequest(rng.integers(0, model.cfg.vocab_size, 9),
+                              max_new_tokens=16, seed=s) for s in (3, 4)]
+    # alloc calls: 0 = first admission, 1 = its first append top-up
+    eng, loop, clock = _faulted_paged_loop(model, params, spec="alloc@1",
+                                           batch_slots=1)
+    handles = [loop.submit(r) for r in reqs]
+    _drain_loop(loop, clock)
+    assert handles[0].status == "failed"
+    with pytest.raises(InjectedFault, match="alloc failure"):
+        handles[0].result(timeout=0.0)
+    ref = _reference(model, params, reqs, drafter="ngram",
+                     verifier="bf16", temp=0.0)
+    np.testing.assert_array_equal(handles[1].result(timeout=0.0).tokens,
+                                  ref[1].tokens)
+    lane = next(iter(loop._lanes.values()))
+    lane.ctx.pool.check_invariants()
+    assert lane.ctx.pool.unique_allocated == 0
+    loop.metrics.check_conservation()
+    assert loop.metrics.summary()["robustness"]["request_faults"] == 1
+
+
 # ---------------------------------------------------------------------------
 # Allocator property suite (hypothesis)
 # ---------------------------------------------------------------------------
@@ -370,7 +449,8 @@ def _admit(pool, index, rid, prompt):
     return True
 
 
-@given(ops=st.lists(st.tuples(st.integers(0, 3),   # admit/release/swap/resume
+@given(ops=st.lists(st.tuples(st.integers(0, 4),   # admit/release/swap/
+                              #                      resume/failing-admit
                               st.integers(0, 4),   # request id
                               st.integers(0, len(_PROMPTS) - 1)),
                     min_size=1, max_size=60),
@@ -383,7 +463,9 @@ def test_pool_sharing_invariants_property(ops, num_blocks):
     * ``free + cached + unique_allocated == capacity`` after every op;
     * no block is freed while another request still references it;
     * the scratch block is never shared, allocated or cached;
-    * a swapped request's release frees nothing (exactly-once).
+    * a swapped request's release frees nothing (exactly-once);
+    * an admission whose ``alloc`` raises (injected allocator failure)
+      leaks nothing after the exactly-once containment release.
     """
     index = PrefixIndex(_BSP)
     pool = BlockPool(num_blocks, _BSP, prefix=index)
@@ -416,6 +498,24 @@ def test_pool_sharing_invariants_property(ops, num_blocks):
                 pool.alloc(rid, n)
                 active[rid] = set(pool.owned(rid))
                 swapped.pop(rid)
+        elif kind == 4 and rid not in active and rid not in swapped:
+            # failing-alloc rule: the allocator raises mid-admission
+            # (after probe/share/fork may already hold blocks).  The
+            # containment path releases the partial reservation once;
+            # a second release must be a no-op (no double-free).
+            def _boom(n):
+                raise InjectedFault("injected alloc failure")
+            pool.fault_hook = _boom
+            try:
+                if _admit(pool, index, rid, _PROMPTS[pi]):
+                    # admission needed zero fresh draws (fully shared):
+                    # the hook never fired and the request is live
+                    active[rid] = set(pool.owned(rid))
+            except InjectedFault:
+                pool.release(rid)
+                assert pool.release(rid) == []     # exactly-once
+            finally:
+                pool.fault_hook = None
         pool.check_invariants()
         assert pool.free_blocks + pool.unique_allocated == pool.capacity
         for r in active:

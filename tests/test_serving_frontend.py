@@ -520,13 +520,29 @@ def test_serving_loop_degrade_tree_to_chain_T0(model, params):
 
 
 def test_serving_loop_rejects_oversized_request(model, params):
+    """An oversized request fails *alone* — terminal ``failed`` handle
+    carrying the ValueError (re-raised by result()) — instead of
+    raising into submit(); well-formed traffic sharing the loop is
+    untouched and conservation counts the reject."""
+    clock = [0.0]
     loop = ServingLoop(_loop_engine(model), params,
                        ServerConfig(batch_slots=1, max_prompt_len=8,
-                                    max_new_tokens=4))
+                                    max_new_tokens=4),
+                       clock=lambda: clock[0])
+    h_long = loop.submit(GenerationRequest(np.arange(12), 2))
+    h_budget = loop.submit(GenerationRequest(np.arange(4), 8))
+    h_ok = loop.submit(GenerationRequest(np.arange(4), 2))
+    _drive(loop, clock)
+    assert h_long.status == "failed" and h_budget.status == "failed"
     with pytest.raises(ValueError, match="max_prompt_len"):
-        loop.submit(GenerationRequest(np.arange(12), 2))
+        h_long.result(timeout=0.0)
     with pytest.raises(ValueError, match="max_new_tokens"):
-        loop.submit(GenerationRequest(np.arange(4), 8))
+        h_budget.result(timeout=0.0)
+    assert h_ok.result(timeout=0.0) is not None
+    loop.metrics.check_conservation()
+    c = loop.metrics.counters
+    assert (c["submitted"], c["completed"], c["failed"]) == (3, 1, 2)
+    assert loop.metrics.robustness["rejected"] == 2
 
 
 def test_serving_loop_accepts_paged_layout(model, params):
